@@ -1,0 +1,72 @@
+"""Paper Appendix D reproductions.
+
+D.1 statistical stability (CV of repeated runs), D.2 varying output
+lengths (2K/4K/8K; the SAC advantage is largest for short outputs where
+the RDMA "transmission tax" is least amortized), D.3 tail latency
+(p99 vs mean under concurrency), D.4 request-level throughput.
+"""
+import numpy as np
+
+from benchmarks.common import model_profile, run_cell
+from repro.serving.request import sharegpt_trace
+from repro.serving.simulator import SimConfig, default_backends, simulate
+
+
+def run(csv=None, quick=False):
+    n = 64 if quick else 256
+    ctx = 65536
+
+    # ---- D.1: coefficient of variation across seeds ----
+    print("\n== D.1: stability (CV over 3 seeds) ==")
+    model = model_profile()
+    b = default_backends()["cxl"]
+    thr = [simulate(sharegpt_trace(n, context_len=ctx, output_len=512,
+                                   seed=s), model, b,
+                    SimConfig(concurrency=64))["throughput_tok_s"]
+           for s in (1, 2, 3)]
+    cv = float(np.std(thr) / np.mean(thr) * 100)
+    print(f"throughput CV = {cv:.2f}%  (paper: <2.1%)")
+    if csv is not None:
+        csv.add("appendixD/cv_throughput_pct", cv, "paper<2.1")
+
+    # ---- D.2: output-length sweep ----
+    print("\n== D.2: output lengths 1K/2K/4K (SAC vs RDMA gap shrinks) ==")
+    gaps = []
+    outs = (1024, 2048) if quick else (1024, 2048, 4096)
+    for out_len in outs:
+        c = run_cell("cxl", ctx=ctx, n_requests=n, output_len=out_len)
+        r = run_cell("rdma", ctx=ctx, n_requests=n, output_len=out_len)
+        g = c["throughput_tok_s"] / r["throughput_tok_s"]
+        gaps.append(g)
+        print(f"out={out_len:>5}: cxl {c['throughput_tok_s']:.0f} "
+              f"rdma {r['throughput_tok_s']:.0f}  x{g:.2f}")
+        if csv is not None:
+            csv.add(f"appendixD/out{out_len}", 0.0, f"x{g:.2f}")
+    assert gaps == sorted(gaps, reverse=True) or quick, \
+        "gap should shrink as the transmission tax amortizes"
+    print("paper: advantage largest at short outputs (transmission tax)")
+
+    # ---- D.3: tail latency ----
+    print("\n== D.3: tail latency (mean vs p99) ==")
+    for name in ("cxl", "dram"):
+        res = run_cell(name, ctx=ctx, n_requests=n)
+        print(f"{name:>5}: tbt mean {res['tbt_mean_s']*1e3:.1f}ms "
+              f"p99 {res['tbt_p99_s']*1e3:.1f}ms | "
+              f"ttft mean {res['ttft_mean_s']:.2f}s "
+              f"p99 {res['ttft_p99_s']:.2f}s")
+        if csv is not None:
+            csv.add(f"appendixD/{name}_tbt_p99", res["tbt_p99_s"] * 1e6,
+                    f"mean={res['tbt_mean_s']*1e3:.1f}ms")
+
+    # ---- D.4: request-level throughput ----
+    print("\n== D.4: request throughput (req/s) ==")
+    for name in ("cxl", "rdma", "dram"):
+        res = run_cell(name, ctx=ctx, n_requests=n)
+        print(f"{name:>5}: {res['throughput_req_s']:.3f} req/s")
+        if csv is not None:
+            csv.add(f"appendixD/{name}_req_s", 0.0,
+                    f"{res['throughput_req_s']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

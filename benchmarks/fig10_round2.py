@@ -1,0 +1,47 @@
+"""Fig 10: Round-2 (cache hit) — the paper's headline numbers.
+
+Paper: SAC = 2.1x RDMA throughput, 9.7x lower TTFT, 1.8x lower TBT;
+within 91% of the local-DRAM upper bound.
+"""
+import numpy as np
+
+from benchmarks.common import CTXS, run_cell
+
+
+def run(csv=None, quick=False):
+    ctxs = CTXS[:2] if quick else CTXS
+    n = 64 if quick else 512
+    print("\n== Fig 10: Round-2 cache hit (concurrency 64) ==")
+    print(f"{'ctx':>6} {'cxl':>6} {'rdma':>6} {'dram':>6} | "
+          f"{'thr x':>6} {'ttft x':>7} {'tbt x':>6} {'cxl/dram':>9}")
+    ratios = []
+    for ctx in ctxs:
+        out = {b: run_cell(b, ctx=ctx, concurrency=64, n_requests=n)
+               for b in ("cxl", "rdma", "dram")}
+        c, r, d = out["cxl"], out["rdma"], out["dram"]
+        row = (c["throughput_tok_s"] / r["throughput_tok_s"],
+               r["ttft_mean_s"] / c["ttft_mean_s"],
+               r["tbt_mean_s"] / c["tbt_mean_s"],
+               c["throughput_tok_s"] / d["throughput_tok_s"])
+        ratios.append(row)
+        print(f"{ctx//1024:>5}K {c['throughput_tok_s']:>6.0f}"
+              f" {r['throughput_tok_s']:>6.0f} {d['throughput_tok_s']:>6.0f}"
+              f" | {row[0]:>6.2f} {row[1]:>7.1f} {row[2]:>6.2f}"
+              f" {row[3]:>9.2f}")
+        if csv is not None:
+            csv.add(f"fig10/cxl/ctx{ctx//1024}k", c["tbt_mean_s"] * 1e6,
+                    f"thr={c['throughput_tok_s']:.0f};ttft={c['ttft_mean_s']:.2f}s")
+            csv.add(f"fig10/rdma/ctx{ctx//1024}k", r["tbt_mean_s"] * 1e6,
+                    f"thr={r['throughput_tok_s']:.0f};ttft={r['ttft_mean_s']:.2f}s")
+    a = np.mean(ratios, axis=0)
+    print(f"AVG: thr x{a[0]:.2f} (paper 2.1) | ttft x{a[1]:.1f} (paper 9.7)"
+          f" | tbt x{a[2]:.2f} (paper 1.8) | cxl/dram {a[3]:.2f} (paper 0.91)")
+    if csv is not None:
+        csv.add("fig10/avg_throughput_ratio", 0.0,
+                f"x{a[0]:.2f}_vs_paper_2.1")
+        csv.add("fig10/avg_tbt_ratio", 0.0, f"x{a[2]:.2f}_vs_paper_1.8")
+    return a
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Fig 11: decoding throughput vs concurrency (SAC vs RDMA).
+
+Paper: up to 2.0x / 2.5x / 3.1x at 32K / 64K / 128K; RDMA plateaus on the
+transmission bottleneck while SAC keeps scaling.
+"""
+from benchmarks.common import run_cell
+
+
+def run(csv=None, quick=False):
+    concs = (16, 64) if quick else (8, 16, 32, 64, 128)
+    ctxs = (32768,) if quick else (32768, 65536, 131072)
+    n = 64 if quick else 384
+    print("\n== Fig 11: throughput scalability vs concurrency ==")
+    for ctx in ctxs:
+        best = 0.0
+        line = [f"ctx={ctx//1024}K"]
+        for conc in concs:
+            c = run_cell("cxl", ctx=ctx, concurrency=conc, n_requests=n)
+            r = run_cell("rdma", ctx=ctx, concurrency=conc, n_requests=n)
+            ratio = c["throughput_tok_s"] / max(r["throughput_tok_s"], 1e-9)
+            best = max(best, ratio)
+            line.append(f"c{conc}: {c['throughput_tok_s']:.0f}/"
+                        f"{r['throughput_tok_s']:.0f} (x{ratio:.2f})")
+            if csv is not None:
+                csv.add(f"fig11/ctx{ctx//1024}k/conc{conc}", 0.0,
+                        f"cxl={c['throughput_tok_s']:.0f};"
+                        f"rdma={r['throughput_tok_s']:.0f};x{ratio:.2f}")
+        print("  ".join(line))
+        print(f"  up to x{best:.2f} (paper: 2.0/2.5/3.1 at 32/64/128K)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Fig 12: SAC vs non-disaggregated baselines (local DRAM, GPU HBM only).
+
+Paper: HBM wins at low concurrency but hits its capacity wall; SAC keeps
+scaling (the case for a lower tier); SAC ~= DRAM throughout.
+"""
+from benchmarks.common import run_cell
+
+
+def run(csv=None, quick=False):
+    concs = (16, 128) if quick else (8, 16, 32, 64, 128, 256)
+    ctx = 131072
+    n = 64 if quick else 256
+    print("\n== Fig 12: non-disaggregated baselines (ctx 128K) ==")
+    print(f"{'conc':>5} {'cxl':>7} {'dram':>7} {'hbm':>7}")
+    for conc in concs:
+        row = {b: run_cell(b, ctx=ctx, concurrency=conc, n_requests=n)
+               for b in ("cxl", "dram", "hbm")}
+        print(f"{conc:>5} {row['cxl']['throughput_tok_s']:>7.0f}"
+              f" {row['dram']['throughput_tok_s']:>7.0f}"
+              f" {row['hbm']['throughput_tok_s']:>7.0f}")
+        if csv is not None:
+            csv.add(f"fig12/conc{conc}", 0.0,
+                    ";".join(f"{b}={row[b]['throughput_tok_s']:.0f}"
+                             for b in row))
+    print("paper: HBM plateaus at its KV capacity; SAC tracks DRAM")
+
+
+if __name__ == "__main__":
+    run()

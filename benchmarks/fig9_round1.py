@@ -1,0 +1,33 @@
+"""Fig 9: Round-1 (cache populate) — prefill + pool write + cold decode.
+
+Paper: CXL ~= RDMA ~= DRAM (prefill is compute-bound; both disaggregated
+backends store KV comparably).
+"""
+from benchmarks.common import CTXS, run_cell
+
+
+def run(csv=None, quick=False):
+    ctxs = CTXS[:2] if quick else CTXS
+    n = 64 if quick else 512
+    print("\n== Fig 9: Round-1 cache populate (concurrency 8) ==")
+    print(f"{'ctx':>6} {'cxl tok/s':>10} {'rdma tok/s':>11} {'dram tok/s':>11}"
+          f" {'ttft_cxl_s':>11} {'ttft_rdma_s':>12}")
+    for ctx in ctxs:
+        out = {b: run_cell(b, ctx=ctx, concurrency=8, n_requests=n,
+                           round1=True) for b in ("cxl", "rdma", "dram")}
+        c, r, d = out["cxl"], out["rdma"], out["dram"]
+        print(f"{ctx//1024:>5}K {c['throughput_tok_s']:>10.0f}"
+              f" {r['throughput_tok_s']:>11.0f} {d['throughput_tok_s']:>11.0f}"
+              f" {c['ttft_mean_s']:>11.2f} {r['ttft_mean_s']:>12.2f}")
+        if csv is not None:
+            csv.add(f"fig9/cxl/ctx{ctx//1024}k",
+                    c["tbt_mean_s"] * 1e6,
+                    f"thr={c['throughput_tok_s']:.0f}tok/s")
+            csv.add(f"fig9/rdma/ctx{ctx//1024}k",
+                    r["tbt_mean_s"] * 1e6,
+                    f"thr={r['throughput_tok_s']:.0f}tok/s")
+    print("paper: backends comparable in Round-1 (prefill compute-bound)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Kernel microbenches: jnp reference path wall-time on CPU (the pallas
+kernels are TPU-target; interpret-mode timing is not meaningful, so we
+time the ref path and report the kernels' derived VMEM working sets)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.kernels import ops
+
+
+def run(csv=None, quick=False):
+    print("\n== kernel microbenches (jnp ref path on CPU) ==")
+    key = jax.random.PRNGKey(0)
+    B, S, k = (4, 4096, 256) if quick else (8, 32768, 2048)
+    d = 576
+    kv = jax.random.normal(key, (B, S, d), jnp.bfloat16)
+    idx = jax.random.randint(key, (B, k), 0, S)
+
+    gather = jax.jit(lambda kv, idx: ops.batched_gather(kv, idx))
+    us, _ = timed(lambda: jax.block_until_ready(gather(kv, idx)))
+    if csv is not None:
+        csv.add("kernels/gather_kv", us,
+                f"B{B}xS{S}xk{k}; vmem_block={d*2}B/row")
+    print(f"gather_kv        {us:10.1f} us   [B{B} S{S} k{k} d{d}]")
+
+    ni, di = 8, 128
+    q = jax.random.normal(key, (B, ni, di), jnp.bfloat16)
+    w = jax.random.normal(key, (B, ni), jnp.bfloat16)
+    keys = jax.random.normal(key, (B, S, di), jnp.bfloat16)
+    idxer = jax.jit(lambda q, w, k_: ops.batched_indexer_scores(q, w, k_))
+    us, _ = timed(lambda: jax.block_until_ready(idxer(q, w, keys)))
+    if csv is not None:
+        csv.add("kernels/indexer", us, f"B{B}xS{S}; block_s=512")
+    print(f"indexer_scores   {us:10.1f} us   [B{B} S{S} di{di}]")
+
+    H, dc, dr = 16, 512, 64
+    q_lat = jax.random.normal(key, (B, H, dc), jnp.bfloat16)
+    q_pe = jax.random.normal(key, (B, H, dr), jnp.bfloat16)
+    entries = jax.random.normal(key, (B, k, dc + dr), jnp.bfloat16)
+    valid = jnp.ones((B, k), bool)
+    mla = jax.jit(lambda a, b_, c, v: ops.batched_sparse_mla(
+        a, b_, c, v, dc=dc, scale=0.04))
+    us, _ = timed(lambda: jax.block_until_ready(
+        mla(q_lat, q_pe, entries, valid)))
+    if csv is not None:
+        csv.add("kernels/sparse_mla_attn", us, f"B{B}xk{k}; block_k=256")
+    print(f"sparse_mla_attn  {us:10.1f} us   [B{B} k{k} dc{dc}]")
+
+    pool = jnp.zeros((B, S, d), jnp.bfloat16)
+    ent = jax.random.normal(key, (B, 64, d), jnp.bfloat16)
+    sidx = jnp.tile(jnp.arange(64, dtype=jnp.int32)[None] * 3, (B, 1))
+    scat = jax.jit(lambda p, e, i: ops.batched_scatter(p, e, i))
+    us, _ = timed(lambda: jax.block_until_ready(scat(pool, ent, sidx)))
+    if csv is not None:
+        csv.add("kernels/scatter_kv", us, f"B{B}x64 rows")
+    print(f"scatter_kv       {us:10.1f} us   [B{B} 64 rows]")
+
+
+if __name__ == "__main__":
+    run()

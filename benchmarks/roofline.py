@@ -1,0 +1,92 @@
+"""§Roofline: aggregate results/dryrun/*.json into the per-cell table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+                                                 [--mesh single] [--md]
+"""
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+HW = "TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI"
+
+
+def load(dir_: str, mesh: str = "single", mode: str = None) -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        r = json.load(open(p))
+        if r.get("mesh") != mesh:
+            continue
+        if mode and r.get("mode") != mode:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}" if s is not None else "-"
+
+
+def table(rows: List[Dict], md: bool = False) -> str:
+    hdr = ["arch", "shape", "mode", "compute_ms", "memory_ms",
+           "collective_ms", "dominant", "useful", "peak_GB/dev"]
+    lines = []
+    sep = " | " if md else "  "
+    if md:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(sep.join(f"{h:>13}" for h in hdr))
+    for r in rows:
+        if r.get("status") == "skipped":
+            vals = [r["arch"], r["shape"], "-", "-", "-", "-",
+                    "SKIP", "-", "-"]
+        else:
+            peak = (r["mem_per_device"].get("temp_bytes") or 0) + \
+                (r["mem_per_device"].get("argument_bytes") or 0)
+            vals = [r["arch"], r["shape"], r["mode"],
+                    fmt_ms(r["compute_s"]), fmt_ms(r["memory_s"]),
+                    fmt_ms(r["collective_s"]), r["dominant"],
+                    (f"{r['useful_flops_ratio']:.3f}"
+                     if r.get("useful_flops_ratio") else "-"),
+                    f"{peak/1e9:.2f}"]
+        if md:
+            lines.append("| " + " | ".join(str(v) for v in vals) + " |")
+        else:
+            lines.append(sep.join(f"{str(v):>13}" for v in vals))
+    return "\n".join(lines)
+
+
+def run(csv=None, quick=False, dir_="results/dryrun"):
+    rows = load(dir_, "single")
+    if not rows:
+        print(f"\n== roofline: no dry-run results in {dir_} ==")
+        return
+    print(f"\n== §Roofline baseline table ({len(rows)} cells, single-pod, "
+          f"{HW}) ==")
+    print(table(rows))
+    if csv is not None:
+        for r in rows:
+            if r.get("status") == "skipped":
+                continue
+            dom_s = {"compute": r["compute_s"], "memory": r["memory_s"],
+                     "collective": r["collective_s"]}[r["dominant"]]
+            csv.add(f"roofline/{r['arch']}/{r['shape']}", dom_s * 1e6,
+                    f"dominant={r['dominant']};useful="
+                    f"{r.get('useful_flops_ratio') and round(r['useful_flops_ratio'], 3)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--mode", default=None)
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh, args.mode)
+    print(table(rows, md=args.md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Train a ~small sparse-attention LM (MLA + lightning indexer weights)
+for a few hundred steps on CPU — the end-to-end training driver.
+
+    PYTHONPATH=src python examples/train_sparse_lm.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models.model import build_model
+from repro.training.data import batch_iterator
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="deepseek-v32")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"training {cfg.name} (reduced): {n/1e6:.2f}M params, "
+          f"WSD schedule, {args.steps} steps")
+
+    opt = init_opt_state(params)
+    ocfg = OptConfig(lr=2e-3, schedule="wsd",
+                     warmup_steps=args.steps // 10, total_steps=args.steps)
+    step = jax.jit(make_train_step(model, ocfg, grad_accum=2),
+                   donate_argnums=(0, 1))
+    it = batch_iterator(cfg, ShapeConfig("ex", 64, 16, "train"))
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, m = step(params, opt, batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    print("done — loss should have dropped by >1 nat on the synthetic "
+          "zipf+copy stream")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Config system for the SAC framework.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``.
+``ShapeConfig`` describes the assigned input shapes (train_4k / prefill_32k /
+decode_32k / long_500k).  ``SACConfig`` carries the paper's technique knobs
+(lightning indexer dims, top-k, HiSparse device buffer, pool backend).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# SAC (the paper's technique) configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SACConfig:
+    """DeepSeek-Sparse-Attention + SAC disaggregated-cache knobs."""
+
+    enabled: bool = True
+    topk: int = 2048                 # DSA default top-k (paper §2.1)
+    d_idx: int = 64                  # lightning indexer head dim
+    n_idx_heads: int = 4             # lightning indexer heads
+    device_buffer_size: int = 6144   # HiSparse hot-buffer entries/request (paper §5.5)
+    page_size: int = 16              # tokens per pool page
+    pool_backend: str = "pooled_hbm"  # pooled_hbm | host_dram
+    interleave: bool = True          # CXL-device interleaving (paper §4.3.3)
+    overlap_fetch: bool = False      # beyond-paper: double-buffered fetch
+    kv_quant: Optional[str] = None   # beyond-paper: None | "int8" pool quantization
+
+
+# ---------------------------------------------------------------------------
+# Model architecture configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm | mla
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: Optional[int] = None   # default: d_model // n_heads
+    qkv_bias: bool = False           # qwen2
+    rope_theta: float = 1e6
+
+    # --- MoE ---
+    n_experts: int = 0
+    topk_experts: int = 0
+
+    # --- sliding window / local:global attention ---
+    sliding_window: int = 0          # 0 = full attention (mixtral: 4096)
+    local_global_ratio: int = 0      # gemma3: 5 local per 1 global
+    local_window: int = 1024         # window for "local" layers
+
+    # --- SSM / recurrent ---
+    ssm_state: int = 0               # zamba2 Mamba2 state size
+    shared_attn_every: int = 0       # zamba2: shared attention block period
+    xlstm: bool = False              # xlstm: sLSTM+mLSTM blocks, no attention
+
+    # --- encoder-decoder (whisper) ---
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+
+    # --- MLA (deepseek) ---
+    mla: bool = False
+    kv_lora_rank: int = 512          # latent KV dim
+    qk_rope_dim: int = 64
+    q_lora_rank: int = 1536
+
+    # --- early fusion VLM (chameleon) ---
+    vlm: bool = False
+
+    sac: SACConfig = dataclasses.field(default_factory=SACConfig)
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def has_attention(self) -> bool:
+        return not self.xlstm
+
+    @property
+    def kv_bytes_per_token_layer(self) -> int:
+        """bf16 KV bytes per token per attention layer."""
+        if self.mla:
+            return 2 * (self.kv_lora_rank + self.qk_rope_dim)
+        return 2 * 2 * self.n_kv_heads * self.hd
+
+    @property
+    def n_attn_layers(self) -> int:
+        if self.xlstm:
+            return 0
+        if self.shared_attn_every:
+            return self.n_layers // self.shared_attn_every
+        if self.enc_dec:
+            return self.n_layers  # decoder self+cross handled separately
+        return self.n_layers
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd, nh, nkv = self.hd, self.n_heads, self.n_kv_heads
+        emb = v * d
+        if self.xlstm:
+            per = 8 * d * d  # qkv/if gates + proj, rough
+            return emb + self.n_layers * per
+        attn = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+        if self.mla:
+            attn = (d * self.q_lora_rank + self.q_lora_rank * nh * (hd + self.qk_rope_dim)
+                    + d * (self.kv_lora_rank + self.qk_rope_dim)
+                    + self.kv_lora_rank * nh * (hd + hd) + nh * hd * d)
+        if self.n_experts:
+            mlp = self.n_experts * 3 * d * f
+        else:
+            mlp = 3 * d * f
+        per_layer = attn + mlp
+        if self.ssm_state:  # mamba2 layers are ~6 d^2
+            per_layer = 6 * d * d
+            n_shared = self.n_layers // max(self.shared_attn_every, 1) if self.shared_attn_every else 0
+            return emb + self.n_layers * per_layer + n_shared * (attn + 3 * d * f)
+        total_layers = self.n_layers + (self.n_enc_layers if self.enc_dec else 0)
+        return emb + total_layers * per_layer
+
+    def active_param_count(self) -> int:
+        if not self.n_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense = self.param_count() - self.n_experts * 3 * d * f * self.n_layers
+        return dense + self.topk_experts * 3 * d * f * self.n_layers
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests.
+
+        Layer counts respect each family's structural period: xlstm stacks
+        groups of 4 (3 mLSTM + 1 sLSTM); gemma-style local:global keeps one
+        super-block (reduced to 1 local + 1 global); zamba keeps two
+        supers + a tail layer to exercise every segment kind.
+        """
+        if self.xlstm:
+            n_layers = 4
+        elif self.local_global_ratio:
+            n_layers = 2                      # one (1 local + 1 global) super
+        elif self.shared_attn_every:
+            n_layers = 5                      # 2 supers of 2 + 1 tail
+        else:
+            n_layers = min(self.n_layers, 2)
+        return dataclasses.replace(
+            self,
+            n_layers=n_layers,
+            n_enc_layers=min(self.n_enc_layers, 2) if self.enc_dec else 0,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads > 1 else 1,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            n_experts=min(self.n_experts, 4),
+            topk_experts=min(self.topk_experts, 2),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            local_global_ratio=1 if self.local_global_ratio else 0,
+            kv_lora_rank=32, qk_rope_dim=16, q_lora_rank=48,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            local_window=32,
+            sac=dataclasses.replace(self.sac, topk=16, d_idx=8, n_idx_heads=2,
+                                    device_buffer_size=32, page_size=4),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+    grad_accum: int = 1              # microbatches inside train_step
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}

@@ -1,0 +1,9 @@
+"""SAC core: the paper's contribution as composable JAX modules.
+
+- pool:      disaggregated KV pool (shard_map fetch collective, write-back)
+- hisparse:  functional hierarchical device buffer (miss-id / LRU / PT)
+- topk:      lightning-indexer top-k (plain + hierarchical distributed)
+- sac:       per-layer decode assembly + host-level pool system
+- metadata:  seqlock page directory + pool allocator
+- transfer:  calibrated fabric cost models (CXL / RDMA / DRAM / ICI / HBM)
+"""

@@ -1,0 +1,158 @@
+"""Functional HiSparse hierarchical device buffer (paper Appendix C).
+
+The decode instance keeps a small hot tier of KV entries in device HBM
+(``device_buffer_size`` entries per request).  Every decode step the
+swap-in performs, per request, the three operations of the HiSparse CUDA
+kernel — all as pure JAX ops with static shapes so the whole thing is
+jit/vmap-able and property-testable:
+
+  1. **miss identification** — which of the step's top-k positions are not
+     resident in the buffer (page-table lookup);
+  2. **LRU eviction** — pick the least-recently-used resident slots that
+     are *not* part of the current top-k as eviction victims (empty slots
+     are filled first);
+  3. **page-table update + fetch** — unmap victims, map fetched pages in,
+     write the fetched data, bump recency clocks.
+
+All scatters use a padding "sink" row (index ``buf``/``S``) for inactive
+lanes so no two active lanes ever write the same slot — scatter-set order
+is therefore deterministic.
+
+The returned ``hits``/``misses`` counts drive the transfer cost model:
+only misses cross the fabric (paper §5.5 — a larger buffer lowers miss
+traffic, which is exactly what Fig 14 measures).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+_BIG = jnp.int32(1 << 30)
+
+
+class BufferState(NamedTuple):
+    """Per-request hot-tier state (all leading dims = [B, ...])."""
+    entries: jnp.ndarray      # [B, buf, d]   cached KV entries
+    slot_pos: jnp.ndarray     # [B, buf]      global position held by slot (-1 empty)
+    page_table: jnp.ndarray   # [B, S]        position -> slot (-1 not resident)
+    last_use: jnp.ndarray     # [B, buf]      LRU clocks
+    clock: jnp.ndarray        # [B]           step counter
+
+
+def init_buffer(batch: int, buf_size: int, seq_len: int, entry_dim: int,
+                dtype=jnp.bfloat16) -> BufferState:
+    return BufferState(
+        entries=jnp.zeros((batch, buf_size, entry_dim), dtype),
+        slot_pos=jnp.full((batch, buf_size), EMPTY),
+        page_table=jnp.full((batch, seq_len), EMPTY),
+        last_use=jnp.zeros((batch, buf_size), jnp.int32),
+        clock=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def lookup(state: BufferState, idx: jnp.ndarray
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Which of idx [B, k] are resident?  -> (slots [B,k], hit [B,k])."""
+    slots = jnp.take_along_axis(state.page_table, idx, axis=1)
+    return slots, slots >= 0
+
+
+def _swap_in_one(entries, slot_pos, page_table, last_use, clock,
+                 idx, fetched, valid):
+    """Single-request swap-in (vmapped over B).
+
+    idx: [k] positions requested this step (always in [0, S));
+    fetched: [k, d] pool values for all of them (hits keep their buffered
+    copy — static shapes); valid: [k] mask of real lanes.
+
+    Note: if ``k > buf`` overflow misses stay unbuffered; accounting of
+    hits is exact because reads happen before the swap-in.
+    """
+    buf = slot_pos.shape[0]
+    k = idx.shape[0]
+    S = page_table.shape[0]
+    order = jnp.arange(k, dtype=jnp.int32)
+
+    slots = page_table[idx]                                # [k]
+    hit = (slots >= 0) & valid
+    miss = (~hit) & valid
+    # dedupe repeated positions within idx: only the first VALID
+    # occurrence fills (invalid lanes must not shadow valid duplicates)
+    idx_dedup = jnp.where(valid, idx, S)
+    first_occ = jnp.full((S + 1,), k, jnp.int32).at[idx_dedup].min(order)
+    miss = miss & (first_occ[idx_dedup] == order)
+
+    # eviction order: empty slots first, then LRU, protected (current hits)
+    # last.
+    prot = jnp.zeros((buf,), bool).at[jnp.where(hit, slots, buf - 1)].max(hit)
+    empty = slot_pos < 0
+    key = jnp.where(empty, jnp.arange(buf, dtype=jnp.int32) - _BIG,
+                    jnp.where(prot, _BIG, last_use))
+    victim_order = jnp.argsort(key).astype(jnp.int32)      # [buf]
+
+    miss_rank = jnp.cumsum(miss.astype(jnp.int32)) - 1     # [k]
+    fillable = miss & (miss_rank < buf)
+    assign = jnp.where(fillable,
+                       victim_order[jnp.clip(miss_rank, 0, buf - 1)],
+                       buf)                                # buf = sink row
+
+    # --- padded updates: row S / row buf are write sinks ---
+    pt = jnp.concatenate([page_table, jnp.full((1,), EMPTY)])
+    sp = jnp.concatenate([slot_pos, jnp.full((1,), EMPTY)])
+    old_pos = sp[assign]                                   # evicted position
+    pt = pt.at[jnp.where(old_pos >= 0, old_pos, S)].set(EMPTY)
+    pt = pt.at[jnp.where(fillable, idx, S)].set(assign)
+    page_table = pt[:S]
+
+    sp = sp.at[assign].set(jnp.where(fillable, idx, EMPTY))
+    slot_pos = sp[:buf]
+
+    ent = jnp.concatenate(
+        [entries, jnp.zeros((1, entries.shape[-1]), entries.dtype)])
+    ent = ent.at[assign].set(fetched.astype(entries.dtype))
+    entries = ent[:buf]
+
+    touched = jnp.where(hit, slots, assign)                # in [0, buf]
+    lu = jnp.concatenate([last_use, jnp.zeros((1,), jnp.int32)])
+    last_use = lu.at[touched].set(clock)[:buf]
+
+    return (entries, slot_pos, page_table, last_use,
+            hit.astype(jnp.int32).sum(), miss.astype(jnp.int32).sum())
+
+
+def swap_in(state: BufferState, idx: jnp.ndarray, fetched: jnp.ndarray,
+            valid: jnp.ndarray) -> Tuple[BufferState, jnp.ndarray, jnp.ndarray]:
+    """Batched swap-in.  idx: [B,k]; fetched: [B,k,d]; valid: [B,k].
+
+    Returns (state', hits [B], misses [B]).
+    """
+    clock = state.clock + 1
+    entries, slot_pos, page_table, last_use, hits, misses = jax.vmap(
+        _swap_in_one)(state.entries, state.slot_pos, state.page_table,
+                      state.last_use, clock, idx, fetched, valid)
+    return (BufferState(entries, slot_pos, page_table, last_use, clock),
+            hits, misses)
+
+
+def read_through(state: BufferState, idx: jnp.ndarray, fetched: jnp.ndarray,
+                 valid: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, BufferState, jnp.ndarray, jnp.ndarray]:
+    """Serve idx from the buffer where resident, else from ``fetched``
+    (pool values), updating the buffer.  Returns (values [B,k,d], state',
+    hits [B], misses [B]).
+
+    Values are bit-identical with or without the buffer — the hot tier
+    changes *traffic*, never results (the pool is authoritative; entries
+    are immutable once written).
+    """
+    slots, hit = lookup(state, idx)
+    buffered = jnp.take_along_axis(
+        state.entries,
+        jnp.clip(slots, 0, state.entries.shape[1] - 1)[..., None], axis=1)
+    vals = jnp.where((hit & valid)[..., None], buffered.astype(fetched.dtype),
+                     fetched)
+    new_state, hits, misses = swap_in(state, idx, fetched, valid)
+    return vals, new_state, hits, misses

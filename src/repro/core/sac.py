@@ -1,0 +1,200 @@
+"""SAC facade — the paper's contribution as a composable JAX module.
+
+Two halves:
+
+1. **In-graph** (`sparse_attend`, `dense_attend`): the per-layer decode
+   attention assembly used inside compiled ``serve_step``s —
+   indexer scoring → masked top-k → pool fetch (injected callback: local
+   gather or the pooled-HBM shard_map collective) → sparse attention
+   (absorbed-MLA or GQA).  This is the paper's Figure 6 decode path.
+
+2. **Host-level** (`SACSystem`): pool bookkeeping for the serving engine
+   and simulator — page allocation across pool devices, round-robin
+   interleaving (paper §4.3.3), metadata publishing (paper §4.3.1), and
+   fabric-cost accounting for every fetch/write (paper Fig 5 models).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import hisparse
+from repro.core.metadata import PageDirectory, PoolAllocator
+from repro.core.pool import FetchFn, local_fetch
+from repro.core.transfer import FABRICS, FabricModel
+from repro.models import dsa
+
+
+# ---------------------------------------------------------------------------
+# in-graph decode attention (used by models/transformer.py)
+# ---------------------------------------------------------------------------
+
+
+def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                  kv_pool_l: jnp.ndarray, idx_pool_l: jnp.ndarray,
+                  cache_len: jnp.ndarray, positions: jnp.ndarray,
+                  own_entry: jnp.ndarray,
+                  fetch_fn: FetchFn = local_fetch,
+                  topk_fn: Optional[Callable] = None,
+                  window: int = 0) -> jnp.ndarray:
+    """One layer of SAC decode attention.  x: [B, D] -> [B, D].
+
+    kv_pool_l: [B, S, d_entry] (this layer's pool slice, S possibly sharded
+    over the pool axis); idx_pool_l: [B, S, d_idx]; own_entry: [B, d_entry]
+    (the current token's KV entry, appended so the token attends to itself
+    before the write-back lands).  ``window`` > 0 restricts the candidate
+    set to the trailing window (SWA layers: top-k within the window).
+    """
+    scores = dsa.indexer_scores(p_idx, x, idx_pool_l, cfg)
+    if window:
+        # candidate set = (cache_len - window, cache_len]: size-`window`
+        # trailing window including the (appended) current token.
+        pos = jnp.arange(scores.shape[-1], dtype=jnp.int32)
+        in_win = pos[None, :] > (cache_len[:, None] - window)
+        scores = jnp.where(in_win, scores, dsa.NEG_INF)
+    if topk_fn is None:
+        idx, valid = dsa.topk_select(scores, cache_len, cfg.sac.topk)
+    else:
+        idx, valid = topk_fn(scores, cache_len)
+    fetched = fetch_fn(kv_pool_l, idx)
+    fetched = jnp.concatenate(
+        [fetched, own_entry[:, None, :].astype(fetched.dtype)], axis=1)
+    valid = jnp.concatenate(
+        [valid, jnp.ones((valid.shape[0], 1), bool)], axis=1)
+    if cfg.mla:
+        return dsa.mla_absorbed_decode(p_attn, x, cfg, fetched, valid,
+                                       positions)
+    return dsa.gqa_sparse_decode(p_attn, x, cfg, fetched, valid, positions)
+
+
+def window_attend(p_attn: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                  kv_pool_l: jnp.ndarray, cache_len: jnp.ndarray,
+                  positions: jnp.ndarray, own_entry: jnp.ndarray,
+                  window: int, fetch_fn: FetchFn = local_fetch) -> jnp.ndarray:
+    """Sliding-window decode: fetch the trailing ``window-1`` entries
+    (contiguous indices through the same fetch path) + the own entry."""
+    B = x.shape[0]
+    w = window - 1
+    idx = cache_len[:, None] - w + jnp.arange(w, dtype=jnp.int32)[None, :]
+    valid = idx >= 0
+    idx = jnp.clip(idx, 0, kv_pool_l.shape[1] - 1)
+    fetched = fetch_fn(kv_pool_l, idx)
+    fetched = jnp.concatenate(
+        [fetched, own_entry[:, None, :].astype(fetched.dtype)], axis=1)
+    valid = jnp.concatenate([valid, jnp.ones((B, 1), bool)], axis=1)
+    if cfg.mla:
+        return dsa.mla_absorbed_decode(p_attn, x, cfg, fetched, valid,
+                                       positions)
+    return dsa.gqa_sparse_decode(p_attn, x, cfg, fetched, valid, positions)
+
+
+def dense_attend(p_attn: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 kv_pool_l: jnp.ndarray, cache_len: jnp.ndarray,
+                 positions: jnp.ndarray, own_entry: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Dense decode over the full pool slice (full-prefetch baseline)."""
+    B, S, _ = kv_pool_l.shape
+    pool = jnp.concatenate(
+        [kv_pool_l, own_entry[:, None, :].astype(kv_pool_l.dtype)], axis=1)
+    valid = jnp.concatenate(
+        [jnp.arange(S, dtype=jnp.int32)[None, :] < cache_len[:, None],
+         jnp.ones((B, 1), bool)], axis=1)
+    if cfg.mla:
+        return dsa.mla_absorbed_decode(p_attn, x, cfg, pool, valid, positions)
+    return dsa.gqa_sparse_decode(p_attn, x, cfg, pool, valid, positions)
+
+
+# ---------------------------------------------------------------------------
+# host-level pool system (serving engine / simulator substrate)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RequestPages:
+    request_id: int
+    device: int
+    pages: list
+    n_tokens: int
+
+
+class SACSystem:
+    """Disaggregated KV-cache system state for one serving cluster.
+
+    ``backend`` picks the fabric cost model: "cxl" (SAC), "rdma"
+    (full-prefetch baseline), "dram"/"hbm" (non-disaggregated baselines).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, backend: str = "cxl",
+                 n_pool_devices: int = 2, device_bytes: int = 256 << 30,
+                 interleave: bool = True, seq_capacity: int = 1 << 17):
+        self.cfg = cfg
+        self.backend = backend
+        self.fabric: FabricModel = FABRICS[backend]
+        self.interleave = interleave
+        self.n_devices = n_pool_devices
+        self.entry_bytes = cfg.kv_bytes_per_token_layer + 2 * cfg.sac.d_idx
+        self.page_tokens = cfg.sac.page_size
+        page_bytes = self.entry_bytes * self.page_tokens * max(cfg.n_attn_layers, 1)
+        self.allocator = PoolAllocator(
+            n_pool_devices, max(device_bytes // max(page_bytes, 1), 1))
+        self.directory = PageDirectory()
+        self.requests: Dict[int, RequestPages] = {}
+        self._rr = 0
+        self.bytes_fetched = 0
+        self.bytes_written = 0
+
+    # -- placement ---------------------------------------------------------
+    def place(self, request_id: int, n_tokens: int) -> Optional[RequestPages]:
+        """Allocate pool pages for a request on one device (paper stores a
+        request's KV within a single device; the *scheduler* interleaves
+        requests across devices)."""
+        n_pages = -(-n_tokens // self.page_tokens)
+        order = (list(range(self._rr, self.n_devices))
+                 + list(range(0, self._rr))) if self.interleave else \
+            list(range(self.n_devices))
+        for dev in order:
+            pages = self.allocator.alloc(dev, n_pages)
+            if pages is not None:
+                rp = RequestPages(request_id, dev, pages, n_tokens)
+                self.requests[request_id] = rp
+                for pno, page in enumerate(pages):
+                    self.directory.publish(request_id, pno, dev, page)
+                if self.interleave:
+                    self._rr = (dev + 1) % self.n_devices
+                return rp
+        return None
+
+    def release(self, request_id: int):
+        rp = self.requests.pop(request_id, None)
+        if rp is None:
+            return
+        self.allocator.release(rp.device, rp.pages)
+        for pno in range(len(rp.pages)):
+            self.directory.unpublish(request_id, pno)
+
+    # -- fabric accounting ---------------------------------------------------
+    def sparse_fetch_time(self, n_entries: int, *, contention: float = 1.0
+                          ) -> float:
+        t = self.fabric.sparse_fetch_time(n_entries, self.entry_bytes,
+                                          contention=contention)
+        self.bytes_fetched += n_entries * self.entry_bytes
+        return t
+
+    def full_prefetch_time(self, n_tokens: int, *, contention: float = 1.0
+                           ) -> float:
+        n_bytes = n_tokens * self.entry_bytes * max(self.cfg.n_attn_layers, 1)
+        self.bytes_fetched += n_bytes
+        return self.fabric.bulk_transfer_time(n_bytes, contention=contention)
+
+    def write_back_time(self, n_tokens: int, *, contention: float = 1.0
+                        ) -> float:
+        n_bytes = n_tokens * self.entry_bytes * max(self.cfg.n_attn_layers, 1)
+        self.bytes_written += n_bytes
+        return self.fabric.bulk_transfer_time(n_bytes, contention=contention)
+
+    def device_of(self, request_id: int) -> int:
+        rp = self.requests.get(request_id)
+        return rp.device if rp else 0

@@ -1,0 +1,133 @@
+"""Collective helpers + HLO collective-traffic analysis.
+
+``collective_bytes`` parses compiled/lowered HLO text and sums the operand
+bytes of every communication op — the §Roofline collective term (the
+spec's ``cost_analysis`` does not report collective traffic, so we derive
+it from the IR).
+
+Collectives inside ``lax.scan`` bodies appear *once* in the HLO but run
+once per iteration, so the parser is computation-aware: it finds every
+``while`` op, recovers the static trip count from the loop condition's
+compare-against-constant, and multiplies the body's collective traffic by
+it (recursively, for nested scans).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,2048,576]' -> byte count (tuples: sum of parseable parts)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    body: List[str] = []
+    depth = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(s)
+            if m and s.endswith("{"):
+                cur = "ENTRY" if m.group(1) else m.group(2)
+                body = []
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            comps[cur] = body
+            cur = None
+            continue
+        body.append(s)
+    if cur is not None:
+        comps[cur] = body
+    return comps
+
+
+def _line_collective(s: str) -> Optional[Tuple[str, int]]:
+    for op in COLLECTIVE_OPS:
+        if re.search(rf"\b{op}(-start)?\(", s):
+            lhs = s.split("=", 1)
+            if len(lhs) != 2:
+                return (op, 0)
+            shape_part = lhs[1].strip().split(op)[0]
+            return (op, _shape_bytes(shape_part))
+    return None
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Static trip count heuristic: largest compare-constant in the cond."""
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+def _analyze(comp: str, comps: Dict[str, List[str]], per_kind, counts,
+             mult: int, _seen=None):
+    if comp not in comps:
+        return
+    for s in comps[comp]:
+        hit = _line_collective(s)
+        if hit:
+            per_kind[hit[0]] += hit[1] * mult
+            counts[hit[0]] += mult
+            continue
+        m = _WHILE_RE.search(s)
+        if m:
+            cond, body = m.group(1), m.group(2)
+            trips = _trip_count(comps.get(cond, []))
+            _analyze(body, comps, per_kind, counts, mult * trips)
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Total per-device collective traffic (result-shape bytes x executions).
+
+    Returns (total_bytes, per-op-kind breakdown).  Result-shape bytes per
+    execution is the per-device traffic convention for the roofline's
+    collective term.
+    """
+    comps = _split_computations(hlo_text)
+    per_kind: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    entry = "ENTRY" if "ENTRY" in comps else (next(iter(comps)) if comps else "")
+    _analyze(entry, comps, per_kind, counts, 1)
+    return sum(per_kind.values()), dict(per_kind)
+
+
+def collective_count(hlo_text: str) -> Dict[str, int]:
+    """Executed collective-op counts (trip-count aware)."""
+    comps = _split_computations(hlo_text)
+    per_kind: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    entry = "ENTRY" if "ENTRY" in comps else (next(iter(comps)) if comps else "")
+    _analyze(entry, comps, per_kind, counts, 1)
+    return dict(counts)

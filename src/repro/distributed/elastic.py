@@ -1,0 +1,103 @@
+"""Elastic re-meshing + straggler mitigation.
+
+**Elastic re-mesh**: on device loss (or scale-up), pick the largest
+well-formed ``(data, model)`` grid from the surviving devices, rebuild
+shardings from the same logical rules, and ``device_put`` the
+checkpointed state onto the new mesh.  Because checkpoints are plain
+host arrays + logical-dim specs, restore onto *any* mesh shape works —
+that is the whole fault-tolerance story: atomic snapshots (training/
+checkpoint.py) + mesh-agnostic restore (here).
+
+**Straggler mitigation**: ``SkipSlowReducer`` models the skip-slow-host
+gradient trick — hosts that miss the step deadline are dropped from the
+all-reduce and the gradient is rescaled by the number of contributors
+(at-least-K semantics).  The serving-side analogue (per-link queue
+bounding via pool interleaving) lives in serving/scheduler.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import params_shardings
+
+
+def viable_mesh_shape(n_devices: int, *, model_pref: int = 16,
+                      min_model: int = 1) -> Tuple[int, int]:
+    """Largest (data, model) grid usable with ``n_devices`` devices.
+
+    Keeps the model axis as close to ``model_pref`` as divisibility
+    allows (TP degree is a property of the model fit, DP absorbs loss).
+    May idle a remainder of devices (returned grid uses <= n_devices).
+    """
+    best = (1, 1)
+    for model in range(min(model_pref, n_devices), min_model - 1, -1):
+        data = n_devices // model
+        if data * model > best[0] * best[1]:
+            best = (data, model)
+        if model <= model_pref and data >= 1:
+            return (data, model)
+    return best
+
+
+def remesh(n_devices: int, *, axis_names=("data", "model"),
+           devices: Optional[Sequence] = None) -> Mesh:
+    devices = list(devices or jax.devices())[:n_devices]
+    shape = viable_mesh_shape(len(devices))
+    used = shape[0] * shape[1]
+    arr = np.array(devices[:used]).reshape(shape)
+    return Mesh(arr, axis_names)
+
+
+def reshard_tree(tree: Any, specs_tree: Any, mesh: Mesh, rules=None) -> Any:
+    """Host arrays + ParamSpec tree -> device arrays on the new mesh."""
+    shardings = params_shardings(specs_tree, mesh, rules=rules)
+    return jax.tree.map(lambda a, sh: jax.device_put(np.asarray(a), sh),
+                        tree, shardings)
+
+
+@dataclasses.dataclass
+class StepReport:
+    step: int
+    contributors: int
+    total_hosts: int
+    skipped: List[int]
+
+
+class SkipSlowReducer:
+    """At-least-K gradient aggregation across hosts.
+
+    Hosts report (host_id, grad, arrival_time); contributions arriving
+    after ``deadline`` x median are dropped and the mean is rescaled.
+    Pure-host logic (the cross-host reduce itself is jax psum in real
+    deployment); deterministic and unit-testable.
+    """
+
+    def __init__(self, n_hosts: int, *, deadline_factor: float = 2.0,
+                 min_quorum_frac: float = 0.75):
+        self.n_hosts = n_hosts
+        self.deadline_factor = deadline_factor
+        self.min_quorum = max(1, int(np.ceil(min_quorum_frac * n_hosts)))
+
+    def aggregate(self, step: int,
+                  contributions: Dict[int, Tuple[Any, float]]
+                  ) -> Tuple[Any, StepReport]:
+        """contributions: host_id -> (grad_tree, arrival_time_s)."""
+        if not contributions:
+            raise ValueError("no gradient contributions")
+        times = sorted(t for _, t in contributions.values())
+        med = times[len(times) // 2]
+        deadline = med * self.deadline_factor + 1e-9
+        keep = {h: g for h, (g, t) in contributions.items() if t <= deadline}
+        if len(keep) < self.min_quorum:          # never drop below quorum
+            order = sorted(contributions.items(), key=lambda kv: kv[1][1])
+            keep = {h: g for h, (g, _) in order[: self.min_quorum]}
+        grads = list(keep.values())
+        n = len(grads)
+        summed = jax.tree.map(lambda *xs: sum(xs) / n, *grads)
+        skipped = sorted(set(contributions) - set(keep))
+        return summed, StepReport(step, n, self.n_hosts, skipped)

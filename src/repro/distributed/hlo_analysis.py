@@ -1,0 +1,255 @@
+"""Trip-count-aware HLO cost analysis (the §Roofline source).
+
+XLA's ``compiled.cost_analysis()`` visits ``while`` bodies ONCE, so a
+61-layer ``lax.scan`` reports 1/61 of the real FLOPs.  This module parses
+the *scheduled, optimized* HLO text (``compiled.as_text()``) where every
+top-level op is one executed kernel, recovers each loop's static trip
+count from its condition's compare-constant, and accumulates:
+
+  - **flops**: 2 * prod(result_dims) * prod(contracting_dims) per ``dot``
+    (including dots inside fusion bodies), x trips.  Vector/elementwise
+    FLOPs are ignored (sub-1% for transformer graphs).
+  - **bytes**: per top-level kernel, result bytes + operand bytes — the
+    post-fusion HBM traffic model (each fusion reads its inputs and
+    writes its outputs exactly once), x trips.
+  - **collective_bytes**: result-shape bytes of every communication op,
+    x trips (per-device traffic convention).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "add-dependency", "custom-call"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_LINE_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_WHILE_RE = re.compile(
+    r"condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CDIM_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class _Comp:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[Tuple[str, str, str, str]] = []  # name,shape,op,args
+        self.symtable: Dict[str, str] = {}
+
+
+def _split(hlo_text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    depth = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(s)
+            if m and s.endswith("{"):
+                cur = _Comp("ENTRY" if m.group(1) else m.group(2))
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            comps[cur.name] = cur
+            cur = None
+            continue
+        lm = _LINE_RE.match(s)
+        if lm:
+            name, shape, op, args = lm.groups()
+            cur.lines.append((name, shape, op, args))
+            cur.symtable[name] = shape
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _trip_count(comp: Optional[_Comp]) -> int:
+    """Static trip count heuristic: the largest integer constant in the
+    loop condition (lax.scan conds are ``lt(counter, N)``)."""
+    if comp is None:
+        return 1
+    consts = []
+    for _, _, op, args in comp.lines:
+        if op == "constant":
+            m = re.match(r"(\d+)\)", args)
+            if m:
+                consts.append(int(m.group(1)))
+        consts += [int(m.group(1)) for m in _CONST_RE.finditer(args)]
+    return max(consts) if consts else 1
+
+
+def _dot_flops(shape: str, args: str, symtable: Dict[str, str]) -> int:
+    res_dims = _shape_dims(shape)
+    if not res_dims:
+        return 0
+    n_out = 1
+    for d in res_dims[0][1]:
+        n_out *= d
+    cm = _CDIM_RE.search(args)
+    contracted = 1
+    if cm:
+        ops = _OPERAND_RE.findall(args)
+        if ops and ops[0] in symtable:
+            lhs_dims = _shape_dims(symtable[ops[0]])
+            if lhs_dims:
+                for di in (cm.group(1).split(",") if cm.group(1) else []):
+                    d = int(di)
+                    if d < len(lhs_dims[0][1]):
+                        contracted *= lhs_dims[0][1][d]
+    return 2 * n_out * contracted
+
+
+def _fusion_param_reads(comp: _Comp) -> Dict[int, int]:
+    """Per-parameter bytes actually read inside a fusion body.
+
+    A body parameter consumed ONLY by dynamic-slice / gather / slice ops
+    is charged at the sum of those result sizes (a windowed read of a
+    loop-invariant buffer); anything else reads the parameter fully
+    (signalled by absence from the returned map).
+    """
+    param_names: Dict[str, int] = {}
+    for name, shape, op, args in comp.lines:
+        if op == "parameter":
+            m = re.match(r"(\d+)\)", args)
+            if m:
+                param_names[name] = int(m.group(1))
+    reads: Dict[int, int] = {}
+    for pname, pidx in param_names.items():
+        sliced_bytes = 0
+        only_sliced = True
+        used = False
+        for name, shape, op, args in comp.lines:
+            if op == "parameter":
+                continue
+            if re.search(rf"%{re.escape(pname)}\b", args):
+                used = True
+                if op in ("dynamic-slice", "gather", "slice"):
+                    sliced_bytes += _shape_bytes(shape)
+                else:
+                    only_sliced = False
+                    break
+        if used and only_sliced:
+            reads[pidx] = sliced_bytes
+    return reads
+
+
+def _fusion_dot_flops(comp: _Comp, comps: Dict[str, _Comp], seen=None) -> int:
+    """dot flops inside a fusion body (recursive through nested calls)."""
+    seen = seen or set()
+    if comp.name in seen:
+        return 0
+    seen.add(comp.name)
+    total = 0
+    for name, shape, op, args in comp.lines:
+        if op == "dot":
+            total += _dot_flops(shape, args, comp.symtable)
+        cm = _CALLS_RE.search(args)
+        if cm and cm.group(1) in comps:
+            total += _fusion_dot_flops(comps[cm.group(1)], comps, seen)
+    return total
+
+
+def _analyze(comp: _Comp, comps: Dict[str, _Comp], acc: Dict, mult: int):
+    for name, shape, op, args in comp.lines:
+        if op == "while":
+            m = _WHILE_RE.search(args)
+            if m:
+                trips = _trip_count(comps.get(m.group(1)))
+                body = comps.get(m.group(2))
+                if body is not None:
+                    _analyze(body, comps, acc, mult * trips)
+            continue
+        is_coll = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op == c + "-start":
+                is_coll = c
+                break
+        if is_coll:
+            b = _shape_bytes(shape)
+            acc["collective_bytes"] += b * mult
+            acc["collective_breakdown"][is_coll] += b * mult
+            acc["collective_counts"][is_coll] += mult
+            acc["bytes"] += b * mult
+            continue
+        if op in _FREE_OPS or op.endswith("-done"):
+            continue
+        # kernel traffic: result + actually-read operand bytes.  Sliced
+        # reads of big (often loop-invariant) buffers are charged at the
+        # slice size, not the buffer size.
+        if op in ("dynamic-slice", "gather", "slice"):
+            b = 2 * _shape_bytes(shape)
+        elif op in ("dynamic-update-slice", "scatter"):
+            opnds = [_shape_bytes(comp.symtable.get(o, ""))
+                     for o in _OPERAND_RE.findall(args)]
+            upd = min([o for o in opnds if o > 0], default=_shape_bytes(shape))
+            b = 2 * upd
+        elif op == "fusion":
+            cm = _CALLS_RE.search(args)
+            body = comps.get(cm.group(1)) if cm else None
+            opnds = _OPERAND_RE.findall(args.split(", calls=")[0])
+            b = _shape_bytes(shape)
+            reads = _fusion_param_reads(body) if body is not None else {}
+            for i, opnd in enumerate(opnds):
+                full = _shape_bytes(comp.symtable.get(opnd, ""))
+                b += min(reads.get(i, full), full) if i in reads else full
+        else:
+            b = _shape_bytes(shape)
+            for opnd in _OPERAND_RE.findall(args.split(", calls=")[0]):
+                b += _shape_bytes(comp.symtable.get(opnd, ""))
+        acc["bytes"] += b * mult
+        if op == "dot":
+            acc["flops"] += _dot_flops(shape, args, comp.symtable) * mult
+        elif op == "fusion":
+            cm = _CALLS_RE.search(args)
+            if cm and cm.group(1) in comps:
+                acc["flops"] += _fusion_dot_flops(comps[cm.group(1)],
+                                                  comps) * mult
+
+
+def hlo_metrics(hlo_text: str) -> Dict:
+    """Trip-aware {flops, bytes, collective_bytes, breakdown, counts}."""
+    comps = _split(hlo_text)
+    acc = {"flops": 0, "bytes": 0, "collective_bytes": 0,
+           "collective_breakdown": defaultdict(int),
+           "collective_counts": defaultdict(int)}
+    entry = comps.get("ENTRY") or (next(iter(comps.values())) if comps else None)
+    if entry is not None:
+        _analyze(entry, comps, acc, 1)
+    acc["collective_breakdown"] = dict(acc["collective_breakdown"])
+    acc["collective_counts"] = dict(acc["collective_counts"])
+    return acc

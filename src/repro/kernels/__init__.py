@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with ops.py as the jit'd batched wrapper and ref.py as the
+pure-jnp oracle.  Validated in interpret mode on CPU
+(tests/test_kernels.py); ``use_pallas=True`` activates them on TPU.
+
+- gather_kv:   scalar-prefetch sparse KV gather (the SAC read path)
+- scatter_kv:  coalesced write-back (the SAC write path)
+- indexer:     lightning-indexer scoring (MXU matmul + weighted ReLU)
+- sparse_attn: top-k sparse attention, online softmax (MLA + MQA/GQA)
+"""

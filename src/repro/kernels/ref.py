@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def gather_kv_ref(kv: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """kv: [S, d]; idx: [k] int32 -> [k, d]."""
+    return jnp.take(kv, idx, axis=0)
+
+
+def indexer_scores_ref(q: jnp.ndarray, w: jnp.ndarray, keys: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """Lightning indexer: q [H, di], w [H], keys [S, di] -> scores [S].
+
+    I[s] = sum_h w[h] * ReLU(q[h] . k[s]) / sqrt(di)
+    """
+    di = q.shape[-1]
+    logits = jax.nn.relu(keys.astype(jnp.float32)
+                         @ q.astype(jnp.float32).T) / np.sqrt(di)  # [S, H]
+    return logits @ w.astype(jnp.float32)
+
+
+def sparse_mla_attn_ref(q_lat: jnp.ndarray, q_pe: jnp.ndarray,
+                        entries: jnp.ndarray, valid: jnp.ndarray,
+                        dc: int, scale: float) -> jnp.ndarray:
+    """Absorbed-MLA attention over fetched latent entries.
+
+    q_lat: [H, dc]; q_pe: [H, dr]; entries: [k, dc+dr]; valid: [k]
+    -> out_lat [H, dc].
+    """
+    c = entries[:, :dc].astype(jnp.float32)
+    k_pe = entries[:, dc:].astype(jnp.float32)
+    s = (q_lat.astype(jnp.float32) @ c.T
+         + q_pe.astype(jnp.float32) @ k_pe.T) * scale      # [H, k]
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ c                                           # [H, dc]
+
+
+def sparse_gqa_attn_ref(q: jnp.ndarray, entries: jnp.ndarray,
+                        valid: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """GQA attention over fetched entries.
+
+    q: [H, hd]; entries: [k, 2*n_kv*hd] (stacked k,v); valid: [k]
+    -> out [H, hd].
+    """
+    H, hd = q.shape
+    k = entries.shape[0]
+    kv = entries.reshape(k, 2, n_kv, hd)
+    keys, vals = kv[:, 0].astype(jnp.float32), kv[:, 1].astype(jnp.float32)
+    n_rep = H // n_kv
+    qf = q.astype(jnp.float32).reshape(n_kv, n_rep, hd) / np.sqrt(hd)
+    s = jnp.einsum("grd,kgd->grk", qf, keys)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("grk,kgd->grd", p, vals)
+    return out.reshape(H, hd)
+
+
+def scatter_kv_ref(pool: jnp.ndarray, entries: jnp.ndarray,
+                   idx: jnp.ndarray) -> jnp.ndarray:
+    """pool: [S, d]; entries: [k, d]; idx: [k] -> pool with rows written."""
+    return pool.at[idx].set(entries.astype(pool.dtype))

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: coalesced KV write-back (SAC write path).
+
+The paper's GPU write path uses warp-coalesced ``st.global.b64`` stores to
+push prefill KV into the CXL pool.  The TPU analogue: scalar-prefetched
+destination indices drive the *output* BlockSpec, so each grid step DMAs
+one entry row VMEM->HBM directly into its pool slot.  The pool buffer is
+input/output-aliased — unwritten rows keep their previous contents
+(in-place scatter).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_kernel(idx_ref, entries_ref, pool_ref, out_ref):
+    out_ref[...] = entries_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scatter_kv(pool: jnp.ndarray, entries: jnp.ndarray, idx: jnp.ndarray,
+               *, interpret: bool = True) -> jnp.ndarray:
+    """pool: [S, d]; entries: [k, d]; idx: [k] distinct rows -> updated pool."""
+    k, d = entries.shape
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(k,),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),       # entries
+                pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),  # pool (aliased)
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},   # pool arg (after idx prefetch, entries)
+        interpret=interpret,
+    )(idx, entries, pool)

@@ -1,0 +1,50 @@
+"""End-to-end serving driver: the real engine on a reduced config (CPU)
+or the full config under the production mesh (real hardware).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+        --reduced --requests 8 --ctx 48 --out-len 8 --backend cxl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--ctx", type=int, default=48)
+    ap.add_argument("--out-len", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-ctx", type=int, default=96)
+    ap.add_argument("--backend", default="cxl",
+                    choices=["cxl", "rdma", "dram", "hbm"])
+    ap.add_argument("--mode", default="sac", choices=["sac", "dense"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.serving.engine import Engine
+    from repro.serving.request import sharegpt_trace
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.enc_dec:
+        raise SystemExit("serve driver targets decoder-only archs; "
+                         "whisper decode is exercised in tests")
+    eng = Engine(cfg, slots=args.slots, max_ctx=args.max_ctx,
+                 backend=args.backend, mode=args.mode, seed=args.seed)
+    reqs = sharegpt_trace(args.requests, context_len=args.ctx,
+                          output_len=args.out_len, seed=args.seed,
+                          ctx_jitter=0.0, vocab=cfg.vocab)
+    out = eng.run(reqs)
+    out["buffer_hit_rate"] = eng.stats.hit_rate
+    print(json.dumps({k: (round(v, 5) if isinstance(v, float) else v)
+                      for k, v in out.items()}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

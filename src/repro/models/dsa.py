@@ -1,0 +1,261 @@
+"""DeepSeek Sparse Attention (DSA) building blocks + sparse decode paths.
+
+This implements the model-side machinery the SAC paper serves:
+
+  - **Lightning indexer** (paper Fig 1): low-dim projected keys stored per
+    token; at decode time the current query scores *all* cached positions
+    ``I[t,s] = sum_h w[t,h] * ReLU(q_idx[t,h] . k_idx[s])`` and the top-k
+    positions are selected.
+  - **MLA** (multi-head latent attention): prefill runs the non-absorbed
+    form and emits the latent cache entry ``(c_kv, k_rope)`` = 512+64 dims;
+    decode runs the *absorbed* form directly over fetched latent entries.
+  - **GQA sparse decode**: the same top-k machinery applied to ordinary
+    GQA KV entries (how SAC generalizes beyond DeepSeek, DESIGN.md §5).
+
+All decode paths consume a ``fetch_fn(pool_layer, idx) -> [B, k, d]``
+injected by the runtime: single-device ``take_along_axis`` for tests, the
+shard_map pooled-HBM collective gather (core/pool.py) at scale.  That
+callback *is* the SAC read path.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParamSpec, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# lightning indexer
+# ---------------------------------------------------------------------------
+
+
+def indexer_param_specs(cfg) -> Dict[str, ParamSpec]:
+    d, ni, di = cfg.d_model, cfg.sac.n_idx_heads, cfg.sac.d_idx
+    return {
+        "wq_idx": ParamSpec((d, ni * di), ("D", "H")),
+        "wk_idx": ParamSpec((d, di), ("D", "C")),
+        "w_w": ParamSpec((d, ni), ("D", "C"), scale=0.1),
+    }
+
+
+def indexer_keys(p, x) -> jnp.ndarray:
+    """Per-token indexer keys. x: [..., D] -> [..., d_idx]."""
+    return x @ p["wk_idx"]
+
+
+def indexer_scores(p, xq, idx_keys, cfg) -> jnp.ndarray:
+    """Score all cached positions against the current query token.
+
+    xq: [B, D] (query-token activations); idx_keys: [B, S, d_idx]
+    -> scores [B, S] (f32).
+    """
+    B = xq.shape[0]
+    ni, di = cfg.sac.n_idx_heads, cfg.sac.d_idx
+    q = (xq @ p["wq_idx"]).reshape(B, ni, di).astype(jnp.float32)
+    w = (xq @ p["w_w"]).astype(jnp.float32)                      # [B, ni]
+    logits = jnp.einsum("bhd,bsd->bhs", q, idx_keys.astype(jnp.float32))
+    logits = jax.nn.relu(logits) / np.sqrt(di)
+    return jnp.einsum("bh,bhs->bs", w, logits)                   # [B, S]
+
+
+def topk_select(scores: jnp.ndarray, cache_len: jnp.ndarray, k: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mask positions >= cache_len, take top-k.
+
+    scores: [B, S]; cache_len: [B] -> (idx [B, k] int32, valid [B, k] bool).
+    """
+    S = scores.shape[-1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    masked = jnp.where(pos[None, :] < cache_len[:, None], scores, NEG_INF)
+    top_scores, idx = jax.lax.top_k(masked, min(k, S))
+    valid = top_scores > NEG_INF / 2
+    return idx.astype(jnp.int32), valid
+
+
+# ---------------------------------------------------------------------------
+# MLA parameters
+# ---------------------------------------------------------------------------
+
+
+def mla_param_specs(cfg) -> Dict[str, ParamSpec]:
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    dc, dr, qr = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.q_lora_rank
+    return {
+        "w_dq": ParamSpec((d, qr), ("D", "C")),
+        "q_norm_g": ParamSpec((qr,), ("C",), init="ones"),
+        "w_uq": ParamSpec((qr, nh * (hd + dr)), ("C", "H")),
+        "w_dkv": ParamSpec((d, dc + dr), ("D", "C")),
+        "kv_norm_g": ParamSpec((dc,), ("C",), init="ones"),
+        "w_uk": ParamSpec((dc, nh * hd), ("C", "H")),
+        "w_uv": ParamSpec((dc, nh * hd), ("C", "H")),
+        "wo": ParamSpec((nh * hd, d), ("H", "D")),
+    }
+
+
+def mla_q_proj(p, x, cfg, positions):
+    """x: [B(, S), D] -> q_nope [B(,S),nh,hd], q_pe [B(,S),nh,dr] (roped)."""
+    nh, hd, dr = cfg.n_heads, cfg.hd, cfg.qk_rope_dim
+    lead = x.shape[:-1]
+    q = rms_norm(x @ p["w_dq"], p["q_norm_g"]) @ p["w_uq"]
+    q = q.reshape(*lead, nh, hd + dr)
+    q_nope, q_pe = q[..., :hd], q[..., hd:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_kv_entry(p, x, cfg, positions):
+    """Latent cache entry for each token: [.., dc+dr] (c_kv normed, k_pe roped)."""
+    dc = cfg.kv_lora_rank
+    kv = x @ p["w_dkv"]
+    c, k_pe = kv[..., :dc], kv[..., dc:]
+    c = rms_norm(c, p["kv_norm_g"])
+    k_pe = apply_rope(k_pe, positions, cfg.rope_theta)
+    return jnp.concatenate([c, k_pe], axis=-1)
+
+
+def mla_prefill_attention(p, x, cfg, positions, *, chunk: int = 1024):
+    """Non-absorbed MLA over a full sequence (training / prefill).
+
+    x: [B, S, D] -> (out [B, S, D], cache_entries [B, S, dc+dr]).
+    """
+    from repro.models.layers import blocked_causal_attention
+
+    B, S, D = x.shape
+    nh, hd, dr, dc = cfg.n_heads, cfg.hd, cfg.qk_rope_dim, cfg.kv_lora_rank
+    q_nope, q_pe = mla_q_proj(p, x, cfg, positions)
+    entry = mla_kv_entry(p, x, cfg, positions)
+    c, k_pe = entry[..., :dc], entry[..., dc:]
+    k_nope = (c @ p["w_uk"]).reshape(B, S, nh, hd)
+    v = (c @ p["w_uv"]).reshape(B, S, nh, hd)
+    k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :], (B, S, nh, dr))
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    # pad v with zeros so q/k/v share the last dim for the blocked kernel
+    v_pad = jnp.concatenate([v, jnp.zeros((B, S, nh, dr), v.dtype)], axis=-1)
+    out = blocked_causal_attention(q, k, v_pad, chunk=chunk)[..., :hd]
+    return out.reshape(B, S, nh * hd) @ p["wo"], entry
+
+
+def mla_absorbed_decode(p, xq, cfg, fetched, valid, positions):
+    """Absorbed MLA decode over fetched latent entries.
+
+    xq: [B, D]; fetched: [B, k, dc+dr]; valid: [B, k] bool;
+    positions: [B] (query positions) -> out [B, D].
+    """
+    B = xq.shape[0]
+    nh, hd, dr, dc = cfg.n_heads, cfg.hd, cfg.qk_rope_dim, cfg.kv_lora_rank
+    q_nope, q_pe = mla_q_proj(p, xq, cfg, positions)             # [B,nh,hd],[B,nh,dr]
+    w_uk = p["w_uk"].reshape(dc, nh, hd)
+    # absorb: q_lat[b,h,c] = sum_d q_nope[b,h,d] * w_uk[c,h,d]
+    q_lat = jnp.einsum("bhd,chd->bhc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    c = fetched[..., :dc].astype(jnp.float32)                    # [B,k,dc]
+    k_pe = fetched[..., dc:].astype(jnp.float32)                 # [B,k,dr]
+    scale = 1.0 / np.sqrt(hd + dr)
+    s = (jnp.einsum("bhc,bkc->bhk", q_lat, c)
+         + jnp.einsum("bhr,bkr->bhk", q_pe.astype(jnp.float32), k_pe)) * scale
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhk,bkc->bhc", pattn, c)                 # [B,nh,dc]
+    w_uv = p["w_uv"].reshape(dc, nh, hd)
+    out = jnp.einsum("bhc,chd->bhd", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, nh * hd).astype(xq.dtype)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# GQA sparse / dense decode over pool entries
+# ---------------------------------------------------------------------------
+
+
+def gqa_entry_dim(cfg) -> int:
+    return 2 * cfg.n_kv_heads * cfg.hd
+
+
+def gqa_kv_entry(p, x, cfg, positions):
+    """Pool entry for GQA archs: stacked (roped k, v) [.., 2*nkv*hd].
+
+    Layout matches the decode-side ``reshape(B, k, 2, nkv, hd)``.
+    """
+    lead = x.shape[:-1]
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    k = (x @ p["wk"]).reshape(*lead, nkv, hd)
+    v = (x @ p["wv"]).reshape(*lead, nkv, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(nkv, hd)
+        v = v + p["bv"].reshape(nkv, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return jnp.stack([k, v], axis=-3).reshape(*lead, 2 * nkv * hd)
+
+
+def pack_kv_entry(k, v):
+    """[.., S, nkv, hd] k/v (k already roped) -> [.., S, 2*nkv*hd] entries."""
+    lead = k.shape[:-2]
+    nkv, hd = k.shape[-2:]
+    return jnp.stack([k, v], axis=-3).reshape(*lead, 2 * nkv * hd)
+
+
+def gqa_q_proj(p, x, cfg, positions):
+    lead = x.shape[:-1]
+    nh, hd = cfg.n_heads, cfg.hd
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(*lead, nh, hd)
+    return apply_rope(q, positions, cfg.rope_theta)
+
+
+def gqa_sparse_decode(p, xq, cfg, fetched, valid, positions):
+    """GQA attention over fetched top-k entries.
+
+    xq: [B, D]; fetched: [B, k, 2*nkv*hd]; valid: [B, k] -> [B, D].
+    """
+    B, k = fetched.shape[:2]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = gqa_q_proj(p, xq, cfg, positions)                        # [B,nh,hd]
+    kv = fetched.reshape(B, k, 2, nkv, hd)
+    keys = kv[:, :, 0].astype(jnp.float32)                       # [B,k,nkv,hd]
+    vals = kv[:, :, 1].astype(jnp.float32)
+    n_rep = nh // nkv
+    qf = q.astype(jnp.float32).reshape(B, nkv, n_rep, hd) / np.sqrt(hd)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qf, keys)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", pattn, vals)
+    out = out.reshape(B, nh * hd).astype(xq.dtype)
+    return out @ p["wo"]
+
+
+def gqa_dense_decode(p, xq, cfg, pool_layer, cache_len, positions):
+    """Dense decode over the full pool slice (RDMA-full-prefetch analogue /
+    upper-bound baseline).  pool_layer: [B, S, 2*nkv*hd]."""
+    B, S, _ = pool_layer.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = gqa_q_proj(p, xq, cfg, positions)
+    kv = pool_layer.reshape(B, S, 2, nkv, hd)
+    keys = kv[:, :, 0].astype(jnp.float32)
+    vals = kv[:, :, 1].astype(jnp.float32)
+    n_rep = nh // nkv
+    qf = q.astype(jnp.float32).reshape(B, nkv, n_rep, hd) / np.sqrt(hd)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qf, keys)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    s = jnp.where((pos[None, None, None, :] < cache_len[:, None, None, None]),
+                  s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", pattn, vals)
+    out = out.reshape(B, nh * hd).astype(xq.dtype)
+    return out @ p["wo"]
+
+
+def mla_dense_decode(p, xq, cfg, pool_layer, cache_len, positions):
+    """Dense absorbed-MLA decode over the full latent pool slice."""
+    B, S, _ = pool_layer.shape
+    valid = jnp.arange(S, dtype=jnp.int32)[None, :] < cache_len[:, None]
+    return mla_absorbed_decode(p, xq, cfg, pool_layer,
+                               valid, positions)

@@ -1,0 +1,285 @@
+"""Whisper-style encoder-decoder with SAC on the cross-attention KV.
+
+The conv frontend is a STUB: ``input_specs`` provides precomputed frame
+embeddings [B, S_enc, D] (per the assignment).  The encoder is full
+bidirectional attention; the decoder is causal self-attention (small,
+<= 448 positions) + cross-attention over the encoder output.
+
+SAC applies to the **cross-attention KV** — the encoder side is the long
+side (32K frames): prefill encodes and writes per-decoder-layer cross-KV
+entries + indexer keys into the pool; decode fetches only the top-k
+encoder positions per layer (DESIGN.md §5).  Decoder self-KV stays local
+(dense, tiny).  Cross-attention uses no RoPE (positions=0 makes the
+rotation the identity).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import sac as sac_core
+from repro.core.pool import FetchFn, local_fetch, pool_write
+from repro.distributed.sharding import constrain
+from repro.models import dsa
+from repro.models.layers import (DTYPE, ParamSpec, attn_param_specs,
+                                 blocked_causal_attention,
+                                 dense_attention_block, init_params,
+                                 mlp_block, mlp_param_specs, repeat_kv,
+                                 rms_norm, spec_shapes)
+from repro.models.transformer import _stack, _norm
+
+MAX_DEC = 448  # whisper decoder context
+
+
+def bidir_attention(q, k, v, *, chunk: int = 1024):
+    """Non-causal blocked attention (encoder / cross).  q: [B,Sq,H,hd];
+    k,v: [B,Sk,H,hd] — online softmax over KV chunks; Sq may differ."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    n_chunks = max(Sk // chunk, 1)
+    c = Sk // n_chunks
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    kc = kf.reshape(B, H, n_chunks, c, hd).transpose(2, 0, 1, 3, 4)
+    vc = vf.reshape(B, H, n_chunks, c, hd).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj = xs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, H, Sq), -1e30, jnp.float32),
+            jnp.zeros((B, H, Sq), jnp.float32),
+            jnp.zeros((B, H, Sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+class EncDecLM:
+    """Whisper-small.  Modality frontend stubbed to frame embeddings."""
+
+    def __init__(self, cfg: ModelConfig, fetch_fn: FetchFn = local_fetch,
+                 mode: str = "sac", topk_fn=None, remat: bool = True):
+        self.cfg = cfg
+        self.fetch_fn = fetch_fn
+        self.mode = mode if cfg.sac.enabled else "dense"
+        self.topk_fn = topk_fn
+        self.remat = remat
+        self.n_kv = cfg.n_layers          # cross-KV pool layers
+        self.kv_dim = dsa.gqa_entry_dim(cfg)
+        self.specs = self._build_specs()
+
+    # -- specs ---------------------------------------------------------------
+    def _enc_layer_specs(self):
+        cfg = self.cfg
+        return {"ln1": _norm(cfg), "ln2": _norm(cfg),
+                "attn": attn_param_specs(cfg), "mlp": mlp_param_specs(cfg)}
+
+    def _dec_layer_specs(self):
+        cfg = self.cfg
+        p = {"ln1": _norm(cfg), "ln2": _norm(cfg), "ln3": _norm(cfg),
+             "self_attn": attn_param_specs(cfg),
+             "cross_attn": attn_param_specs(cfg),
+             "mlp": mlp_param_specs(cfg)}
+        if cfg.sac.enabled:
+            p["idx"] = dsa.indexer_param_specs(cfg)
+        return p
+
+    def _build_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": ParamSpec((cfg.vocab, cfg.d_model), ("V", "D")),
+            "enc": _stack(self._enc_layer_specs(), cfg.n_enc_layers),
+            "dec": _stack(self._dec_layer_specs(), cfg.n_layers),
+            "final_norm": _norm(cfg),
+            "lm_head": ParamSpec((cfg.d_model, cfg.vocab), ("D", "V")),
+        }
+
+    def init(self, key):
+        return init_params(self.specs, key)
+
+    def param_shapes(self):
+        return spec_shapes(self.specs)
+
+    # -- encoder ----------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames [B, S_enc, D] (stubbed frontend output) -> [B, S_enc, D]."""
+        cfg = self.cfg
+        x = constrain(frames.astype(DTYPE), ("B", "S", "D"))
+
+        def body(x, p):
+            xn = rms_norm(x, p["ln1"])
+            B, S, _ = xn.shape
+            nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            q = (xn @ p["attn"]["wq"]).reshape(B, S, nh, hd)
+            k = (xn @ p["attn"]["wk"]).reshape(B, S, nkv, hd)
+            v = (xn @ p["attn"]["wv"]).reshape(B, S, nkv, hd)
+            n_rep = nh // nkv
+            out = bidir_attention(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep))
+            x = x + out.reshape(B, S, nh * hd) @ p["attn"]["wo"]
+            x = constrain(x, ("B", "S", "D"))
+            x = x + mlp_block(p["mlp"], rms_norm(x, p["ln2"]))
+            return constrain(x, ("B", "S", "D")), None
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return x
+
+    # -- cross-KV entries ---------------------------------------------------------
+    def _cross_entry(self, p_dec, enc_out):
+        """Per-layer cross KV entry from encoder output (no RoPE)."""
+        cfg = self.cfg
+        zero_pos = jnp.zeros(enc_out.shape[:-1], jnp.int32)
+        return dsa.gqa_kv_entry(p_dec["cross_attn"], enc_out, cfg, zero_pos)
+
+    # -- training forward -----------------------------------------------------------
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """batch {frames [B,S,D], tokens [B,S_dec]} -> (logits, aux)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, Sd = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(DTYPE)
+        x = constrain(x, ("B", "S", "D"))
+        positions = jnp.arange(Sd, dtype=jnp.int32)[None, :].repeat(B, 0)
+        nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        n_rep = nh // nkv
+
+        def body(x, p):
+            # causal self-attn
+            h, _ = dense_attention_block(p["self_attn"], rms_norm(x, p["ln1"]),
+                                         cfg, positions)
+            x = x + h
+            # full cross-attn
+            xn = rms_norm(x, p["ln2"])
+            q = (xn @ p["cross_attn"]["wq"]).reshape(B, Sd, nh, hd)
+            k = (enc_out @ p["cross_attn"]["wk"]).reshape(
+                B, -1, nkv, hd)
+            v = (enc_out @ p["cross_attn"]["wv"]).reshape(
+                B, -1, nkv, hd)
+            out = bidir_attention(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep))
+            x = x + out.reshape(B, Sd, nh * hd) @ p["cross_attn"]["wo"]
+            x = x + mlp_block(p["mlp"], rms_norm(x, p["ln3"]))
+            return constrain(x, ("B", "S", "D")), None
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        x = rms_norm(x, params["final_norm"])
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+        return constrain(logits, ("B", "S", "V")), jnp.float32(0)
+
+    # -- prefill: encode + populate the cross-KV pool ------------------------------
+    def prefill(self, params, frames, lengths=None):
+        cfg = self.cfg
+        B, S_enc, _ = frames.shape
+        if lengths is None:
+            lengths = jnp.full((B,), S_enc, jnp.int32)
+        enc_out = self.encode(params, frames)
+
+        def collect(_, p):
+            entry = self._cross_entry(p, enc_out)
+            ikey = (dsa.indexer_keys(p["idx"], enc_out)
+                    if cfg.sac.enabled else jnp.zeros((), DTYPE))
+            return 0, (entry, ikey)
+
+        _, (entries, ikeys) = jax.lax.scan(collect, 0, params["dec"])
+        state = self._empty_state(B, S_enc)
+        state["kv_pool"] = constrain(entries.astype(DTYPE),
+                                     ("L", "B", "SP", "G"))
+        if cfg.sac.enabled and self.mode == "sac":
+            state["idx_pool"] = constrain(ikeys.astype(DTYPE),
+                                          ("L", "B", "SP", "G"))
+        state["cache_len"] = lengths
+        # decoder starts empty; BOS handled by the engine
+        logits = jnp.zeros((B, cfg.vocab), jnp.float32)
+        return state, logits
+
+    # -- decode: self-attn (local dense) + SAC cross-attn ----------------------------
+    def decode(self, params, state, tokens):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(DTYPE)
+        x = constrain(x, ("B", "D"))
+        dec_len = state["dec_len"]
+        cache_len = state["cache_len"]           # encoder lengths
+        ctx_pos = dec_len                        # decoder position
+
+        kv_pool, idx_pool = state["kv_pool"], state.get("idx_pool")
+        self_kv = state["self_kv"]               # [L, B, MAX_DEC, d]
+        zero_pos = jnp.zeros((B,), jnp.int32)
+
+        def body(x, xs):
+            p, kv_l, ik_l, skv_l = xs
+            # 1) causal self-attention over the decoder cache
+            xn = rms_norm(x, p["ln1"])
+            own = dsa.gqa_kv_entry(p["self_attn"], xn, cfg, ctx_pos)
+            delta = sac_core.dense_attend(p["self_attn"], xn, cfg, skv_l,
+                                          dec_len, ctx_pos, own)
+            x = x + delta
+            # 2) SAC cross-attention over the encoder pool
+            xn = rms_norm(x, p["ln2"])
+            cross_own = jnp.zeros((B, self.kv_dim), DTYPE)  # no new enc entry
+            if self.mode == "sac":
+                scores = dsa.indexer_scores(p["idx"], xn, ik_l, cfg)
+                idx, valid = dsa.topk_select(scores, cache_len, cfg.sac.topk)
+                fetched = self.fetch_fn(kv_l, idx)
+                delta = dsa.gqa_sparse_decode(p["cross_attn"], xn, cfg,
+                                              fetched, valid, zero_pos)
+            else:
+                S = kv_l.shape[1]
+                valid = (jnp.arange(S, dtype=jnp.int32)[None, :]
+                         < cache_len[:, None])
+                delta = dsa.gqa_sparse_decode(p["cross_attn"], xn, cfg,
+                                              kv_l, valid, zero_pos)
+            x = x + delta
+            # 3) MLP
+            x = x + mlp_block(p["mlp"], rms_norm(x, p["ln3"])[:, None, :])[:, 0]
+            return constrain(x, ("B", "D")), own
+
+        ik_xs = idx_pool if idx_pool is not None else None
+        x, self_entries = jax.lax.scan(
+            body, x, (params["dec"], kv_pool, ik_xs, self_kv))
+        state = dict(state)
+        state["self_kv"] = pool_write(self_kv, self_entries, dec_len)
+        state["dec_len"] = dec_len + 1
+        x = rms_norm(x, params["final_norm"])
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+        return state, constrain(logits, ("B", "V"))
+
+    # -- state ----------------------------------------------------------------------
+    def _empty_state(self, batch: int, seq_len: int) -> Dict:
+        cfg = self.cfg
+        state: Dict[str, Any] = {
+            "cache_len": jnp.zeros((batch,), jnp.int32),
+            "dec_len": jnp.zeros((batch,), jnp.int32),
+            "self_kv": jnp.zeros((cfg.n_layers, batch, MAX_DEC, self.kv_dim),
+                                 DTYPE),
+            "kv_pool": jnp.zeros((self.n_kv, batch, seq_len, self.kv_dim),
+                                 DTYPE),
+        }
+        if cfg.sac.enabled and self.mode == "sac":
+            state["idx_pool"] = jnp.zeros(
+                (self.n_kv, batch, seq_len, cfg.sac.d_idx), DTYPE)
+        return state
+
+    def serve_state_shapes(self, batch: int, seq_len: int) -> Dict:
+        z = self._empty_state  # reuse shapes via eval_shape (no allocation)
+        return jax.eval_shape(lambda: z(batch, seq_len))
+
+    def init_serve_state(self, batch: int, seq_len: int) -> Dict:
+        return self._empty_state(batch, seq_len)

@@ -1,0 +1,99 @@
+"""build_model(cfg) -> unified model facade + input_specs for every cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input of the (architecture x shape) cell — the
+dry-run lowers against these with zero allocation.  Modality frontends
+are stubs per the assignment: whisper takes precomputed frame embeddings,
+chameleon takes fused token ids (text + VQ image tokens share the
+embedding table).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.pool import FetchFn, local_fetch
+from repro.models.encdec import EncDecLM, MAX_DEC
+from repro.models.layers import DTYPE
+from repro.models.transformer import TransformerLM
+
+
+def build_model(cfg: ModelConfig, fetch_fn: FetchFn = local_fetch,
+                mode: str = "sac", topk_fn: Optional[Callable] = None,
+                remat: bool = True, opts: Optional[dict] = None):
+    """mode: "sac" (top-k fetch decode) | "dense" (full-prefetch decode).
+
+    opts (perf variants, see EXPERIMENTS.md §Perf):
+      moe_groups: int   — per-shard MoE dispatch groups (B1)
+      pool_closure: bool — closure-captured pools in decode scan (C1)
+    """
+    if cfg.enc_dec:
+        return EncDecLM(cfg, fetch_fn=fetch_fn, mode=mode, topk_fn=topk_fn,
+                        remat=remat)
+    return TransformerLM(cfg, fetch_fn=fetch_fn, mode=mode, topk_fn=topk_fn,
+                         remat=remat, opts=opts)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.enc_dec:
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), DTYPE),
+            "tokens": jax.ShapeDtypeStruct((B, MAX_DEC), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, MAX_DEC), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.enc_dec:
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), DTYPE)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def decode_input_specs(model, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    return {
+        "state": model.serve_state_shapes(B, S),
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model=None
+                ) -> Dict[str, Any]:
+    """All inputs for the cell's compiled step (excluding params)."""
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    if shape.kind == "decode":
+        assert model is not None, "decode specs need the built model"
+        return decode_input_specs(model, shape)
+    raise ValueError(shape.kind)
+
+
+def cell_is_supported(cfg: ModelConfig, shape: ShapeConfig, mode: str = "sac"
+                      ) -> Optional[str]:
+    """None if the (arch, shape, mode) cell runs; else a skip reason.
+
+    The skip set implements DESIGN.md §5:
+      - whisper long_500k: the 500K-frame *encode* is quadratic prefill;
+      - pure full-attention archs run long_500k only in SAC mode (dense
+        decode over 524288 entries is the O(L) full-attention read the
+        paper's technique removes — and its pool wouldn't fit one chip).
+    """
+    if shape.name == "long_500k":
+        if cfg.enc_dec:
+            return "500K-frame encoder prefill is quadratic (DESIGN.md §5)"
+        if mode == "dense" and cfg.has_attention and not cfg.ssm_state:
+            return "dense 500k decode excluded: full-attention baseline is " \
+                   "what SAC replaces (DESIGN.md §5)"
+    return None

@@ -1,0 +1,254 @@
+"""State-space / recurrent blocks: Mamba2 (SSD chunked scan) and xLSTM
+(mLSTM matrix-memory + sLSTM scalar-memory).
+
+Mamba2 follows the state-space-duality formulation: within a chunk the
+output is computed quadratically, states are passed between chunks with a
+lax.scan — O(S * N * d) total, constant-memory decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParamSpec, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg):
+    d_inner = 2 * cfg.d_model
+    head_d = 64
+    n_heads = d_inner // head_d
+    return d_inner, n_heads, head_d, cfg.ssm_state
+
+
+def mamba2_param_specs(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, nh, hd, N = mamba2_dims(cfg)
+    return {
+        "w_in": ParamSpec((d, 2 * d_inner + 2 * N + nh), ("D", "F")),  # x,z,B,C,dt
+        "conv": ParamSpec((4, d_inner), ("C4", "F"), scale=0.5),
+        "A_log": ParamSpec((nh,), ("Hm",), init="zeros"),
+        "dt_bias": ParamSpec((nh,), ("Hm",), init="zeros"),
+        "D_skip": ParamSpec((nh,), ("Hm",), init="ones"),
+        "norm_g": ParamSpec((d_inner,), ("F",), init="ones"),
+        "w_out": ParamSpec((d_inner, d), ("F", "D")),
+    }
+
+
+def _mamba2_project(p, x, cfg):
+    d_inner, nh, hd, N = mamba2_dims(cfg)
+    zxbcdt = x @ p["w_in"]
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [nh], negative
+    return z, xs, Bc, Cc, dt, A
+
+
+def _causal_conv(xs, conv_w, state=None):
+    """Depthwise causal conv, kernel 4. xs: [B, S, F]."""
+    B, S, F = xs.shape
+    k = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, k - 1, F), xs.dtype)
+    else:
+        pad = state                                              # [B, k-1, F]
+    xp = jnp.concatenate([pad, xs], axis=1)
+    out = sum(xp[:, i:i + S, :] * conv_w[i] for i in range(k))
+    new_state = xp[:, S:, :] if state is not None else xp[:, -(k - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_block(p, x, cfg, *, chunk: int = 256):
+    """Training/prefill SSD pass. x: [B, S, D] -> ([B, S, D], last_state)."""
+    B, S, D = x.shape
+    d_inner, nh, hd, N = mamba2_dims(cfg)
+    z, xs, Bc, Cc, dt, A = _mamba2_project(p, x, cfg)
+    xs, _ = _causal_conv(xs, p["conv"])
+    xh = xs.reshape(B, S, nh, hd).astype(jnp.float32)
+    n_chunks = max(S // chunk, 1)
+    Lc = S // n_chunks
+
+    # chunked SSD
+    xh_c = xh.reshape(B, n_chunks, Lc, nh, hd)
+    B_c = Bc.reshape(B, n_chunks, Lc, N).astype(jnp.float32)
+    C_c = Cc.reshape(B, n_chunks, Lc, N).astype(jnp.float32)
+    dt_c = dt.reshape(B, n_chunks, Lc, nh)
+
+    dA = dt_c * A                                                # [B,c,L,nh]
+    cum = jnp.cumsum(dA, axis=2)                                 # within-chunk logs
+
+    def chunk_body(state, inp):
+        xh_j, B_j, C_j, dA_j, cum_j = inp                        # [B,L,...]
+        # intra-chunk quadratic part
+        seg = cum_j[:, :, None, :] - cum_j[:, None, :, :]        # [B,L,L,nh]
+        Lmask = jnp.tril(jnp.ones((Lc, Lc), bool))
+        decay = jnp.where(Lmask[None, :, :, None], jnp.exp(seg), 0.0)
+        G = jnp.einsum("bln,bmn->blm", C_j, B_j)                 # [B,L,L]
+        M = G[..., None] * decay * dA_j[:, None, :, :]           # [B,L,L,nh] (dt in B-side)
+        y_intra = jnp.einsum("blmh,bmhd->blhd", M, xh_j)
+        # contribution of carried state
+        state_decay = jnp.exp(cum_j)                             # [B,L,nh]
+        y_state = jnp.einsum("bln,bhnd,blh->blhd", C_j, state, state_decay)
+        # new state
+        chunk_decay = jnp.exp(cum_j[:, -1:, :] - cum_j)          # [B,L,nh]
+        wB = B_j[:, :, None, :] * (dA_j * chunk_decay)[..., None]  # [B,L,nh,N]
+        new_state = state * jnp.exp(cum_j[:, -1, :])[..., None, None] \
+            + jnp.einsum("blhn,blhd->bhnd", wB, xh_j)
+        return new_state, y_intra + y_state
+
+    init = jnp.zeros((B, nh, N, hd), jnp.float32)
+    xs_in = (xh_c.transpose(1, 0, 2, 3, 4), B_c.transpose(1, 0, 2, 3),
+             C_c.transpose(1, 0, 2, 3), dt_c.transpose(1, 0, 2, 3),
+             cum.transpose(1, 0, 2, 3))
+    last_state, ys = jax.lax.scan(chunk_body, init, xs_in)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+    y = y + xh * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"])
+    return y @ p["w_out"], last_state
+
+
+def mamba2_decode(p, x, cfg, state):
+    """Single-step update. x: [B, D]; state: (ssm [B,nh,N,hd] f32, conv [B,3,F])."""
+    ssm_state, conv_state = state
+    B, D = x.shape
+    d_inner, nh, hd, N = mamba2_dims(cfg)
+    z, xs, Bc, Cc, dt, A = _mamba2_project(p, x[:, None, :], cfg)
+    xs, conv_state = _causal_conv(xs, p["conv"], conv_state)
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    dA = jnp.exp(dt[:, 0] * A)                                   # [B,nh]
+    Bf = Bc[:, 0].astype(jnp.float32)                            # [B,N]
+    Cf = Cc[:, 0].astype(jnp.float32)
+    ssm_state = ssm_state * dA[..., None, None] + \
+        jnp.einsum("bn,bh,bhd->bhnd", Bf, dt[:, 0], xh)
+    y = jnp.einsum("bn,bhnd->bhd", Cf, ssm_state)
+    y = y + xh * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, 0]), p["norm_g"])
+    return y @ p["w_out"], (ssm_state, conv_state)
+
+
+def mamba2_state_shape(cfg, B):
+    d_inner, nh, hd, N = mamba2_dims(cfg)
+    return ((B, nh, N, hd), (B, 3, d_inner))
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) + sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_param_specs(cfg) -> Dict[str, ParamSpec]:
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    return {
+        "wq": ParamSpec((d, d), ("D", "H")),
+        "wk": ParamSpec((d, d), ("D", "H")),
+        "wv": ParamSpec((d, d), ("D", "H")),
+        "wi": ParamSpec((d, nh), ("D", "Hm")),
+        "wf": ParamSpec((d, nh), ("D", "Hm")),
+        "wo_gate": ParamSpec((d, d), ("D", "H")),
+        "w_out": ParamSpec((d, d), ("H", "D")),
+        "norm_g": ParamSpec((d,), ("H",), init="ones"),
+    }
+
+
+def mlstm_block(p, x, cfg):
+    """Parallel (training) mLSTM: decayed linear attention. x: [B,S,D]."""
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    hd = D // nh
+    q = (x @ p["wq"]).reshape(B, S, nh, hd).astype(jnp.float32) / np.sqrt(hd)
+    k = (x @ p["wk"]).reshape(B, S, nh, hd).astype(jnp.float32) / np.sqrt(hd)
+    v = (x @ p["wv"]).reshape(B, S, nh, hd).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid((x @ p["wf"]).astype(jnp.float32))   # [B,S,nh]
+    logi = (x @ p["wi"]).astype(jnp.float32)
+    F = jnp.cumsum(logf, axis=1)
+    # D_ts = exp(F_t - F_s + i_s) stabilized, causal
+    logD = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]  # [B,t,s,nh]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=2, keepdims=True)
+    Dmat = jnp.exp(logD - m)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * Dmat
+    norm = jnp.maximum(jnp.abs(scores.sum(2)), jnp.exp(-m[:, :, 0, :]))  # [B,t,nh]
+    y = jnp.einsum("btsh,bshd->bthd", scores, v) / norm[..., None]
+    y = rms_norm(y.reshape(B, S, D).astype(x.dtype), p["norm_g"])
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    return (y * o) @ p["w_out"]
+
+
+def mlstm_decode(p, x, cfg, state):
+    """Recurrent mLSTM step. state: (C [B,nh,hd,hd], n [B,nh,hd], m [B,nh])."""
+    C, n, mprev = state
+    B, D = x.shape
+    nh = cfg.n_heads
+    hd = D // nh
+    q = (x @ p["wq"]).reshape(B, nh, hd).astype(jnp.float32) / np.sqrt(hd)
+    k = (x @ p["wk"]).reshape(B, nh, hd).astype(jnp.float32) / np.sqrt(hd)
+    v = (x @ p["wv"]).reshape(B, nh, hd).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid((x @ p["wf"]).astype(jnp.float32))
+    logi = (x @ p["wi"]).astype(jnp.float32)
+    m_new = jnp.maximum(logf + mprev, logi)
+    fg = jnp.exp(logf + mprev - m_new)
+    ig = jnp.exp(logi - m_new)
+    C = C * fg[..., None, None] + ig[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = n * fg[..., None] + ig[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, D).astype(x.dtype)
+    y = rms_norm(y, p["norm_g"])
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    return (y * o) @ p["w_out"], (C, n, m_new)
+
+
+def slstm_param_specs(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    return {
+        "w_zifo": ParamSpec((d, 4 * d), ("D", "F")),
+        "r_zifo": ParamSpec((d, 4 * d), ("D", "F"), scale=0.5),
+        "norm_g": ParamSpec((d,), ("H",), init="ones"),
+        "w_out": ParamSpec((d, d), ("H", "D")),
+    }
+
+
+def _slstm_step(p, carry, x_t):
+    h, c, n, m = carry                                            # [B,D] f32 each
+    D = h.shape[-1]
+    g = (x_t @ p["w_zifo"]).astype(jnp.float32) + h.astype(x_t.dtype) @ p["r_zifo"]
+    z, i, f, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    m_new = jnp.maximum(f + m, i)
+    ig = jnp.exp(i - m_new)
+    fg = jnp.exp(f + m - m_new)
+    c = fg * c + ig * jnp.tanh(z)
+    n = fg * n + ig
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)
+    return (h, c, n, m_new)
+
+
+def slstm_block(p, x, cfg):
+    """Sequential sLSTM over time (lax.scan). x: [B,S,D]."""
+    B, S, D = x.shape
+    init = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(4))
+
+    def body(carry, x_t):
+        new = _slstm_step(p, carry, x_t)
+        return new, new[0]
+
+    _, hs = jax.lax.scan(body, init, x.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    return rms_norm(y, p["norm_g"]) @ p["w_out"]
+
+
+def slstm_decode(p, x, cfg, state):
+    new = _slstm_step(p, state, x)
+    y = rms_norm(new[0].astype(x.dtype), p["norm_g"]) @ p["w_out"]
+    return y, new

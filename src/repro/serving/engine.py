@@ -1,0 +1,209 @@
+"""Decode engine: continuous batching over the SAC cache — the *real*
+JAX serving path (compiled prefill/decode steps + host-side SACSystem
+bookkeeping), runnable end-to-end on CPU with reduced configs.
+
+This is the functional counterpart of the simulator: the simulator
+answers "what would the cluster do", the engine actually *does* it for
+small models — real top-k selection, real pool reads/writes, real radix
+prefix reuse, and fabric-time accounting via core.transfer (cold-read
+convention: every step is charged the full top-k transfer; the HiSparse
+hot-buffer saving is modeled in the simulator, grounded against the
+functional buffer in tests/test_hisparse.py::test_hit_rate_grounding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import hisparse
+from repro.core.sac import SACSystem
+from repro.models.model import build_model
+from repro.serving.radix import RadixIndex
+from repro.serving.request import Request, summarize
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens: int = 0
+    pool_entries_fetched: int = 0
+    buffer_hits: int = 0
+    buffer_misses: int = 0
+    radix_hit_tokens: int = 0
+    fabric_time_s: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.buffer_hits + self.buffer_misses
+        return self.buffer_hits / tot if tot else 0.0
+
+
+class Engine:
+    """Fixed-slot continuous batching engine.
+
+    ``slots`` requests decode together in one compiled step; finished
+    slots are refilled from the queue (prefill on demand, with radix
+    prefix reuse).  The pool state is the serve_state pytree of
+    models/transformer.py; per-slot independence is guaranteed by the
+    batch dimension.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, slots: int = 4,
+                 max_ctx: int = 256, backend: str = "cxl",
+                 mode: str = "sac", track_buffer: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_ctx = max_ctx
+        self.model = build_model(cfg, mode=mode)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.sac = SACSystem(cfg, backend=backend)
+        self.radix = RadixIndex(page_size=cfg.sac.page_size)
+        self.stats = EngineStats()
+
+        self._decode = jax.jit(self.model.decode)
+        self._prefill_one = jax.jit(
+            lambda p, toks: self.model.prefill(p, toks))
+        self.state = self.model.init_serve_state(slots, max_ctx)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_tokens: List[List[int]] = [[] for _ in range(slots)]
+        self.queue: List[Request] = []
+
+    # -- submission --------------------------------------------------------------
+    def submit(self, req: Request):
+        assert req.prompt_tokens is not None, "engine needs real tokens"
+        assert req.context_len + req.output_len <= self.max_ctx, \
+            "request exceeds engine max_ctx"
+        self.queue.append(req)
+
+    # -- slot refill -------------------------------------------------------------
+    def _fill_slots(self, now: float):
+        for s in range(self.slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            req.dispatch_s = now
+            prompt = req.prompt_tokens[: req.context_len]
+            # radix prefix lookup (page-aligned reuse accounting)
+            matched, _ = self.radix.match_prefix(prompt.tolist())
+            self.stats.radix_hit_tokens += matched
+            rp = self.sac.place(req.request_id, len(prompt) + req.output_len)
+            req.pool_device = rp.device if rp else 0
+            # prefill this slot (batch of 1), splice into the shared state
+            st, _ = self._prefill_one(self.params, prompt[None, :])
+            self._splice_state(s, st, len(prompt))
+            # charge the pool write (prefill write path)
+            self.stats.fabric_time_s += self.sac.write_back_time(len(prompt))
+            page_tokens = (len(prompt) // self.cfg.sac.page_size) \
+                * self.cfg.sac.page_size
+            if page_tokens:
+                self.radix.insert(prompt[:page_tokens].tolist(),
+                                  req.pool_device,
+                                  list(range(page_tokens
+                                             // self.cfg.sac.page_size)))
+            self.slot_req[s] = req
+            self.slot_tokens[s] = [int(prompt[-1])]
+
+    def _splice_state(self, slot: int, st_one: Dict, length: int):
+        """Copy a 1-batch prefill state into slot ``slot`` of the engine
+        state (padding the sequence axis up to max_ctx).  Dispatch is
+        key-aware: pools are [L, B, S, d] (batch axis 1, padded S),
+        cache lengths are [B], recurrent states have a unique axis where
+        dst == slots and src == 1."""
+        def splice_pool(dst, src):
+            pad = dst.shape[2] - src.shape[2]
+            if pad:
+                padding = [(0, 0)] * src.ndim
+                padding[2] = (0, pad)
+                src = jnp.pad(src, padding)
+            return dst.at[:, slot].set(src[:, 0])
+
+        def splice_rec(dst, src):
+            for ax in range(dst.ndim):
+                if dst.shape[ax] == self.slots and src.shape[ax] == 1:
+                    idx = [slice(None)] * dst.ndim
+                    idx[ax] = slot
+                    src_idx = [slice(None)] * src.ndim
+                    src_idx[ax] = 0
+                    return dst.at[tuple(idx)].set(src[tuple(src_idx)])
+            return dst
+
+        new_state = dict(self.state)
+        for key, dst in self.state.items():
+            src = st_one[key]
+            if key in ("kv_pool", "idx_pool", "self_kv"):
+                new_state[key] = splice_pool(dst, src)
+            elif key in ("cache_len", "dec_len"):
+                new_state[key] = dst.at[slot].set(src[0])
+            else:  # rec_* pytrees
+                new_state[key] = jax.tree.map(splice_rec, dst, src)
+        self.state = new_state
+
+    # -- stepping -----------------------------------------------------------------
+    def step(self, now: float = 0.0) -> List[Request]:
+        """One decode step for all occupied slots; returns finished reqs."""
+        self._fill_slots(now)
+        if not any(r is not None for r in self.slot_req):
+            return []
+        tokens = jnp.array(
+            [(toks[-1] if toks else 0) for toks in self.slot_tokens],
+            jnp.int32)
+        prev_len = np.asarray(self.state["cache_len"])
+        self.state, logits = self._decode(self.params, self.state, tokens)
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        self.stats.steps += 1
+
+        # fabric accounting: each occupied slot fetched k entries per layer
+        occupied = [s for s in range(self.slots) if self.slot_req[s]]
+        if self.cfg.sac.enabled and self.model.mode == "sac":
+            k = min(self.cfg.sac.topk, self.max_ctx)
+            n_layers = max(getattr(self.model, "n_kv", 1), 1)
+            for s in occupied:
+                n = k * n_layers
+                self.stats.pool_entries_fetched += n
+                self.stats.fabric_time_s += self.sac.sparse_fetch_time(
+                    min(n, int(prev_len[s]) * n_layers or 1))
+
+        finished = []
+        for s in occupied:
+            req = self.slot_req[s]
+            self.slot_tokens[s].append(int(next_tokens[s]))
+            req.generated += 1
+            if req.first_token_s < 0:
+                req.first_token_s = now
+            self.stats.tokens += 1
+            if req.generated >= req.output_len:
+                req.finish_s = now
+                finished.append(req)
+                self.sac.release(req.request_id)
+                self.slot_req[s] = None
+                self.slot_tokens[s] = []
+                # reset this slot's cache length so the next request starts
+                # fresh (pool pages are overwritten by the next prefill)
+                self.state["cache_len"] = \
+                    self.state["cache_len"].at[s].set(0)
+        return finished
+
+    def run(self, requests: List[Request], *, max_steps: int = 10_000
+            ) -> Dict[str, float]:
+        for r in requests:
+            self.submit(r)
+        t0 = time.time()
+        done = 0
+        while done < len(requests) and self.stats.steps < max_steps:
+            finished = self.step(now=time.time() - t0)
+            done += len(finished)
+            if not finished and not any(self.slot_req) and not self.queue:
+                break
+        out = summarize(requests)
+        out.update(engine_steps=self.stats.steps,
+                   engine_tokens=self.stats.tokens,
+                   radix_hit_tokens=self.stats.radix_hit_tokens,
+                   fabric_time_s=self.stats.fabric_time_s)
+        return out

@@ -1,0 +1,155 @@
+"""Radix prefix cache over pool pages (paper §A.3: custom Radix Cache
+integration within HiSparse; KV fully offloaded to the pool backend).
+
+Token sequences are interned in a radix tree whose edges carry token-id
+chunks; every node maps a page-aligned prefix to pool pages.  Lookup
+returns the longest cached prefix (page granular) so prefill can skip
+recomputation (Round-2 "cache hit" scenario = full hit).  Eviction is
+LRU by leaf with reference counting — pages pinned by in-flight requests
+are never evicted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class _Node:
+    node_id: int
+    edge: Tuple[int, ...] = ()                    # tokens on the edge in
+    pages: List[int] = dataclasses.field(default_factory=list)
+    device: int = -1
+    children: Dict[int, "_Node"] = dataclasses.field(default_factory=dict)
+    parent: Optional["_Node"] = None
+    refs: int = 0
+    last_use: float = 0.0
+
+    def depth_tokens(self) -> int:
+        n, d = self, 0
+        while n is not None:
+            d += len(n.edge)
+            n = n.parent
+        return d
+
+
+class RadixIndex:
+    """page_size-granular radix tree: prefix tokens -> (device, pages)."""
+
+    def __init__(self, page_size: int = 16):
+        self.page_size = page_size
+        self.root = _Node(0)
+        self._ids = itertools.count(1)
+        self._clock = itertools.count(1)
+
+    # -- lookup ---------------------------------------------------------------
+    def match_prefix(self, tokens: Sequence[int]
+                     ) -> Tuple[int, List[Tuple[int, List[int]]]]:
+        """Longest cached page-aligned prefix.
+
+        Returns (n_tokens_matched, [(device, pages), ...] along the path).
+        """
+        node = self.root
+        i = 0
+        out: List[Tuple[int, List[int]]] = []
+        toks = tuple(tokens)
+        while True:
+            nxt = node.children.get(toks[i]) if i < len(toks) else None
+            if nxt is None:
+                break
+            el = len(nxt.edge)
+            if toks[i:i + el] != nxt.edge:
+                break
+            i += el
+            node = nxt
+            node.last_use = next(self._clock)
+            if node.pages:
+                out.append((node.device, node.pages))
+        return i, out
+
+    # -- insert ---------------------------------------------------------------
+    def insert(self, tokens: Sequence[int], device: int, pages: List[int]
+               ) -> None:
+        """Register ``tokens`` (page-aligned length) as cached with pages."""
+        toks = tuple(tokens)
+        assert len(toks) % self.page_size == 0, "insert page-aligned prefixes"
+        node = self.root
+        i = 0
+        while i < len(toks):
+            nxt = node.children.get(toks[i])
+            if nxt is None:
+                child = _Node(next(self._ids), edge=toks[i:], parent=node)
+                node.children[toks[i]] = child
+                node = child
+                i = len(toks)
+                break
+            # walk common prefix of edge
+            el = len(nxt.edge)
+            common = 0
+            while (common < el and i + common < len(toks)
+                   and nxt.edge[common] == toks[i + common]):
+                common += 1
+            if common == el:
+                node = nxt
+                i += el
+                continue
+            # split edge at `common`
+            mid = _Node(next(self._ids), edge=nxt.edge[:common], parent=node)
+            node.children[toks[i]] = mid
+            nxt.edge = nxt.edge[common:]
+            nxt.parent = mid
+            mid.children[nxt.edge[0]] = nxt
+            # move pages proportionally? pages stay with the deeper node
+            node = mid
+            i += common
+        node.pages = list(pages)
+        node.device = device
+        node.last_use = next(self._clock)
+
+    # -- pin / release ------------------------------------------------------------
+    def pin(self, tokens: Sequence[int]) -> None:
+        self._walk_refs(tokens, +1)
+
+    def release(self, tokens: Sequence[int]) -> None:
+        self._walk_refs(tokens, -1)
+
+    def _walk_refs(self, tokens: Sequence[int], delta: int) -> None:
+        node = self.root
+        i = 0
+        toks = tuple(tokens)
+        while i < len(toks):
+            nxt = node.children.get(toks[i])
+            if nxt is None or toks[i:i + len(nxt.edge)] != nxt.edge:
+                break
+            nxt.refs = max(0, nxt.refs + delta)
+            i += len(nxt.edge)
+            node = nxt
+
+    # -- eviction -------------------------------------------------------------------
+    def evict_lru(self, n_leaves: int = 1) -> List[Tuple[int, List[int]]]:
+        """Drop up to n unpinned LRU leaves; returns freed (device, pages)."""
+        freed: List[Tuple[int, List[int]]] = []
+        for _ in range(n_leaves):
+            leaves = [n for n in self._all_nodes()
+                      if not n.children and n.refs == 0 and n is not self.root]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.last_use)
+            if victim.pages:
+                freed.append((victim.device, victim.pages))
+            parent = victim.parent
+            if parent is not None:
+                parent.children.pop(victim.edge[0], None)
+        return freed
+
+    def _all_nodes(self):
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    def n_cached_tokens(self) -> int:
+        return sum(len(n.pages) * self.page_size for n in self._all_nodes())

@@ -1,0 +1,360 @@
+"""Event-driven cluster simulator for disaggregated sparse-attention serving.
+
+Reproduces the paper's evaluation (Figs 9-14) on the calibrated fabric
+models of core/transfer.py.  One simulated server = ``n_lanes`` DP-attention
+decode lanes (paper: 8xH20, TP8 + DP-attention 8) + a prefill stage +
+a disaggregated pool backend.
+
+Backend semantics (the crux of the paper):
+
+  - **cxl** (SAC): no prefetch.  Every decode step, each request fetches
+    its per-layer top-k *misses* straight from the pool; per-pool-device
+    links serialize their demand (interleaving spreads requests).
+  - **rdma**: full-prefetch.  A request only becomes decodable after its
+    ENTIRE prefix KV crosses the NIC (FIFO, shared aggregate bandwidth) —
+    the transmission bottleneck (P1); resident KV consumes local DRAM —
+    the memory wall (P2).  During decode, swap-in traffic contends with
+    ongoing prefetch traffic on the PCIe bus (paper §5.1: 1.8x TBT).
+  - **dram**: non-disaggregated upper bound — pool in local DRAM.
+  - **hbm**: GPU-only baseline — zero fetch cost but KV capacity caps the
+    resident batch (fig 12 plateau).
+
+The decode-step cost model:
+  t_step = t_weights + t_batch_compute + max(0, t_fetch - overlap * t_weights)
+  t_fetch = max over pool devices of (sum of that device's miss bytes / bw)
+
+The HiSparse hot-buffer hit model: consecutive-step top-k sets overlap
+heavily; a buffer of ``buf`` entries (per layer per request) retains
+``h = rho(ctx) * buf / (buf + topk)`` of each step's top-k, where rho
+decays slowly with context (score drift grows with more candidates).
+Calibrated against the real HiSparse implementation (core/hisparse.py)
+in tests/test_hit_model.py.
+"""
+from __future__ import annotations
+
+REARRANGE_BW = 10e9       # page-first -> layer-first re-layout engine (P1)
+
+import dataclasses
+import math
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.serving.request import Request, summarize
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+# ---------------------------------------------------------------------------
+# profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """Decode/prefill cost constants for one served model."""
+    name: str
+    n_attn_layers: int
+    topk: int
+    entry_bytes: int
+    weights_bytes_per_gpu: float      # resident weights read per step
+    hbm_bw_Bps: float = 4.0e12        # H20
+    flops_per_gpu: float = 148e12     # H20 bf16 dense
+    flops_eff: float = 0.45
+    active_params: float = 37e9       # per-token FLOPs = 2 * this
+    n_lanes: int = 8                  # DP-attention width
+
+    @property
+    def base_step_s(self) -> float:
+        return self.weights_bytes_per_gpu / self.hbm_bw_Bps
+
+    def per_token_compute_s(self) -> float:
+        """Marginal decode compute per token across the whole server
+        (MoE/FFN is TP over all GPUs; attention DP over lanes)."""
+        flops = 2 * self.active_params \
+            + 2 * self.n_attn_layers * self.topk * self.entry_bytes  # attn
+        return flops / (self.n_lanes * self.flops_per_gpu * self.flops_eff)
+
+    def prefill_s(self, ctx: int) -> float:
+        """Compute-bound prefill of a ctx-token prompt on one lane group."""
+        flops = 2 * self.active_params * ctx \
+            + self.n_attn_layers * self.topk * ctx * 600  # indexer+sparse attn
+        return flops / (self.n_lanes * self.flops_per_gpu * self.flops_eff)
+
+    def kv_bytes_per_token(self) -> float:
+        return self.n_attn_layers * self.entry_bytes
+
+
+def profile_from_config(cfg: ModelConfig, **kw) -> ModelProfile:
+    entry = cfg.kv_bytes_per_token_layer
+    quant = 0.5 if cfg.name.startswith("deepseek") else 2.0  # AWQ-4bit paper
+    weights = cfg.param_count() * quant / kw.pop("n_gpus", 8)
+    return ModelProfile(
+        name=cfg.name, n_attn_layers=max(cfg.n_attn_layers, 1),
+        topk=cfg.sac.topk, entry_bytes=entry,
+        weights_bytes_per_gpu=weights,
+        active_params=cfg.active_param_count(), **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendProfile:
+    name: str                          # cxl | rdma | dram | hbm
+    fetch_bw_Bps: float                # per pool device (cxl) / bus (dram)
+    n_pool_devices: int = 2
+    interleave: bool = True
+    prefetch: bool = False             # full-prefetch before decode (rdma)
+    nic_bw_Bps: float = 100e9          # pool-node egress bandwidth
+    pcie_contention: float = 0.45      # swap-bw fraction lost during prefetch
+    local_dram_bytes: float = 2e12
+    hbm_kv_bytes: float = float("inf")
+    fetch_base_s: float = 1e-6         # per-step fabric setup
+    layer_latency_s: float = 10e-6     # per-layer swap-in launch + fabric
+                                       # round-trip (CXL pays the switch hop)
+    admit_overhead_s: float = 0.08     # scheduling + metadata ops per request
+                                       # (CXL: load/store metadata §4.3.1;
+                                       #  RDMA: RPC metadata service)
+
+
+def default_backends(**overrides) -> Dict[str, BackendProfile]:
+    """Paper §A.2 hardware: 2x CXL Type-3 devices behind an XConn switch
+    (PCIe5 x8 links), loopback RNIC pool (100 Gb/s per NIC — the pool
+    node's egress is the shared bottleneck), 2 TB local DRAM, 8x H20."""
+    b = {
+        "cxl": BackendProfile("cxl", fetch_bw_Bps=32e9, n_pool_devices=2,
+                              layer_latency_s=25e-6, admit_overhead_s=0.15),
+        "rdma": BackendProfile("rdma", fetch_bw_Bps=90e9, n_pool_devices=1,
+                               prefetch=True, interleave=False,
+                               nic_bw_Bps=14e9, pcie_contention=0.95,
+                               layer_latency_s=10e-6, admit_overhead_s=0.25),
+        "dram": BackendProfile("dram", fetch_bw_Bps=90e9, n_pool_devices=2,
+                               interleave=True, layer_latency_s=12e-6,
+                               admit_overhead_s=0.18),
+        "hbm": BackendProfile("hbm", fetch_bw_Bps=4e12, n_pool_devices=1,
+                              hbm_kv_bytes=45e9 * 8, interleave=False,
+                              layer_latency_s=2e-6, admit_overhead_s=0.18),
+    }
+    for k, v in overrides.items():
+        b[k] = v
+    return b
+
+
+# ---------------------------------------------------------------------------
+# HiSparse hot-buffer hit model
+# ---------------------------------------------------------------------------
+
+
+def hit_rate(buf: int, topk: int, ctx: int, *, miss_base: float = 0.10,
+             ctx_slope: float = 0.35, miss_floor: float = 0.004) -> float:
+    """Fraction of a step's top-k served from the device buffer.
+
+    Consecutive decode steps' top-k sets overlap heavily (the salient
+    context drifts slowly); a buffer of ``buf`` entries retains roughly
+    the last ``buf/topk`` steps' selections, and the recurrence
+    probability of an entry last used ``j`` steps ago decays ~1/j — so
+    the miss mass beyond the buffer horizon scales ~(topk/buf)^2.
+    Longer contexts spread indexer scores over more candidates (more
+    churn): misses grow log-linearly in context.  ``miss_floor`` is the
+    fresh-context fraction (never-before-selected positions).
+    Calibrated against the real HiSparse buffer (core/hisparse.py) in
+    tests/test_hisparse.py.
+    """
+    if buf <= 0:
+        return 0.0
+    ratio = topk / buf
+    miss = (miss_base * ratio * ratio
+            * (1.0 + ctx_slope * math.log2(max(ctx, 16384) / 16384))
+            + miss_floor)
+    return max(0.0, 1.0 - min(miss, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimConfig:
+    concurrency: int = 64
+    device_buffer: int = 6144
+    overlap_frac: float = 0.0          # fetch/compute overlap (off: swap-in
+                                       # is on the per-layer critical path)
+    round1: bool = False               # cold cache: prefill + write first
+    prefill_concurrency: int = 8
+    max_sim_s: float = 1e5
+
+
+class _Prefetch:
+    """FIFO bulk-transfer queue over a shared link (the RDMA NIC)."""
+
+    def __init__(self, bw_Bps: float):
+        self.bw = bw_Bps
+        self.queue: deque = deque()    # (request_id, bytes_left)
+        self.inflight_bytes = 0.0
+
+    def enqueue(self, rid: int, n_bytes: float):
+        self.queue.append([rid, n_bytes])
+        self.inflight_bytes += n_bytes
+
+    def advance(self, dt: float) -> List[int]:
+        """Progress by dt seconds; return completed request ids."""
+        budget = self.bw * dt
+        done = []
+        while self.queue and budget > 0:
+            head = self.queue[0]
+            take = min(head[1], budget)
+            head[1] -= take
+            budget -= take
+            self.inflight_bytes -= take
+            if head[1] <= 1e-6:
+                done.append(head[0])
+                self.queue.popleft()
+        return done
+
+    def busy(self) -> bool:
+        return bool(self.queue)
+
+    def eta_next(self) -> float:
+        if not self.queue:
+            return float("inf")
+        return self.queue[0][1] / self.bw
+
+
+def simulate(reqs: List[Request], model: ModelProfile,
+             backend: BackendProfile, sim: SimConfig) -> Dict[str, float]:
+    """Run the trace to completion; returns summarize() metrics."""
+    # deep-copy request records so traces can be reused across backends
+    reqs = [dataclasses.replace(r) for r in reqs]
+    sched = Scheduler(SchedulerConfig(
+        concurrency=sim.concurrency,
+        n_pool_devices=backend.n_pool_devices,
+        interleave=backend.interleave,
+        pool_device_bytes=backend.local_dram_bytes / backend.n_pool_devices
+        if backend.name != "hbm" else float("inf"),
+        local_dram_bytes=(backend.local_dram_bytes if backend.prefetch
+                          else float("inf")),
+        hbm_kv_bytes=backend.hbm_kv_bytes,
+        bytes_per_token=model.kv_bytes_per_token(),
+    ))
+    prefetch = _Prefetch(backend.nic_bw_Bps)
+    rearrange = _Prefetch(REARRANGE_BW)
+    t = 0.0
+    arrivals = deque(sorted(reqs, key=lambda r: r.arrival_s))
+    waiting_prefetch: Dict[int, Request] = {}
+    decoding: Dict[int, Request] = {}
+    prefill_q: deque = deque()
+    prefill_done: List[Tuple[float, Request]] = []
+    prefill_busy_until = [0.0] * max(sim.prefill_concurrency, 1)
+    n_done = 0
+    h = hit_rate(sim.device_buffer, model.topk, reqs[0].context_len)
+    miss_bytes = model.n_attn_layers * model.topk * (1 - h) \
+        * model.entry_bytes
+
+    def admit_ready(now: float):
+        for r in sched.try_admit(now):
+            if sim.round1:
+                prefill_q.append(r)
+            elif backend.prefetch:
+                prefetch.enqueue(
+                    r.request_id, r.context_len * model.kv_bytes_per_token())
+                waiting_prefetch[r.request_id] = r
+            else:
+                decoding[r.request_id] = r
+
+    while n_done < len(reqs) and t < sim.max_sim_s:
+        # arrivals
+        while arrivals and arrivals[0].arrival_s <= t:
+            sched.submit(arrivals.popleft())
+        admit_ready(t)
+
+        # prefill stage (round 1): assign queued requests to free lanes
+        if sim.round1:
+            for i in range(len(prefill_busy_until)):
+                if prefill_busy_until[i] <= t and prefill_q:
+                    r = prefill_q.popleft()
+                    dur = model.prefill_s(r.context_len)
+                    # pool write (layer-wise bulk) on the backend fabric
+                    wb = r.context_len * model.kv_bytes_per_token()
+                    dur += wb / (backend.fetch_bw_Bps
+                                 * backend.n_pool_devices)
+                    prefill_busy_until[i] = t + dur
+                    r.first_token_s = t + dur      # TTFT = prefill completion
+                    r.generated = 1
+                    prefill_done.append((t + dur, r))
+            for ready, r in list(prefill_done):
+                if ready <= t:
+                    decoding[r.request_id] = r
+                    prefill_done.remove((ready, r))
+
+        if not decoding:
+            # jump to the next event
+            cands = []
+            if arrivals:
+                cands.append(arrivals[0].arrival_s)
+            if prefetch.busy():
+                cands.append(t + prefetch.eta_next())
+            if rearrange.busy():
+                cands.append(t + rearrange.eta_next())
+            if sim.round1 and prefill_done:
+                cands.append(min(rd for rd, _ in prefill_done))
+            if sim.round1 and prefill_q:
+                cands.append(min(prefill_busy_until))
+            nxt = min(cands, default=t)
+            if nxt <= t or nxt == float("inf"):
+                break
+            for rid in prefetch.advance(nxt - t):
+                rearrange.enqueue(
+                    rid, waiting_prefetch[rid].context_len
+                    * model.kv_bytes_per_token())
+            for rid in rearrange.advance(nxt - t):
+                decoding[rid] = waiting_prefetch.pop(rid)
+            t = nxt
+            continue
+
+        # ---- one decode step over the active batch ----
+        batch = len(decoding)
+        t_comp = model.base_step_s + batch * model.per_token_compute_s()
+        # fetch demand per pool device
+        if backend.name == "hbm":
+            t_fetch = 0.0
+        else:
+            demand = [0.0] * backend.n_pool_devices
+            for r in decoding.values():
+                demand[r.pool_device % backend.n_pool_devices] += miss_bytes
+            bw = backend.fetch_bw_Bps
+            if backend.prefetch and (prefetch.busy() or rearrange.busy()):
+                bw *= (1 - backend.pcie_contention)   # PCIe bus contention
+            t_fetch = (max(demand) / bw + backend.fetch_base_s
+                       + model.n_attn_layers * backend.layer_latency_s)
+        dt = t_comp + max(0.0, t_fetch - sim.overlap_frac * t_comp)
+        t += dt
+
+        # prefetch progress during the step; completed transfers queue for
+        # the page-first -> layer-first rearrangement engine (P1)
+        for rid in prefetch.advance(dt):
+            rearrange.enqueue(
+                rid, waiting_prefetch[rid].context_len
+                * model.kv_bytes_per_token())
+        for rid in rearrange.advance(dt):
+            decoding[rid] = waiting_prefetch.pop(rid)
+
+        # token accounting
+        finished = []
+        for r in decoding.values():
+            r.generated += 1
+            if r.first_token_s < 0:
+                r.first_token_s = t + backend.admit_overhead_s
+            if r.generated >= r.output_len:
+                r.finish_s = t
+                finished.append(r)
+        for r in finished:
+            decoding.pop(r.request_id, None)
+            sched.finish(r)
+            n_done += 1
+
+    return summarize(reqs)
+
+
+def run_backend_sweep(reqs: List[Request], model: ModelProfile,
+                      backends: Dict[str, BackendProfile], sim: SimConfig
+                      ) -> Dict[str, Dict[str, float]]:
+    return {name: simulate(reqs, model, b, sim)
+            for name, b in backends.items()}

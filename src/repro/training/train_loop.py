@@ -1,0 +1,98 @@
+"""jit'd training step: grad accumulation (scan over microbatches),
+remat'd forward, grad clip + AdamW, metrics.
+
+``make_train_step(model, opt_cfg, grad_accum)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for pjit with the TRAIN_RULES shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import OptConfig, adamw_update
+
+AUX_COEF = 0.01  # MoE load-balance loss weight
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits [B,S,V] f32, labels [B,S] int32 -> mean loss (one-hot dot:
+    no gather over the vocab-sharded axis)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(logz - label_logit)
+
+
+def make_loss_fn(model) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        if cfg.enc_dec:
+            logits, aux = model.forward(
+                params, {"frames": batch["frames"], "tokens": batch["tokens"]})
+        else:
+            logits, aux = model.forward(params, batch["tokens"])
+        loss = cross_entropy(logits, batch["labels"])
+        return loss + AUX_COEF * aux, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model, opt_cfg: OptConfig, grad_accum: int = 1
+                    ) -> Callable:
+    loss_fn = make_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            # reshape [B, ...] -> [accum, B/accum, ...]; scan accumulates
+            def split(x):
+                return x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (_, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + m["loss"], aux_acc + m["aux"]), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0), jnp.float32(0)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = {"loss": loss_sum / grad_accum,
+                       "aux": aux_sum / grad_accum}
+
+        params, opt_state, stats = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(model, params, opt_state, batches, opt_cfg: OptConfig,
+               *, steps: int, grad_accum: int = 1,
+               checkpoint_fn: Callable = None, checkpoint_every: int = 0,
+               log_every: int = 10) -> Tuple[Any, Any, list]:
+    """Host loop: iterate batches, call the jit'd step, checkpoint."""
+    step_fn = jax.jit(make_train_step(model, opt_cfg, grad_accum),
+                      donate_argnums=(0, 1))
+    history = []
+    for i in range(steps):
+        batch = next(batches)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            history.append({k: float(v) for k, v in metrics.items()})
+        if checkpoint_fn and checkpoint_every and (i + 1) % checkpoint_every == 0:
+            checkpoint_fn(params, opt_state, i + 1)
+    return params, opt_state, history

@@ -1,0 +1,100 @@
+"""core/: transfer fabric calibration (Fig 5), metadata seqlock directory,
+pool allocator + interleaving, hlo analyzer."""
+import numpy as np
+import pytest
+
+from repro.core.metadata import PageDirectory, PoolAllocator
+from repro.core.pool import interleaved_assignment
+from repro.core.sac import SACSystem
+from repro.core.transfer import CXL, DRAM, FABRICS, RDMA, fig5_ratios
+from repro.configs import get_config
+
+
+# ---- Fig 5 calibration (paper §3.2) ----
+
+@pytest.mark.parametrize("n", [64, 256, 1024, 2048, 4096])
+def test_fig5_cxl_band(n):
+    r = fig5_ratios(n)
+    assert 1.0 <= r["cxl"] <= 1.70, (n, r)   # paper: 1.04-1.64x
+
+
+@pytest.mark.parametrize("n", [64, 256, 1024, 2048, 4096])
+def test_fig5_rdma_band(n):
+    r = fig5_ratios(n)
+    assert 3.5 <= r["rdma"] <= 21.0, (n, r)  # paper: 4.0-19.7x
+
+
+def test_fig5_rdma_reaches_ms():
+    assert RDMA.sparse_fetch_time(4096, 1152) > 1e-3  # ms-level (paper)
+    assert CXL.sparse_fetch_time(4096, 1152) < 3e-4
+
+
+def test_rdma_ratio_grows_with_entries():
+    r64 = fig5_ratios(64)["rdma"]
+    r4096 = fig5_ratios(4096)["rdma"]
+    assert r4096 > 2 * r64
+
+
+def test_bulk_transfer_bandwidth_bound():
+    t = RDMA.bulk_transfer_time(1 << 30)
+    assert t >= (1 << 30) / RDMA.bandwidth_Bps
+
+
+# ---- metadata (paper §4.3.1) ----
+
+def test_page_directory_publish_lookup_unpublish():
+    d = PageDirectory(capacity=256)
+    d.publish(seq_hash=42, page_no=0, device=1, page=7)
+    d.publish(seq_hash=42, page_no=1, device=1, page=8)
+    assert d.lookup(42, 0) == (1, 7)
+    assert d.lookup(42, 1) == (1, 8)
+    assert d.lookup(42, 2) is None
+    d.unpublish(42, 0)
+    assert d.lookup(42, 0) is None
+    assert d.lookup(42, 1) == (1, 8)
+    # versions even after committed ops (seqlock closed)
+    assert all(v % 2 == 0 for v in d.version)
+
+
+def test_page_directory_counts_line_accesses():
+    d = PageDirectory(capacity=64)
+    before = d.stats.lines()
+    d.publish(1, 0, 0, 0)
+    d.lookup(1, 0)
+    assert d.stats.lines() > before   # metadata ops cost memory ops, not RPCs
+
+
+def test_pool_allocator_exhaustion_and_release():
+    a = PoolAllocator(n_devices=2, pages_per_device=4)
+    p = a.alloc(0, 4)
+    assert len(p) == 4 and a.alloc(0, 1) is None
+    assert a.free_pages(1) == 4
+    a.release(0, p)
+    assert a.alloc(0, 2) is not None
+    assert 0 <= a.utilization() <= 1
+
+
+def test_interleaved_assignment():
+    assert interleaved_assignment([0, 1, 2, 3], 2) == [0, 1, 0, 1]
+    assert interleaved_assignment([0, 1, 2, 3], 2, enabled=False) == [0] * 4
+
+
+def test_sac_system_place_release_interleaves():
+    cfg = get_config("qwen2-1.5b").reduced()
+    sys_ = SACSystem(cfg, backend="cxl", n_pool_devices=2,
+                     device_bytes=1 << 20)
+    r1 = sys_.place(1, 64)
+    r2 = sys_.place(2, 64)
+    assert {r1.device, r2.device} == {0, 1}
+    assert sys_.directory.lookup(1, 0) is not None
+    sys_.release(1)
+    assert sys_.directory.lookup(1, 0) is None
+
+
+def test_sac_system_fetch_accounting():
+    cfg = get_config("deepseek-v32")
+    sys_ = SACSystem(cfg, backend="cxl")
+    t = sys_.sparse_fetch_time(2048)
+    assert t > 0 and sys_.bytes_fetched == 2048 * sys_.entry_bytes
+    t_rdma = SACSystem(cfg, backend="rdma").sparse_fetch_time(2048)
+    assert t_rdma > 4 * t                  # the paper's infeasibility gap

@@ -1,0 +1,65 @@
+"""Real serving engine end-to-end (reduced configs, CPU)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import Engine
+from repro.serving.request import sharegpt_trace
+
+
+def _trace(cfg, n=4, ctx=40, out=6, seed=3):
+    return sharegpt_trace(n, context_len=ctx, output_len=out, seed=seed,
+                          ctx_jitter=0.0, vocab=cfg.vocab)
+
+
+def test_engine_completes_all_requests():
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = Engine(cfg, slots=2, max_ctx=96)
+    out = eng.run(_trace(cfg, n=5))
+    assert out["n_done"] == 5
+    assert out["engine_tokens"] == 5 * 6
+    assert out["fabric_time_s"] > 0          # fetch+write were charged
+
+
+def test_engine_more_slots_fewer_steps():
+    cfg = get_config("qwen2-1.5b").reduced()
+    e1 = Engine(cfg, slots=1, max_ctx=96)
+    e4 = Engine(cfg, slots=4, max_ctx=96)
+    o1 = e1.run(_trace(cfg, n=4))
+    o4 = e4.run(_trace(cfg, n=4))
+    assert o4["engine_steps"] < o1["engine_steps"]  # batching works
+
+
+def test_engine_deterministic_across_backends():
+    """Backend changes traffic accounting, never tokens."""
+    cfg = get_config("minicpm-2b").reduced()
+    outs = {}
+    for backend in ("cxl", "rdma"):
+        eng = Engine(cfg, slots=2, max_ctx=96, backend=backend, seed=1)
+        eng.run(_trace(cfg, n=3))
+        outs[backend] = [t[:] for t in eng.slot_tokens]
+    # same generated streams (slot_tokens cleared; compare stats instead)
+    e1 = Engine(cfg, slots=2, max_ctx=96, backend="cxl", seed=1)
+    e2 = Engine(cfg, slots=2, max_ctx=96, backend="rdma", seed=1)
+    r1 = e1.run(_trace(cfg, n=3))
+    r2 = e2.run(_trace(cfg, n=3))
+    assert r1["engine_tokens"] == r2["engine_tokens"]
+    assert e1.stats.pool_entries_fetched == e2.stats.pool_entries_fetched
+
+
+def test_engine_radix_prefix_hits_on_shared_prompt():
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = Engine(cfg, slots=1, max_ctx=96)
+    reqs = _trace(cfg, n=3, ctx=40)
+    shared = reqs[0].prompt_tokens
+    for r in reqs:
+        r.prompt_tokens = shared.copy()      # identical prompts
+    out = eng.run(reqs)
+    assert out["radix_hit_tokens"] > 0       # 2nd/3rd hit the radix cache
+
+
+def test_engine_hybrid_arch():
+    cfg = get_config("zamba2-7b").reduced()
+    eng = Engine(cfg, slots=2, max_ctx=64)
+    out = eng.run(_trace(cfg, n=2, ctx=24, out=4))
+    assert out["n_done"] == 2

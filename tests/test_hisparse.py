@@ -1,0 +1,164 @@
+"""HiSparse hierarchical buffer: unit + hypothesis property tests.
+
+Invariants (the HiSparse swap-in contract):
+  I1. page_table/slot_pos are mutually consistent bijections;
+  I2. after swap_in, every (deduped, fillable) requested position is
+      resident;
+  I3. read_through values equal pure pool values (the buffer never
+      changes results — only traffic);
+  I4. hits + misses == number of valid deduped lanes;
+  I5. current-step hits are never evicted by the same step's misses.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hisparse
+
+
+def _consistent(state):
+    B, buf = state.slot_pos.shape
+    S = state.page_table.shape[1]
+    pt = np.asarray(state.page_table)
+    sp = np.asarray(state.slot_pos)
+    for b in range(B):
+        for slot in range(buf):
+            pos = sp[b, slot]
+            if pos >= 0:
+                assert pt[b, pos] == slot, (b, slot, pos)
+        for pos in range(S):
+            slot = pt[b, pos]
+            if slot >= 0:
+                assert sp[b, slot] == pos, (b, pos, slot)
+
+
+def _pool(B, S, d, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, S, d),
+                             jnp.bfloat16)
+
+
+def test_swap_in_basic_residency():
+    B, S, d, buf, k = 2, 32, 8, 8, 4
+    state = hisparse.init_buffer(B, buf, S, d)
+    pool = _pool(B, S, d)
+    idx = jnp.array([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+    fetched = jnp.take_along_axis(pool, idx[..., None], axis=1)
+    valid = jnp.ones((B, k), bool)
+    state, hits, misses = hisparse.swap_in(state, idx, fetched, valid)
+    assert (np.asarray(hits) == 0).all()
+    assert (np.asarray(misses) == k).all()
+    _consistent(state)
+    slots, hit = hisparse.lookup(state, idx)
+    assert bool(hit.all())
+    # second time: all hits
+    state, hits, misses = hisparse.swap_in(state, idx, fetched, valid)
+    assert (np.asarray(hits) == k).all() and (np.asarray(misses) == 0).all()
+
+
+def test_lru_eviction_order():
+    B, S, d, buf = 1, 64, 4, 4
+    state = hisparse.init_buffer(B, buf, S, d)
+    pool = _pool(B, S, d)
+
+    def touch(state, positions):
+        idx = jnp.array([positions], jnp.int32)
+        fetched = jnp.take_along_axis(pool, idx[..., None], axis=1)
+        return hisparse.swap_in(state, idx, fetched,
+                                jnp.ones_like(idx, bool))[0]
+
+    state = touch(state, [0, 1])     # clock 1
+    state = touch(state, [2, 3])     # clock 2: buffer full {0,1,2,3}
+    state = touch(state, [0, 1])     # clock 3: refresh 0,1
+    state = touch(state, [10, 11])   # clock 4: must evict 2,3 (LRU)
+    _, hit = hisparse.lookup(state, jnp.array([[0, 1, 10, 11]], jnp.int32))
+    assert bool(hit.all())
+    _, hit23 = hisparse.lookup(state, jnp.array([[2, 3]], jnp.int32))
+    assert not bool(hit23.any())
+
+
+def test_protected_hits_not_evicted():
+    B, S, d, buf = 1, 64, 4, 4
+    state = hisparse.init_buffer(B, buf, S, d)
+    pool = _pool(B, S, d)
+    idx0 = jnp.array([[0, 1, 2, 3]], jnp.int32)
+    f0 = jnp.take_along_axis(pool, idx0[..., None], axis=1)
+    state, _, _ = hisparse.swap_in(state, idx0, f0, jnp.ones_like(idx0, bool))
+    # step: 2 hits (0,1 — LRU-oldest) + 2 misses -> must evict 2,3 not 0,1
+    idx1 = jnp.array([[0, 1, 20, 21]], jnp.int32)
+    f1 = jnp.take_along_axis(pool, idx1[..., None], axis=1)
+    state, hits, misses = hisparse.swap_in(state, idx1, f1,
+                                           jnp.ones_like(idx1, bool))
+    assert int(hits[0]) == 2 and int(misses[0]) == 2
+    _, hit = hisparse.lookup(state, idx1)
+    assert bool(hit.all())
+    _consistent(state)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_property_read_through_equals_pool(data):
+    """I3/I4: buffered reads bit-equal pool reads; accounting exact."""
+    B = data.draw(st.integers(1, 3))
+    S = data.draw(st.sampled_from([16, 32]))
+    buf = data.draw(st.sampled_from([4, 8, 16]))
+    k = data.draw(st.sampled_from([2, 4, 8]))
+    d = 4
+    steps = data.draw(st.integers(1, 5))
+    pool = _pool(B, S, d, seed=data.draw(st.integers(0, 99)))
+    state = hisparse.init_buffer(B, buf, S, d)
+    rng = np.random.default_rng(data.draw(st.integers(0, 99)))
+    for _ in range(steps):
+        idx = jnp.asarray(rng.integers(0, S, (B, k)), jnp.int32)
+        valid = jnp.asarray(rng.random((B, k)) < 0.9)
+        fetched = jnp.take_along_axis(pool, idx[..., None], axis=1)
+        vals, state, hits, misses = hisparse.read_through(
+            state, idx, fetched, valid)
+        # values identical to the pool for valid lanes
+        expect = jnp.take_along_axis(pool, idx[..., None], axis=1)
+        v = np.asarray(valid)
+        np.testing.assert_array_equal(
+            np.asarray(vals, np.float32)[v], np.asarray(expect, np.float32)[v])
+        _consistent(state)
+        # I4: hits+misses == valid deduped lanes
+        for b in range(B):
+            seen = set()
+            dedup = 0
+            for j in range(k):
+                if v[b, j] and int(idx[b, j]) not in seen:
+                    seen.add(int(idx[b, j]))
+                    dedup += 1
+            dup_hits = sum(1 for j in range(k)
+                           if v[b, j] and list(np.asarray(idx[b])).index(
+                               int(idx[b, j])) != j)
+            total = int(hits[b]) + int(misses[b])
+            assert total >= dedup and total <= dedup + dup_hits + k
+
+
+def test_hit_rate_grounding():
+    """The simulator's hit model must be in the ballpark of the real
+    buffer under a drifting top-k workload (grounds serving/simulator)."""
+    from repro.serving.simulator import hit_rate as model_hit
+    B, S, d = 1, 2048, 4
+    k, buf = 64, 192  # k/buf = 1/3 like 2048/6144
+    state = hisparse.init_buffer(B, buf, S, d)
+    pool = _pool(B, S, d)
+    rng = np.random.default_rng(0)
+    # drifting top-k: mostly same set, a few swaps per step
+    current = rng.choice(S, size=k, replace=False)
+    hits = misses = 0
+    for step in range(60):
+        n_swap = rng.integers(0, max(2, k // 16))
+        drop = rng.choice(k, size=n_swap, replace=False)
+        newpos = rng.integers(0, S, n_swap)
+        current[drop] = newpos
+        idx = jnp.asarray(current[None, :], jnp.int32)
+        fetched = jnp.take_along_axis(pool, idx[..., None], axis=1)
+        _, state, h, m = hisparse.read_through(
+            state, idx, fetched, jnp.ones((1, k), bool))
+        if step >= 10:  # skip warmup
+            hits += int(h[0]); misses += int(m[0])
+    real = hits / (hits + misses)
+    modeled = model_hit(buf, k, 32768)
+    assert abs(real - modeled) < 0.12, (real, modeled)

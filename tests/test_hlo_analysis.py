@@ -1,0 +1,65 @@
+"""Trip-count-aware HLO analyzer: ground truth on synthetic programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.distributed.hlo_analysis import hlo_metrics
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_scan_flops_trip_multiplied():
+    N, L = 128, 7
+
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    comp = _compile(f, jax.ShapeDtypeStruct((N, N), jnp.float32),
+                    jax.ShapeDtypeStruct((L, N, N), jnp.float32))
+    m = hlo_metrics(comp.as_text())
+    expect = 2 * N ** 3 * L
+    assert abs(m["flops"] - expect) / expect < 0.05, m["flops"]
+
+
+def test_nested_scan_flops():
+    N, L1, L2 = 64, 3, 5
+
+    def f(x, w):
+        def outer(c, wi):
+            def inner(c2, wj):
+                return jnp.tanh(c2 @ wj), None
+            return jax.lax.scan(inner, c, wi)[0], None
+        return jax.lax.scan(outer, x, w)[0]
+
+    comp = _compile(f, jax.ShapeDtypeStruct((N, N), jnp.float32),
+                    jax.ShapeDtypeStruct((L1, L2, N, N), jnp.float32))
+    m = hlo_metrics(comp.as_text())
+    expect = 2 * N ** 3 * L1 * L2
+    assert abs(m["flops"] - expect) / expect < 0.05, m["flops"]
+
+
+def test_single_dot_flops_and_bytes():
+    M, K, N = 64, 128, 32
+
+    def f(a, b):
+        return a @ b
+
+    comp = _compile(f, jax.ShapeDtypeStruct((M, K), jnp.float32),
+                    jax.ShapeDtypeStruct((K, N), jnp.float32))
+    m = hlo_metrics(comp.as_text())
+    assert m["flops"] == 2 * M * K * N
+    expect_bytes = 4 * (M * K + K * N + M * N)
+    assert m["bytes"] >= expect_bytes
+    assert m["bytes"] < 3 * expect_bytes
+
+
+def test_no_collectives_single_device():
+    comp = _compile(lambda x: x * 2 + 1,
+                    jax.ShapeDtypeStruct((32,), jnp.float32))
+    m = hlo_metrics(comp.as_text())
+    assert m["collective_bytes"] == 0
+    assert m["collective_counts"] == {}

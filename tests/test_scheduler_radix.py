@@ -1,0 +1,111 @@
+"""Scheduler + radix cache property tests (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.radix import RadixIndex
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+def _req(i, ctx=100, out=10):
+    return Request(i, 0.0, ctx, out)
+
+
+def test_interleave_round_robin():
+    cfg = SchedulerConfig(concurrency=8, n_pool_devices=4, interleave=True,
+                          pool_device_bytes=1e12, bytes_per_token=1.0)
+    s = Scheduler(cfg)
+    for i in range(8):
+        s.submit(_req(i))
+    admitted = s.try_admit(0.0)
+    assert [r.pool_device for r in admitted] == [0, 1, 2, 3, 0, 1, 2, 3]
+    assert s.max_imbalance() == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_scheduler_invariants(data):
+    """Capacity never exceeded; interleave bounds imbalance; FCFS order."""
+    n_dev = data.draw(st.integers(1, 4))
+    conc = data.draw(st.integers(1, 16))
+    cap = data.draw(st.sampled_from([1e3, 1e4, 1e5]))
+    cfg = SchedulerConfig(concurrency=conc, n_pool_devices=n_dev,
+                          interleave=True, pool_device_bytes=cap,
+                          bytes_per_token=1.0)
+    s = Scheduler(cfg)
+    nxt = 0
+    for step in range(20):
+        n_new = data.draw(st.integers(0, 4))
+        for _ in range(n_new):
+            s.submit(_req(nxt, ctx=data.draw(st.integers(10, 400))))
+            nxt += 1
+        admitted = s.try_admit(float(step))
+        # invariants: concurrency cap, per-device capacity, accounting
+        assert len(s.active) <= conc
+        for dev_bytes in s.device_bytes:
+            assert -1e-9 <= dev_bytes <= cap + 1e-9
+        booked = sum(s.device_bytes)
+        held = sum((r.context_len + r.output_len) for r in s.active.values())
+        assert abs(booked - held) < 1e-6
+        # random finishes
+        for rid in list(s.active):
+            if data.draw(st.booleans()):
+                s.finish(s.active[rid])
+    assert all(b >= -1e-9 for b in s.device_bytes)
+
+
+def test_interleave_imbalance_bounded_without_finishes():
+    """Admission-only: round-robin keeps per-device load imbalance <= 1
+    (the paper's link-balancing property)."""
+    cfg = SchedulerConfig(concurrency=64, n_pool_devices=3, interleave=True,
+                          pool_device_bytes=1e12, bytes_per_token=1.0)
+    s = Scheduler(cfg)
+    for i in range(50):
+        s.submit(_req(i, ctx=10 + i % 7))
+    s.try_admit(0.0)
+    assert s.max_imbalance() <= 1
+
+
+def test_radix_prefix_match_and_split():
+    r = RadixIndex(page_size=4)
+    r.insert([1, 2, 3, 4, 5, 6, 7, 8], device=0, pages=[0, 1])
+    n, pages = r.match_prefix([1, 2, 3, 4, 5, 6, 7, 8, 9, 9])
+    assert n == 8 and pages[0][1] == [0, 1]
+    # diverging suffix splits the edge
+    r.insert([1, 2, 3, 4, 9, 9, 9, 9], device=1, pages=[7, 8])
+    n2, pages2 = r.match_prefix([1, 2, 3, 4, 9, 9, 9, 9])
+    assert n2 == 8 and pages2[-1][1] == [7, 8]
+    n3, _ = r.match_prefix([1, 2, 3, 4, 5, 6, 7, 8])
+    assert n3 == 8
+    n4, _ = r.match_prefix([2, 2])
+    assert n4 == 0
+
+
+def test_radix_pin_blocks_eviction():
+    r = RadixIndex(page_size=2)
+    r.insert([1, 2, 3, 4], device=0, pages=[0, 1])
+    r.pin([1, 2, 3, 4])
+    assert r.evict_lru(4) == []          # pinned: nothing evictable
+    r.release([1, 2, 3, 4])
+    freed = r.evict_lru(4)
+    assert freed and freed[0][1] == [0, 1]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 3), min_size=4, max_size=12),
+                min_size=1, max_size=8))
+def test_radix_property_match_is_prefix(seqs):
+    """Whatever was inserted, match_prefix returns a length that is a
+    valid prefix length and never exceeds the query."""
+    r = RadixIndex(page_size=2)
+    for i, s in enumerate(seqs):
+        aligned = s[: len(s) // 2 * 2]
+        if aligned:
+            r.insert(aligned, device=0, pages=list(range(len(aligned) // 2)))
+    for s in seqs:
+        n, _ = r.match_prefix(s)
+        assert 0 <= n <= len(s)
+        if n:
+            n2, _ = r.match_prefix(s[:n])
+            assert n2 == n
