@@ -1,0 +1,20 @@
+# SAC reproduction — developer entry points.
+#
+#   make test       tier-1 suite (the ROADMAP verify command)
+#   make test-fast  substrate + engine-buffer slice (quick signal)
+#   make deps       install runtime + test dependencies
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-fast deps
+
+test:
+	python -m pytest -x -q
+
+test-fast:
+	python -m pytest -q tests/test_placement.py tests/test_engine_buffer.py \
+	    tests/test_core_system.py tests/test_simulator.py
+
+deps:
+	pip install -r requirements.txt

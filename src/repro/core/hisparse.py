@@ -156,3 +156,42 @@ def read_through(state: BufferState, idx: jnp.ndarray, fetched: jnp.ndarray,
                      fetched)
     new_state, hits, misses = swap_in(state, idx, fetched, valid)
     return vals, new_state, hits, misses
+
+
+# ---------------------------------------------------------------------------
+# layered layout (serving engine: one buffer per pool layer)
+# ---------------------------------------------------------------------------
+
+
+def init_layered_buffer(n_layers: int, batch: int, buf_size: int,
+                        seq_len: int, entry_dim: int,
+                        dtype=jnp.bfloat16) -> BufferState:
+    """Per-(layer, request) buffer stack: every field gains a leading
+    [L] axis (entries [L, B, buf, d], page_table [L, B, S], ...).
+
+    This is the ``hot_buf`` entry of the engine's serve_state pytree;
+    the decode step threads per-layer slices through ``read_through``.
+    """
+    return BufferState(
+        entries=jnp.zeros((n_layers, batch, buf_size, entry_dim), dtype),
+        slot_pos=jnp.full((n_layers, batch, buf_size), EMPTY),
+        page_table=jnp.full((n_layers, batch, seq_len), EMPTY),
+        last_use=jnp.zeros((n_layers, batch, buf_size), jnp.int32),
+        clock=jnp.zeros((n_layers, batch), jnp.int32),
+    )
+
+
+def reset_lane(state: BufferState, lane: int) -> BufferState:
+    """Clear one request lane of a layered buffer ([L, B, ...] layout).
+
+    Used when a serving slot is recycled: the next request must not see
+    the previous occupant's residency (its pool pages are reused).
+    Entries need no clearing — unmapped slots are unreachable.
+    """
+    return BufferState(
+        entries=state.entries,
+        slot_pos=state.slot_pos.at[:, lane].set(EMPTY),
+        page_table=state.page_table.at[:, lane].set(EMPTY),
+        last_use=state.last_use.at[:, lane].set(0),
+        clock=state.clock.at[:, lane].set(0),
+    )

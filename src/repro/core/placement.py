@@ -1,0 +1,210 @@
+"""Shared request->pool-device placement substrate (paper §4.3.3).
+
+This is the ONE implementation of placement used by every serving layer:
+
+  - ``SACSystem.place`` (core/sac.py) — page-granular pool bookkeeping for
+    the real engine;
+  - ``Scheduler`` (serving/scheduler.py) — byte-granular admission control;
+  - ``simulate()`` (serving/simulator.py) — consumes placement through the
+    Scheduler it embeds.
+
+A :class:`Placer` tracks per-device occupancy in BOTH bytes and pages and
+answers "which device should this request's KV live on" under a pluggable
+:class:`PlacementPolicy`:
+
+  - ``round_robin`` — the paper's CXL-device interleaving: consecutive
+    requests land on different devices so concurrent fetches spread over
+    fabric links (skipping full devices), bounding per-device imbalance;
+  - ``first_fit``  — lowest-index device with room (interleaving OFF — the
+    ablation baseline of paper Fig 13);
+  - ``least_loaded`` — smallest booked-bytes device first (beyond-paper:
+    balances *capacity* rather than request count, useful under highly
+    skewed context lengths).
+
+The paper stores one request's KV entirely within a single device; the
+placer decides *which* device, the caller owns the page/byte payloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+class PlacementPolicy:
+    """Candidate-device ordering strategy.  Stateless except for what the
+    subclass declares (round-robin keeps a pointer)."""
+
+    name = "base"
+
+    def order(self, placer: "Placer") -> List[int]:
+        raise NotImplementedError
+
+    def on_commit(self, placer: "Placer", device: int) -> None:
+        """Called after a successful placement on ``device``."""
+
+
+class RoundRobinPolicy(PlacementPolicy):
+    """Interleave requests across devices (paper §4.3.3)."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._rr = 0
+
+    def order(self, placer: "Placer") -> List[int]:
+        n = placer.n_devices
+        return [(self._rr + i) % n for i in range(n)]
+
+    def on_commit(self, placer: "Placer", device: int) -> None:
+        self._rr = (device + 1) % placer.n_devices
+
+
+class FirstFitPolicy(PlacementPolicy):
+    """Lowest index with room (interleaving disabled, Fig 13 baseline)."""
+
+    name = "first_fit"
+
+    def order(self, placer: "Placer") -> List[int]:
+        return list(range(placer.n_devices))
+
+
+class LeastLoadedPolicy(PlacementPolicy):
+    """Smallest booked-bytes device first (ties break toward pages, then
+    index, so the ordering is deterministic)."""
+
+    name = "least_loaded"
+
+    def order(self, placer: "Placer") -> List[int]:
+        return sorted(range(placer.n_devices),
+                      key=lambda d: (placer.bytes_used[d],
+                                     placer.pages_used[d], d))
+
+
+POLICIES = {
+    "round_robin": RoundRobinPolicy,
+    "first_fit": FirstFitPolicy,
+    "least_loaded": LeastLoadedPolicy,
+}
+
+
+def make_policy(policy: str) -> PlacementPolicy:
+    if policy not in POLICIES:
+        raise ValueError(f"unknown placement policy {policy!r} "
+                         f"(have {sorted(POLICIES)})")
+    return POLICIES[policy]()
+
+
+def policy_for_interleave(interleave: bool) -> str:
+    """Map the paper's interleave on/off knob to a policy name."""
+    return "round_robin" if interleave else "first_fit"
+
+
+# ---------------------------------------------------------------------------
+# the placer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Booking:
+    device: int
+    n_bytes: float
+    n_pages: int
+
+
+class Placer:
+    """Capacity-aware request->device placement with byte AND page budgets.
+
+    ``place`` walks devices in policy order and books the first that fits
+    both budgets; ``release`` undoes a booking.  All serving layers share
+    this class so their placement decisions agree by construction.
+    """
+
+    def __init__(self, n_devices: int, *, policy: str = "round_robin",
+                 capacity_bytes: float = float("inf"),
+                 capacity_pages: Optional[int] = None):
+        assert n_devices >= 1
+        self.n_devices = n_devices
+        self.policy = make_policy(policy)
+        self.capacity_bytes = capacity_bytes
+        self.capacity_pages = (capacity_pages if capacity_pages is not None
+                               else (1 << 62))
+        self.bytes_used: List[float] = [0.0] * n_devices
+        self.pages_used: List[int] = [0] * n_devices
+        self.counts: List[int] = [0] * n_devices      # active requests
+        self._bookings: Dict[int, _Booking] = {}
+
+    # -- placement ---------------------------------------------------------
+    def fits(self, device: int, n_bytes: float = 0.0, n_pages: int = 0
+             ) -> bool:
+        return (self.bytes_used[device] + n_bytes <= self.capacity_bytes
+                and self.pages_used[device] + n_pages <= self.capacity_pages)
+
+    def place(self, request_id: int, *, n_bytes: float = 0.0,
+              n_pages: int = 0) -> Optional[int]:
+        """Book ``request_id`` on the first policy-ordered device with
+        room; returns the device or None if every device is full."""
+        assert request_id not in self._bookings, \
+            f"request {request_id} already placed"
+        for dev in self.policy.order(self):
+            if self.fits(dev, n_bytes, n_pages):
+                self.bytes_used[dev] += n_bytes
+                self.pages_used[dev] += n_pages
+                self.counts[dev] += 1
+                self._bookings[request_id] = _Booking(dev, n_bytes, n_pages)
+                self.policy.on_commit(self, dev)
+                return dev
+        return None
+
+    def release(self, request_id: int) -> Optional[int]:
+        """Undo a booking; returns the device it lived on (None if unknown)."""
+        bk = self._bookings.pop(request_id, None)
+        if bk is None:
+            return None
+        self.bytes_used[bk.device] -= bk.n_bytes
+        self.pages_used[bk.device] -= bk.n_pages
+        self.counts[bk.device] -= 1
+        return bk.device
+
+    def device_of(self, request_id: int) -> Optional[int]:
+        bk = self._bookings.get(request_id)
+        return bk.device if bk else None
+
+    # -- introspection -----------------------------------------------------
+    def device_loads(self) -> List[int]:
+        """Active request count per device."""
+        return list(self.counts)
+
+    def max_imbalance(self) -> int:
+        loads = self.device_loads()
+        return max(loads) - min(loads) if loads else 0
+
+
+# ---------------------------------------------------------------------------
+# convenience (paper Fig 13 ablation helper)
+# ---------------------------------------------------------------------------
+
+
+def pages_for_tokens(n_tokens: int, page_size: int) -> int:
+    return max(1, math.ceil(max(n_tokens, 0) / max(page_size, 1)))
+
+
+def interleaved_assignment(request_ids: Sequence[int], n_devices: int,
+                           enabled: bool = True) -> List[int]:
+    """Round-robin request -> pool-device assignment (capacity-free).
+
+    With interleaving on, consecutive requests land on different pool
+    devices so concurrent fetches spread across fabric links; off, all
+    requests hit device 0 (the ablation baseline of paper Fig 13).
+
+    Assignment is by ARRIVAL ORDER (the shared round-robin policy), not
+    keyed on the ids — a pre-substrate version used ``rid % n_devices``,
+    which coincides for sequential ids but not for arbitrary ones.
+    """
+    placer = Placer(n_devices, policy=policy_for_interleave(enabled))
+    return [placer.place(i) for i, _ in enumerate(request_ids)]

@@ -23,11 +23,16 @@ entry is produced TP-replicated by the layer, every shard keeps its slice).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+
+try:                                   # jax >= 0.5
+    _shard_map = jax.shard_map
+except AttributeError:                 # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 FetchFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
@@ -72,9 +77,9 @@ def make_pooled_fetch(mesh: Mesh, *, batch_axes=("pod", "data"),
     spec_idx = P(batch, None)
     spec_out = P(batch, None, None)
     body = functools.partial(_pooled_fetch_local, axis=pool_axis)
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(spec_pool, spec_idx),
-                         out_specs=spec_out)
+    return _shard_map(body, mesh=mesh,
+                      in_specs=(spec_pool, spec_idx),
+                      out_specs=spec_out)
 
 
 def make_fetch_fn(mesh: Optional[Mesh], backend: str = "local",
@@ -131,18 +136,8 @@ def pool_write_prefill(pool: jnp.ndarray, entries: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# device interleaving (paper §4.3.3)
+# device interleaving (paper §4.3.3) — lives in the shared placement
+# substrate; re-exported here for back-compat.
 # ---------------------------------------------------------------------------
 
-
-def interleaved_assignment(request_ids: Sequence[int], n_devices: int,
-                           enabled: bool = True):
-    """Round-robin request -> pool-device assignment.
-
-    With interleaving on, consecutive requests land on different pool
-    devices so concurrent fetches spread across fabric links; off, all
-    requests hit device 0 (the ablation baseline of paper Fig 13).
-    """
-    if not enabled:
-        return [0 for _ in request_ids]
-    return [rid % n_devices for rid in request_ids]
+from repro.core.placement import interleaved_assignment  # noqa: E402,F401

@@ -9,9 +9,10 @@ Two halves:
    (absorbed-MLA or GQA).  This is the paper's Figure 6 decode path.
 
 2. **Host-level** (`SACSystem`): pool bookkeeping for the serving engine
-   and simulator — page allocation across pool devices, round-robin
-   interleaving (paper §4.3.3), metadata publishing (paper §4.3.1), and
-   fabric-cost accounting for every fetch/write (paper Fig 5 models).
+   and simulator — page allocation across pool devices via the shared
+   placement substrate (core/placement.py, paper §4.3.3), metadata
+   publishing (paper §4.3.1), and fabric-cost accounting via the shared
+   traffic substrate (core/traffic.py, paper Fig 5 models).
 """
 from __future__ import annotations
 
@@ -23,7 +24,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import hisparse
 from repro.core.metadata import PageDirectory, PoolAllocator
+from repro.core.placement import (Placer, pages_for_tokens,
+                                  policy_for_interleave)
 from repro.core.pool import FetchFn, local_fetch
+from repro.core.traffic import FabricAccountant
 from repro.core.transfer import FABRICS, FabricModel
 from repro.models import dsa
 
@@ -39,7 +43,8 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
                   own_entry: jnp.ndarray,
                   fetch_fn: FetchFn = local_fetch,
                   topk_fn: Optional[Callable] = None,
-                  window: int = 0) -> jnp.ndarray:
+                  window: int = 0,
+                  buf_state: Optional[hisparse.BufferState] = None):
     """One layer of SAC decode attention.  x: [B, D] -> [B, D].
 
     kv_pool_l: [B, S, d_entry] (this layer's pool slice, S possibly sharded
@@ -47,6 +52,12 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
     (the current token's KV entry, appended so the token attends to itself
     before the write-back lands).  ``window`` > 0 restricts the candidate
     set to the trailing window (SWA layers: top-k within the window).
+
+    With ``buf_state`` (this layer's HiSparse hot tier, core/hisparse.py)
+    the top-k read goes through ``hisparse.read_through`` — values are
+    bit-identical, but residency is measured so the host can charge only
+    *misses* to the fabric (paper §5.5).  Returns the plain output when
+    ``buf_state`` is None, else ``(out, new_buf_state, hits, misses)``.
     """
     scores = dsa.indexer_scores(p_idx, x, idx_pool_l, cfg)
     if window:
@@ -60,14 +71,22 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
     else:
         idx, valid = topk_fn(scores, cache_len)
     fetched = fetch_fn(kv_pool_l, idx)
+    if buf_state is not None:
+        fetched, buf_state, hits, misses = hisparse.read_through(
+            buf_state, idx, fetched, valid)
     fetched = jnp.concatenate(
         [fetched, own_entry[:, None, :].astype(fetched.dtype)], axis=1)
     valid = jnp.concatenate(
         [valid, jnp.ones((valid.shape[0], 1), bool)], axis=1)
     if cfg.mla:
-        return dsa.mla_absorbed_decode(p_attn, x, cfg, fetched, valid,
-                                       positions)
-    return dsa.gqa_sparse_decode(p_attn, x, cfg, fetched, valid, positions)
+        out = dsa.mla_absorbed_decode(p_attn, x, cfg, fetched, valid,
+                                      positions)
+    else:
+        out = dsa.gqa_sparse_decode(p_attn, x, cfg, fetched, valid,
+                                    positions)
+    if buf_state is not None:
+        return out, buf_state, hits, misses
+    return out
 
 
 def window_attend(p_attn: Dict, x: jnp.ndarray, cfg: ModelConfig,
@@ -125,11 +144,17 @@ class SACSystem:
 
     ``backend`` picks the fabric cost model: "cxl" (SAC), "rdma"
     (full-prefetch baseline), "dram"/"hbm" (non-disaggregated baselines).
+
+    Placement goes through the shared :class:`~repro.core.placement.Placer`
+    (one implementation for engine, scheduler, and simulator); traffic is
+    charged to the shared :class:`~repro.core.traffic.FabricAccountant`
+    whose ``TrafficStats`` the engine exposes directly.
     """
 
     def __init__(self, cfg: ModelConfig, *, backend: str = "cxl",
                  n_pool_devices: int = 2, device_bytes: int = 256 << 30,
-                 interleave: bool = True, seq_capacity: int = 1 << 17):
+                 interleave: bool = True, placement: Optional[str] = None,
+                 seq_capacity: int = 1 << 17):
         self.cfg = cfg
         self.backend = backend
         self.fabric: FabricModel = FABRICS[backend]
@@ -137,63 +162,73 @@ class SACSystem:
         self.n_devices = n_pool_devices
         self.entry_bytes = cfg.kv_bytes_per_token_layer + 2 * cfg.sac.d_idx
         self.page_tokens = cfg.sac.page_size
-        page_bytes = self.entry_bytes * self.page_tokens * max(cfg.n_attn_layers, 1)
-        self.allocator = PoolAllocator(
-            n_pool_devices, max(device_bytes // max(page_bytes, 1), 1))
+        self.page_bytes = (self.entry_bytes * self.page_tokens
+                           * max(cfg.n_attn_layers, 1))
+        pages_per_device = max(device_bytes // max(self.page_bytes, 1), 1)
+        self.allocator = PoolAllocator(n_pool_devices, pages_per_device)
+        self.placer = Placer(
+            n_pool_devices,
+            policy=placement or policy_for_interleave(interleave),
+            capacity_bytes=float(device_bytes),
+            capacity_pages=pages_per_device)
+        self.traffic = FabricAccountant(self.fabric,
+                                        n_devices=n_pool_devices)
         self.directory = PageDirectory()
         self.requests: Dict[int, RequestPages] = {}
-        self._rr = 0
-        self.bytes_fetched = 0
-        self.bytes_written = 0
 
     # -- placement ---------------------------------------------------------
     def place(self, request_id: int, n_tokens: int) -> Optional[RequestPages]:
         """Allocate pool pages for a request on one device (paper stores a
-        request's KV within a single device; the *scheduler* interleaves
+        request's KV within a single device; the shared placer interleaves
         requests across devices)."""
-        n_pages = -(-n_tokens // self.page_tokens)
-        order = (list(range(self._rr, self.n_devices))
-                 + list(range(0, self._rr))) if self.interleave else \
-            list(range(self.n_devices))
-        for dev in order:
-            pages = self.allocator.alloc(dev, n_pages)
-            if pages is not None:
-                rp = RequestPages(request_id, dev, pages, n_tokens)
-                self.requests[request_id] = rp
-                for pno, page in enumerate(pages):
-                    self.directory.publish(request_id, pno, dev, page)
-                if self.interleave:
-                    self._rr = (dev + 1) % self.n_devices
-                return rp
-        return None
+        n_pages = pages_for_tokens(n_tokens, self.page_tokens)
+        dev = self.placer.place(request_id, n_pages=n_pages,
+                                n_bytes=n_pages * self.page_bytes)
+        if dev is None:
+            return None
+        pages = self.allocator.alloc(dev, n_pages)
+        assert pages is not None, \
+            "placer and allocator page budgets diverged"
+        rp = RequestPages(request_id, dev, pages, n_tokens)
+        self.requests[request_id] = rp
+        for pno, page in enumerate(pages):
+            self.directory.publish(request_id, pno, dev, page)
+        return rp
 
     def release(self, request_id: int):
         rp = self.requests.pop(request_id, None)
         if rp is None:
             return
+        self.placer.release(request_id)
         self.allocator.release(rp.device, rp.pages)
         for pno in range(len(rp.pages)):
             self.directory.unpublish(request_id, pno)
 
-    # -- fabric accounting ---------------------------------------------------
-    def sparse_fetch_time(self, n_entries: int, *, contention: float = 1.0
-                          ) -> float:
-        t = self.fabric.sparse_fetch_time(n_entries, self.entry_bytes,
-                                          contention=contention)
-        self.bytes_fetched += n_entries * self.entry_bytes
-        return t
+    # -- fabric accounting (delegates to the shared accountant) ------------
+    @property
+    def bytes_fetched(self) -> float:
+        return self.traffic.stats.bytes_fetched
 
-    def full_prefetch_time(self, n_tokens: int, *, contention: float = 1.0
-                           ) -> float:
+    @property
+    def bytes_written(self) -> float:
+        return self.traffic.stats.bytes_written
+
+    def sparse_fetch_time(self, n_entries: int, *, device: int = 0,
+                          contention: float = 1.0) -> float:
+        return self.traffic.sparse_fetch(n_entries, self.entry_bytes,
+                                         device=device,
+                                         contention=contention)
+
+    def full_prefetch_time(self, n_tokens: int, *, device: int = 0,
+                           contention: float = 1.0) -> float:
         n_bytes = n_tokens * self.entry_bytes * max(self.cfg.n_attn_layers, 1)
-        self.bytes_fetched += n_bytes
-        return self.fabric.bulk_transfer_time(n_bytes, contention=contention)
+        return self.traffic.bulk_fetch(n_bytes, device=device,
+                                       contention=contention)
 
     def write_back_time(self, n_tokens: int, *, contention: float = 1.0
                         ) -> float:
         n_bytes = n_tokens * self.entry_bytes * max(self.cfg.n_attn_layers, 1)
-        self.bytes_written += n_bytes
-        return self.fabric.bulk_transfer_time(n_bytes, contention=contention)
+        return self.traffic.write_back(n_bytes, contention=contention)
 
     def device_of(self, request_id: int) -> int:
         rp = self.requests.get(request_id)

@@ -15,6 +15,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:                                   # jax >= 0.5
+    _shard_map = jax.shard_map
+    _NO_REP_CHECK = {"check_vma": False}
+except AttributeError:                 # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NO_REP_CHECK = {"check_rep": False}
+
 from repro.models.dsa import NEG_INF, topk_select  # noqa: F401  (re-export)
 
 
@@ -36,7 +43,13 @@ def _hier_topk_local(scores, cache_len, *, k: int, axis: str):
     cand_idx = jax.lax.all_gather(loc_idx, axis, axis=1, tiled=True)
     top_scores, pos_in_cand = jax.lax.top_k(cand_scores, k)
     idx = jnp.take_along_axis(cand_idx, pos_in_cand, axis=1)
-    return idx, top_scores > NEG_INF / 2
+    valid = top_scores > NEG_INF / 2
+    # position-sort the selected set (invalid lanes last), matching
+    # dsa.topk_select: keeps sparse decode bit-exact vs dense and the
+    # single-device path, and gathers monotone (see topk_select)
+    order = jnp.argsort(jnp.where(valid, idx, jnp.int32(1 << 30)), axis=-1)
+    return (jnp.take_along_axis(idx, order, axis=-1),
+            jnp.take_along_axis(valid, order, axis=-1))
 
 
 def make_hierarchical_topk(mesh: Mesh, k: int, *, batch_axes=("pod", "data"),
@@ -45,10 +58,11 @@ def make_hierarchical_topk(mesh: Mesh, k: int, *, batch_axes=("pod", "data"),
     import functools
     batch = tuple(a for a in batch_axes if a in mesh.axis_names)
     body = functools.partial(_hier_topk_local, k=k, axis=pool_axis)
-    # check_vma off: the tiled all_gather makes every pool-axis rank's
-    # candidate set identical, so the re-top-k output IS replicated over
-    # the pool axis — but VMA inference can't prove it.
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(P(batch, pool_axis), P(batch)),
-                         out_specs=(P(batch, None), P(batch, None)),
-                         check_vma=False)
+    # replication check off (check_vma / legacy check_rep): the tiled
+    # all_gather makes every pool-axis rank's candidate set identical, so
+    # the re-top-k output IS replicated over the pool axis — but the
+    # inference can't prove it.
+    return _shard_map(body, mesh=mesh,
+                      in_specs=(P(batch, pool_axis), P(batch)),
+                      out_specs=(P(batch, None), P(batch, None)),
+                      **_NO_REP_CHECK)

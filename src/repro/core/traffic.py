@@ -1,0 +1,138 @@
+"""Shared fabric-traffic accounting substrate.
+
+One stats schema — :class:`TrafficStats` — for every serving layer:
+
+  - ``SACSystem`` (core/sac.py) charges real engine fetches/writes here;
+  - ``Engine`` (serving/engine.py) exposes the same object as
+    ``EngineStats.traffic`` (buffer hits/misses are *measured* from the
+    in-graph HiSparse buffer, core/hisparse.py);
+  - ``simulate()`` (serving/simulator.py) accumulates its analytic
+    per-device step demand through the same accountant.
+
+The point of sharing the schema is paper §5.5: SAC's wins hinge on
+*miss-only* fabric traffic, so the engine's measured hits/misses and the
+simulator's analytic hit model must be comparable numbers — the parity
+test (tests/test_engine_buffer.py) grounds one against the other.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.transfer import FABRICS, FabricModel
+
+
+@dataclasses.dataclass
+class TrafficStats:
+    """Cumulative fabric-traffic counters (one schema for all layers)."""
+
+    n_devices: int = 1
+    bytes_fetched: float = 0.0       # entries/pages pulled over the fabric
+    bytes_written: float = 0.0       # prefill / decode write-back traffic
+    buffer_hits: float = 0.0         # HiSparse hot-tier hits (no fabric)
+    buffer_misses: float = 0.0       # hot-tier misses (crossed the fabric)
+    fabric_time_s: float = 0.0       # seconds charged to the fabric
+    device_demand_bytes: List[float] = dataclasses.field(
+        default_factory=list)       # cumulative fetch demand per device
+
+    def __post_init__(self):
+        if not self.device_demand_bytes:
+            self.device_demand_bytes = [0.0] * self.n_devices
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.buffer_hits + self.buffer_misses
+        return self.buffer_hits / tot if tot else 0.0
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes_fetched + self.bytes_written
+
+
+class FabricAccountant:
+    """Charges fabric operations against a :class:`FabricModel` and keeps
+    one :class:`TrafficStats` for every consumer.
+
+    Two usage styles:
+
+      - **timed ops** (real engine): ``sparse_fetch`` / ``bulk_fetch`` /
+        ``write_back`` return seconds from the calibrated fabric model and
+        accumulate bytes + time;
+      - **per-step demand** (simulator): ``add_step_demand`` accumulates a
+        decode step's per-device byte demand; ``drain_step`` returns it
+        (the slowest device is the step's fetch critical path) and folds
+        it into the cumulative stats; ``charge_seconds`` books the time
+        the caller computed from that demand.
+    """
+
+    def __init__(self, fabric: Optional[FabricModel] = None, *,
+                 backend: Optional[str] = None, n_devices: int = 1):
+        if fabric is None and backend is not None:
+            fabric = FABRICS[backend]
+        self.fabric = fabric
+        self.stats = TrafficStats(n_devices=n_devices)
+        self._step_demand = [0.0] * n_devices
+
+    @property
+    def n_devices(self) -> int:
+        return self.stats.n_devices
+
+    # -- timed ops (engine / SACSystem) ------------------------------------
+    def sparse_fetch(self, n_entries: int, entry_bytes: int, *,
+                     device: int = 0, contention: float = 1.0) -> float:
+        """Fine-grained fetch of ``n_entries`` discrete entries."""
+        if n_entries <= 0:
+            return 0.0
+        assert self.fabric is not None, "timed ops need a fabric model"
+        t = self.fabric.sparse_fetch_time(n_entries, entry_bytes,
+                                          contention=contention)
+        n_bytes = n_entries * entry_bytes
+        self.stats.bytes_fetched += n_bytes
+        self.stats.device_demand_bytes[device % self.n_devices] += n_bytes
+        self.stats.fabric_time_s += t
+        return t
+
+    def bulk_fetch(self, n_bytes: float, *, device: int = 0,
+                   contention: float = 1.0) -> float:
+        """Streaming fetch of a contiguous region (full-prefetch path)."""
+        if n_bytes <= 0:
+            return 0.0
+        assert self.fabric is not None, "timed ops need a fabric model"
+        t = self.fabric.bulk_transfer_time(n_bytes, contention=contention)
+        self.stats.bytes_fetched += n_bytes
+        self.stats.device_demand_bytes[device % self.n_devices] += n_bytes
+        self.stats.fabric_time_s += t
+        return t
+
+    def write_back(self, n_bytes: float, *, contention: float = 1.0
+                   ) -> float:
+        """Pool write (prefill bulk write / decode write-back)."""
+        if n_bytes <= 0:
+            return 0.0
+        assert self.fabric is not None, "timed ops need a fabric model"
+        t = self.fabric.bulk_transfer_time(n_bytes, contention=contention)
+        self.stats.bytes_written += n_bytes
+        self.stats.fabric_time_s += t
+        return t
+
+    # -- hot-buffer accounting --------------------------------------------
+    def record_hits(self, hits: float, misses: float) -> None:
+        """Record HiSparse hot-tier outcomes (measured or analytic)."""
+        self.stats.buffer_hits += hits
+        self.stats.buffer_misses += misses
+
+    # -- per-step demand (simulator) ---------------------------------------
+    def add_step_demand(self, device: int, n_bytes: float) -> None:
+        self._step_demand[device % self.n_devices] += n_bytes
+
+    def drain_step(self) -> List[float]:
+        """Fold the current step's demand into the stats and return it."""
+        demand = self._step_demand
+        for d, n in enumerate(demand):
+            self.stats.device_demand_bytes[d] += n
+        self.stats.bytes_fetched += sum(demand)
+        self._step_demand = [0.0] * self.n_devices
+        return demand
+
+    def charge_seconds(self, seconds: float) -> None:
+        self.stats.fabric_time_s += seconds

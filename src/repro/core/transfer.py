@@ -18,6 +18,11 @@ per-link bandwidth (PCIe5 x8 per device), which is why device interleaving
 (paper §4.3.3) matters — the simulator models per-device link contention.
 
 The ICI model is used for the TPU `pooled_hbm` backend mapping (DESIGN §2).
+
+Consumers do not call these models directly for accounting: the shared
+``FabricAccountant`` (core/traffic.py) wraps them so every serving layer
+(engine, SACSystem, simulator) charges traffic into one ``TrafficStats``
+schema.
 """
 from __future__ import annotations
 

@@ -84,9 +84,11 @@ def sparse_attn(q: jnp.ndarray, keys: jnp.ndarray, vals: jnp.ndarray,
         out_specs=pl.BlockSpec((H, dv), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((H, dv), jnp.float32),
         scratch_shapes=[
-            pltpu.MemorySpace.VMEM((H, 1), jnp.float32),
-            pltpu.MemorySpace.VMEM((H, 1), jnp.float32),
-            pltpu.MemorySpace.VMEM((H, dv), jnp.float32),
+            # pltpu.VMEM is the canonical scratch constructor and exists
+            # across jax versions (MemorySpace.VMEM is 0.5+-only)
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, dv), jnp.float32),
         ],
         interpret=interpret,
     )(q, keys, vals, bias.reshape(1, k))

@@ -6,7 +6,18 @@ touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                   # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:                    # older jax: meshes are Auto-only
+    AxisType = None
+
+
+def _make(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,11 +25,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / elastic re-mesh)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make(tuple(shape), tuple(axes))

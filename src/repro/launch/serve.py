@@ -22,6 +22,12 @@ def main():
     ap.add_argument("--backend", default="cxl",
                     choices=["cxl", "rdma", "dram", "hbm"])
     ap.add_argument("--mode", default="sac", choices=["sac", "dense"])
+    ap.add_argument("--no-buffer", action="store_true",
+                    help="disable the HiSparse hot buffer (cold-read "
+                         "fabric charging)")
+    ap.add_argument("--device-buffer", type=int, default=None,
+                    help="hot-buffer entries per layer per slot "
+                         "(default: cfg.sac.device_buffer_size)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -36,7 +42,9 @@ def main():
         raise SystemExit("serve driver targets decoder-only archs; "
                          "whisper decode is exercised in tests")
     eng = Engine(cfg, slots=args.slots, max_ctx=args.max_ctx,
-                 backend=args.backend, mode=args.mode, seed=args.seed)
+                 backend=args.backend, mode=args.mode, seed=args.seed,
+                 track_buffer=not args.no_buffer,
+                 device_buffer=args.device_buffer)
     reqs = sharegpt_trace(args.requests, context_len=args.ctx,
                           output_len=args.out_len, seed=args.seed,
                           ctx_jitter=0.0, vocab=cfg.vocab)

@@ -75,7 +75,14 @@ def topk_select(scores: jnp.ndarray, cache_len: jnp.ndarray, k: int
     masked = jnp.where(pos[None, :] < cache_len[:, None], scores, NEG_INF)
     top_scores, idx = jax.lax.top_k(masked, min(k, S))
     valid = top_scores > NEG_INF / 2
-    return idx.astype(jnp.int32), valid
+    idx = idx.astype(jnp.int32)
+    # position-sort the selected set (invalid lanes pushed last): the
+    # sparse candidate order then matches the pool order, so with k >=
+    # context the sparse decode is bit-exact vs dense (float accumulation
+    # order is identical), and real gathers walk the pool monotonically
+    order = jnp.argsort(jnp.where(valid, idx, S), axis=-1)
+    return (jnp.take_along_axis(idx, order, axis=-1),
+            jnp.take_along_axis(valid, order, axis=-1))
 
 
 # ---------------------------------------------------------------------------

@@ -277,9 +277,13 @@ class EncDecLM:
                 (self.n_kv, batch, seq_len, cfg.sac.d_idx), DTYPE)
         return state
 
-    def serve_state_shapes(self, batch: int, seq_len: int) -> Dict:
+    def serve_state_shapes(self, batch: int, seq_len: int,
+                           device_buffer: int = 0) -> Dict:
+        # device_buffer ignored: the decoder's cross-attention reads the
+        # whole (fixed) encoder pool — there is no top-k fetch to buffer
         z = self._empty_state  # reuse shapes via eval_shape (no allocation)
         return jax.eval_shape(lambda: z(batch, seq_len))
 
-    def init_serve_state(self, batch: int, seq_len: int) -> Dict:
+    def init_serve_state(self, batch: int, seq_len: int,
+                         device_buffer: int = 0) -> Dict:
         return self._empty_state(batch, seq_len)

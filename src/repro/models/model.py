@@ -59,10 +59,16 @@ def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig
     return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
 
 
-def decode_input_specs(model, shape: ShapeConfig) -> Dict[str, Any]:
+def decode_input_specs(model, shape: ShapeConfig,
+                       device_buffer: int = 0) -> Dict[str, Any]:
+    """``device_buffer`` > 0 adds the HiSparse hot-tier state (per-layer
+    ``hot_buf`` + measured ``buf_hits``/``buf_misses``) to the decode
+    specs — the serve_state layout the engine runs with (miss-only
+    fabric charging, serving/engine.py)."""
     B, S = shape.global_batch, shape.seq_len
     return {
-        "state": model.serve_state_shapes(B, S),
+        "state": model.serve_state_shapes(B, S,
+                                          device_buffer=device_buffer),
         "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
     }
 

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import hisparse
 from repro.core import sac as sac_core
 from repro.core.pool import FetchFn, local_fetch, pool_write
 from repro.distributed.sharding import constrain
@@ -291,10 +292,13 @@ def segment_fwd(seg: Segment, cfg: ModelConfig, shared_params=None,
 # ---------------------------------------------------------------------------
 
 
-def _attn_decode(p, x, cfg, ctx, kv_slice, idx_slice, window):
+def _attn_decode(p, x, cfg, ctx, kv_slice, idx_slice, window, hbuf=None):
     """One attention layer's decode.  x: [B, D]; kv_slice: [B, S, d].
 
-    Returns (delta [B,D], new_entry [B,d_kv], new_idx_key [B,d_idx]).
+    Returns (delta [B,D], new_entry [B,d_kv], new_idx_key [B,d_idx],
+    new_hbuf, hits [B], misses [B]).  ``hbuf`` is this layer's HiSparse
+    hot-tier state (core/hisparse.py) or None; the last three outputs are
+    None unless a buffer was threaded in.
     """
     xn = rms_norm(x, p["ln1"])
     positions, cache_len = ctx["positions"], ctx["cache_len"]
@@ -311,58 +315,98 @@ def _attn_decode(p, x, cfg, ctx, kv_slice, idx_slice, window):
             delta = sac_core.dense_attend(p["attn"], xn, cfg, kv_slice,
                                           cache_len, positions, own)
         new_key = jnp.zeros((x.shape[0], cfg.sac.d_idx), DTYPE)
-        return delta, own, new_key
+        if hbuf is not None:   # keep scan pytree structure: untouched buffer
+            zero = jnp.zeros((x.shape[0],), jnp.int32)
+            return delta, own, new_key, hbuf, zero, zero
+        return delta, own, new_key, None, None, None
     # SAC path: indexer -> top-k -> fetch -> sparse attention
     new_key = dsa.indexer_keys(p["idx"], xn)
-    delta = sac_core.sparse_attend(
+    if hbuf is None:
+        delta = sac_core.sparse_attend(
+            p["attn"], p["idx"], xn, cfg, kv_slice, idx_slice, cache_len,
+            positions, own, fetch_fn=ctx["fetch_fn"],
+            topk_fn=ctx.get("topk_fn"), window=window)
+        return delta, own, new_key, None, None, None
+    # buffered read-through: values are bit-identical, but residency is
+    # measured so the host charges only misses to the fabric (paper §5.5)
+    delta, hbuf, hits, misses = sac_core.sparse_attend(
         p["attn"], p["idx"], xn, cfg, kv_slice, idx_slice, cache_len,
         positions, own, fetch_fn=ctx["fetch_fn"], topk_fn=ctx.get("topk_fn"),
-        window=window)
-    return delta, own, new_key
+        window=window, buf_state=hbuf)
+    return delta, own, new_key, hbuf, hits, misses
 
 
-def _layer_decode(p, x, cfg, ctx, kv_slice, idx_slice, window):
-    delta, own, new_key = _attn_decode(p, x, cfg, ctx, kv_slice, idx_slice,
-                                       window)
+def _layer_decode(p, x, cfg, ctx, kv_slice, idx_slice, window, hbuf=None):
+    delta, own, new_key, hbuf2, hits, misses = _attn_decode(
+        p, x, cfg, ctx, kv_slice, idx_slice, window, hbuf)
     x = x + delta
     out, _ = _mlp_apply(p["mlp"], rms_norm(x, p["ln2"])[:, None, :], cfg,
                         decode=True)
     x = x + out[:, 0]
-    return constrain(x, ("B", "D")), own, new_key
+    return constrain(x, ("B", "D")), own, new_key, hbuf2, hits, misses
+
+
+def _hb_layer(hb, i):
+    """Slice layer ``i`` of an [a, ...]-stacked hot-buffer tree (or None)."""
+    return None if hb is None else jax.tree.map(lambda t: t[i], hb)
+
+
+def _hb_stack(hbs):
+    """Stack per-layer hot-buffer states back to [a, ...] (or None)."""
+    if not hbs or hbs[0] is None:
+        return None
+    return jax.tree.map(lambda *a: jnp.stack(a), *hbs)
+
+
+def _hm_sum(hits, misses):
+    """Sum per-layer hit/miss counts ([B] each) into one (hits, misses)."""
+    if not hits or hits[0] is None:
+        return None
+    return (sum(hits[1:], hits[0]), sum(misses[1:], misses[0]))
 
 
 def segment_decode(seg: Segment, cfg: ModelConfig, shared_params=None):
     """Scan body for decode.
 
-    (x, p_slice, kv_slices [a,B,S,d], idx_slices, rec_slice, ctx)
-      -> (x', new_entries [a,B,d], new_keys [a,B,di], new_rec)
+    (x, p_slice, kv_slices [a,B,S,d], idx_slices, hbuf_slices, rec_slice,
+     ctx) -> (x', new_entries [a,B,d], new_keys [a,B,di], new_hbuf,
+              (hits [B], misses [B]) | None, new_rec)
+
+    ``hbuf_slices`` is the segment's per-iteration stack of HiSparse
+    hot-buffer states ([a, ...] leading axes) or None; hit/miss counts
+    are summed over the iteration's attention layers.
     """
     if seg.kind in ("dense", "moe", "mla_dense", "mla_moe"):
-        def body(x, p, kv, ik, rec, ctx):
-            x, own, key = _layer_decode(p, x, cfg, ctx, kv[0],
-                                        None if ik is None else ik[0],
-                                        seg.window)
-            return x, own[None], key[None], rec
+        def body(x, p, kv, ik, hb, rec, ctx):
+            x, own, key, hb2, h, m = _layer_decode(
+                p, x, cfg, ctx, kv[0], None if ik is None else ik[0],
+                seg.window, _hb_layer(hb, 0))
+            return (x, own[None], key[None], _hb_stack([hb2]),
+                    _hm_sum([h], [m]), rec)
         return body
 
     if seg.kind == "lg_super":
-        def body(x, p, kv, ik, rec, ctx):
-            owns, keys = [], []
+        def body(x, p, kv, ik, hb, rec, ctx):
+            owns, keys, hbs, hs, ms = [], [], [], [], []
             for i in range(cfg.local_global_ratio):
                 pl = jax.tree.map(lambda a: a[i], p["local"])
-                x, own, key = _layer_decode(pl, x, cfg, ctx, kv[i],
-                                            None if ik is None else ik[i],
-                                            cfg.local_window)
+                x, own, key, hb2, h, m = _layer_decode(
+                    pl, x, cfg, ctx, kv[i], None if ik is None else ik[i],
+                    cfg.local_window, _hb_layer(hb, i))
                 owns.append(own); keys.append(key)
+                hbs.append(hb2); hs.append(h); ms.append(m)
             g = cfg.local_global_ratio
-            x, own, key = _layer_decode(p["global"], x, cfg, ctx, kv[g],
-                                        None if ik is None else ik[g], 0)
+            x, own, key, hb2, h, m = _layer_decode(
+                p["global"], x, cfg, ctx, kv[g],
+                None if ik is None else ik[g], 0, _hb_layer(hb, g))
             owns.append(own); keys.append(key)
-            return x, jnp.stack(owns), jnp.stack(keys), rec
+            hbs.append(hb2); hs.append(h); ms.append(m)
+            return (x, jnp.stack(owns), jnp.stack(keys), _hb_stack(hbs),
+                    _hm_sum(hs, ms), rec)
         return body
 
     if seg.kind == "zamba_super":
-        def body(x, p, kv, ik, rec, ctx):
+        def body(x, p, kv, ik, hb, rec, ctx):
             new_rec = []
             for i in range(cfg.shared_attn_every):
                 pl = jax.tree.map(lambda a: a[i], p["mamba_layers"])
@@ -371,21 +415,23 @@ def segment_decode(seg: Segment, cfg: ModelConfig, shared_params=None):
                                              rms_norm(x, pl["ln"]), cfg, st)
                 x = x + out
                 new_rec.append(st2)
-            x, own, key = _layer_decode(shared_params, x, cfg, ctx, kv[0],
-                                        None if ik is None else ik[0], 0)
+            x, own, key, hb2, h, m = _layer_decode(
+                shared_params, x, cfg, ctx, kv[0],
+                None if ik is None else ik[0], 0, _hb_layer(hb, 0))
             rec_out = jax.tree.map(lambda *a: jnp.stack(a), *new_rec)
-            return x, own[None], key[None], rec_out
+            return (x, own[None], key[None], _hb_stack([hb2]),
+                    _hm_sum([h], [m]), rec_out)
         return body
 
     if seg.kind == "mamba_tail":
-        def body(x, p, kv, ik, rec, ctx):
+        def body(x, p, kv, ik, hb, rec, ctx):
             out, rec2 = ssm.mamba2_decode(p["mamba"], rms_norm(x, p["ln"]),
                                           cfg, rec)
-            return x + out, None, None, rec2
+            return x + out, None, None, None, None, rec2
         return body
 
     if seg.kind == "xlstm_super":
-        def body(x, p, kv, ik, rec, ctx):
+        def body(x, p, kv, ik, hb, rec, ctx):
             m_rec, s_rec = rec
             new_m = []
             for i in range(3):
@@ -398,7 +444,7 @@ def segment_decode(seg: Segment, cfg: ModelConfig, shared_params=None):
             out, s2 = ssm.slstm_decode(ps, rms_norm(x, ps["ln"]), cfg, s_rec)
             x = x + out
             m_out = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
-            return x, None, None, (m_out, s2)
+            return x, None, None, None, None, (m_out, s2)
         return body
 
     raise ValueError(seg.kind)
@@ -569,14 +615,27 @@ class TransformerLM:
             "mode": self.mode,
         }
         kv_pool, idx_pool = state.get("kv_pool"), state.get("idx_pool")
+        hot = state.get("hot_buf")    # layered hisparse.BufferState or None
         pool_closure = bool(self.opts.get("pool_closure"))
         use_idx = idx_pool is not None and self.mode == "sac"
         new_entries, new_keys = [], []
+        buf_hits = jnp.zeros((B,), jnp.int32)
+        buf_misses = jnp.zeros((B,), jnp.int32)
         kv_off = 0
         for si, seg in enumerate(self.segments):
             body = segment_decode(seg, cfg, params.get("shared"))
             a = seg.kv_per_iter
             rec = state.get(f"rec_{si}")
+            hb_g = None
+            if hot is not None and a and kv_pool is not None:
+                # this segment's hot-buffer layer block, regrouped to
+                # [n, a, ...] so the scan threads one [a, ...] slice per
+                # iteration (mutable xs/ys — unlike the read-only pools,
+                # the buffer is UPDATED by every layer's read_through)
+                hb_g = jax.tree.map(
+                    lambda t: jax.lax.dynamic_slice_in_dim(
+                        t, kv_off, seg.n * a, 0).reshape(
+                            seg.n, a, *t.shape[1:]), hot)
 
             if pool_closure and a and kv_pool is not None:
                 # §Perf C4: pools stay closure-captured, FLAT — each
@@ -585,17 +644,18 @@ class TransformerLM:
                 # (which forced a layout-assignment copy of the whole
                 # pool) and no scan-xs streaming (which double-buffers it).
                 def scan_body(x, xs, _body=body, _off=kv_off, _a=a):
-                    p, i, rc = xs
+                    p, i, hb, rc = xs
                     kv = jax.lax.dynamic_slice_in_dim(
                         kv_pool, _off + i * _a, _a, 0)
                     ik = jax.lax.dynamic_slice_in_dim(
                         idx_pool, _off + i * _a, _a, 0) if use_idx else None
-                    x, own, keys, rc2 = _body(x, p, kv, ik, rc, ctx)
-                    return x, (own, keys, rc2)
+                    x, own, keys, hb2, hm, rc2 = _body(x, p, kv, ik, hb,
+                                                       rc, ctx)
+                    return x, (own, keys, hb2, hm, rc2)
 
                 xs = (params["segments"][si],
-                      jnp.arange(seg.n, dtype=jnp.int32), rec)
-                kv_off += seg.n * a
+                      jnp.arange(seg.n, dtype=jnp.int32), hb_g, rec)
+                seg_off, kv_off = kv_off, kv_off + seg.n * a
             else:
                 if a and kv_pool is not None:
                     S = kv_pool.shape[2]
@@ -607,20 +667,34 @@ class TransformerLM:
                         ik_g = jax.lax.dynamic_slice_in_dim(
                             idx_pool, kv_off, seg.n * a, 0).reshape(
                                 seg.n, a, B, S, idx_pool.shape[-1])
-                    kv_off += seg.n * a
+                    seg_off, kv_off = kv_off, kv_off + seg.n * a
                 else:
-                    kv_g, ik_g = None, None
+                    kv_g, ik_g, seg_off = None, None, kv_off
 
                 def scan_body(x, xs, _body=body):
-                    p, kv, ik, rc = xs
-                    x, own, keys, rc2 = _body(x, p, kv, ik, rc, ctx)
-                    return x, (own, keys, rc2)
+                    p, kv, ik, hb, rc = xs
+                    x, own, keys, hb2, hm, rc2 = _body(x, p, kv, ik, hb,
+                                                       rc, ctx)
+                    return x, (own, keys, hb2, hm, rc2)
 
-                xs = (params["segments"][si], kv_g, ik_g, rec)
-            x, (own, keys, rec2) = jax.lax.scan(scan_body, x, xs)
+                xs = (params["segments"][si], kv_g, ik_g, hb_g, rec)
+            x, (own, keys, hb2, hm, rec2) = jax.lax.scan(scan_body, x, xs)
             if own is not None:
                 new_entries.append(own.reshape(-1, B, own.shape[-1]))
                 new_keys.append(keys.reshape(-1, B, keys.shape[-1]))
+            if hb2 is not None:
+                # fold the segment's updated [n, a, ...] buffer block back
+                # into the layered [L, ...] state
+                flat = jax.tree.map(
+                    lambda t: t.reshape(t.shape[0] * t.shape[1],
+                                        *t.shape[2:]), hb2)
+                hot = jax.tree.map(
+                    lambda full, upd, _o=seg_off:
+                        jax.lax.dynamic_update_slice_in_dim(full, upd, _o, 0),
+                    hot, flat)
+            if hm is not None:
+                buf_hits = buf_hits + hm[0].sum(0)
+                buf_misses = buf_misses + hm[1].sum(0)
             if rec2 is not None:
                 state = dict(state)
                 state[f"rec_{si}"] = rec2
@@ -631,13 +705,20 @@ class TransformerLM:
             if idx_pool is not None:
                 state["idx_pool"] = pool_write(
                     idx_pool, jnp.concatenate(new_keys, 0), cache_len)
+        if hot is not None:
+            state["hot_buf"] = hot
+            # per-step measured hot-tier outcomes (summed over layers);
+            # the engine reads these to charge miss-only fabric traffic
+            state["buf_hits"] = buf_hits
+            state["buf_misses"] = buf_misses
         state["cache_len"] = cache_len + 1
         x = rms_norm(x, params["final_norm"])
         logits = (x @ params["lm_head"]).astype(jnp.float32)
         return state, constrain(logits, ("B", "V"))
 
     # -- state builders ---------------------------------------------------------
-    def _empty_state(self, batch: int, seq_len: int) -> Dict:
+    def _empty_state(self, batch: int, seq_len: int,
+                     device_buffer: int = 0) -> Dict:
         cfg = self.cfg
         state: Dict[str, Any] = {"cache_len": jnp.zeros((batch,), jnp.int32)}
         if self.n_kv:
@@ -646,6 +727,15 @@ class TransformerLM:
             if cfg.sac.enabled:
                 state["idx_pool"] = jnp.zeros(
                     (self.n_kv, batch, seq_len, cfg.sac.d_idx), DTYPE)
+            if device_buffer and cfg.sac.enabled and self.mode == "sac":
+                # HiSparse hot tier: per-(layer, request) device buffer;
+                # the decode step reads through it and reports measured
+                # per-request hit/miss counts in buf_hits/buf_misses.
+                state["hot_buf"] = hisparse.init_layered_buffer(
+                    self.n_kv, batch, device_buffer, seq_len, self.kv_dim,
+                    self.kv_dtype)
+                state["buf_hits"] = jnp.zeros((batch,), jnp.int32)
+                state["buf_misses"] = jnp.zeros((batch,), jnp.int32)
         for si, seg in enumerate(self.segments):
             shapes = _stacked_rec_shapes(seg, cfg, batch)
             if shapes is not None:
@@ -653,25 +743,18 @@ class TransformerLM:
                     lambda s: jnp.zeros(s.shape, s.dtype), shapes)
         return state
 
-    def serve_state_shapes(self, batch: int, seq_len: int) -> Dict:
-        """ShapeDtypeStruct pytree of the serve state (dry-run input specs)."""
-        cfg = self.cfg
-        state: Dict[str, Any] = {
-            "cache_len": jax.ShapeDtypeStruct((batch,), jnp.int32)}
-        if self.n_kv:
-            state["kv_pool"] = jax.ShapeDtypeStruct(
-                (self.n_kv, batch, seq_len, self.kv_dim), self.kv_dtype)
-            if cfg.sac.enabled:
-                state["idx_pool"] = jax.ShapeDtypeStruct(
-                    (self.n_kv, batch, seq_len, cfg.sac.d_idx), DTYPE)
-        for si, seg in enumerate(self.segments):
-            shapes = _stacked_rec_shapes(seg, cfg, batch)
-            if shapes is not None:
-                state[f"rec_{si}"] = shapes
-        return state
+    def serve_state_shapes(self, batch: int, seq_len: int,
+                           device_buffer: int = 0) -> Dict:
+        """ShapeDtypeStruct pytree of the serve state (dry-run input specs).
 
-    def init_serve_state(self, batch: int, seq_len: int) -> Dict:
-        return self._empty_state(batch, seq_len)
+        Traced abstractly (zero allocation) so dry-runs can lower against
+        arbitrarily large states."""
+        return jax.eval_shape(
+            lambda: self._empty_state(batch, seq_len, device_buffer))
+
+    def init_serve_state(self, batch: int, seq_len: int,
+                         device_buffer: int = 0) -> Dict:
+        return self._empty_state(batch, seq_len, device_buffer)
 
     # -- shared pieces -----------------------------------------------------------
     def _embed_seq(self, params, tokens):

@@ -5,10 +5,20 @@ bookkeeping), runnable end-to-end on CPU with reduced configs.
 This is the functional counterpart of the simulator: the simulator
 answers "what would the cluster do", the engine actually *does* it for
 small models — real top-k selection, real pool reads/writes, real radix
-prefix reuse, and fabric-time accounting via core.transfer (cold-read
-convention: every step is charged the full top-k transfer; the HiSparse
-hot-buffer saving is modeled in the simulator, grounded against the
-functional buffer in tests/test_hisparse.py::test_hit_rate_grounding).
+prefix reuse, and the real HiSparse hot buffer (core/hisparse.py) wired
+into the jitted decode step.  With the buffer enabled (default), every
+step's top-k reads go through the in-graph read-through: decoded tokens
+are bit-identical to the buffer-off path, but residency is *measured*,
+and only misses are charged to the fabric (paper §5.5 miss-only
+traffic).  ``EngineStats.buffer_hits/buffer_misses`` are therefore live
+numbers, grounded against the simulator's analytic ``hit_rate()`` model
+in tests/test_engine_buffer.py.
+
+Placement and traffic accounting go through the shared substrate
+(core/placement.py, core/traffic.py): the engine's ``SACSystem`` places
+each request's pool pages with the same policy the scheduler and
+simulator use, and charges fetch/write traffic to the same
+``TrafficStats`` schema the simulator reports.
 """
 from __future__ import annotations
 
@@ -23,6 +33,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import hisparse
 from repro.core.sac import SACSystem
+from repro.core.traffic import TrafficStats
 from repro.models.model import build_model
 from repro.serving.radix import RadixIndex
 from repro.serving.request import Request, summarize
@@ -31,18 +42,30 @@ from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 @dataclasses.dataclass
 class EngineStats:
+    """Engine counters; fabric traffic lives in the shared TrafficStats
+    schema (the same object the engine's SACSystem accountant charges)."""
+
     steps: int = 0
     tokens: int = 0
-    pool_entries_fetched: int = 0
-    buffer_hits: int = 0
-    buffer_misses: int = 0
+    pool_entries_fetched: int = 0      # entries that crossed the fabric
     radix_hit_tokens: int = 0
-    fabric_time_s: float = 0.0
+    traffic: TrafficStats = dataclasses.field(default_factory=TrafficStats)
+
+    @property
+    def buffer_hits(self) -> int:
+        return int(self.traffic.buffer_hits)
+
+    @property
+    def buffer_misses(self) -> int:
+        return int(self.traffic.buffer_misses)
+
+    @property
+    def fabric_time_s(self) -> float:
+        return self.traffic.fabric_time_s
 
     @property
     def hit_rate(self) -> float:
-        tot = self.buffer_hits + self.buffer_misses
-        return self.buffer_hits / tot if tot else 0.0
+        return self.traffic.hit_rate
 
 
 class Engine:
@@ -53,24 +76,43 @@ class Engine:
     prefix reuse).  The pool state is the serve_state pytree of
     models/transformer.py; per-slot independence is guaranteed by the
     batch dimension.
+
+    ``track_buffer`` wires the HiSparse hot buffer into the decode step
+    (``device_buffer`` entries per layer per slot, default
+    ``cfg.sac.device_buffer_size``); fabric time is then charged on
+    measured misses only.  Off, every step is charged the full cold-read
+    top-k transfer.
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int = 4,
                  max_ctx: int = 256, backend: str = "cxl",
-                 mode: str = "sac", track_buffer: bool = True, seed: int = 0):
+                 mode: str = "sac", track_buffer: bool = True,
+                 device_buffer: Optional[int] = None,
+                 topk_fn=None, seed: int = 0):
         self.cfg = cfg
         self.slots = slots
         self.max_ctx = max_ctx
-        self.model = build_model(cfg, mode=mode)
+        # topk_fn overrides the indexer's top-k selection inside the jitted
+        # step (scores, cache_len) -> (idx, valid); used by parity tests to
+        # replay controlled top-k traces through the real buffer wiring
+        self.model = build_model(cfg, mode=mode, topk_fn=topk_fn)
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self.sac = SACSystem(cfg, backend=backend)
         self.radix = RadixIndex(page_size=cfg.sac.page_size)
-        self.stats = EngineStats()
+        # the engine's stats share the SACSystem accountant's TrafficStats:
+        # every charged fetch/write and recorded hit/miss lands here
+        self.stats = EngineStats(traffic=self.sac.traffic.stats)
+        self.device_buffer = 0
+        if (track_buffer and cfg.sac.enabled and not cfg.enc_dec
+                and self.model.mode == "sac"):
+            self.device_buffer = (cfg.sac.device_buffer_size
+                                  if device_buffer is None else device_buffer)
 
         self._decode = jax.jit(self.model.decode)
         self._prefill_one = jax.jit(
             lambda p, toks: self.model.prefill(p, toks))
-        self.state = self.model.init_serve_state(slots, max_ctx)
+        self.state = self.model.init_serve_state(
+            slots, max_ctx, device_buffer=self.device_buffer)
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_tokens: List[List[int]] = [[] for _ in range(slots)]
         self.queue: List[Request] = []
@@ -99,7 +141,7 @@ class Engine:
             st, _ = self._prefill_one(self.params, prompt[None, :])
             self._splice_state(s, st, len(prompt))
             # charge the pool write (prefill write path)
-            self.stats.fabric_time_s += self.sac.write_back_time(len(prompt))
+            self.sac.write_back_time(len(prompt))
             page_tokens = (len(prompt) // self.cfg.sac.page_size) \
                 * self.cfg.sac.page_size
             if page_tokens:
@@ -115,7 +157,9 @@ class Engine:
         state (padding the sequence axis up to max_ctx).  Dispatch is
         key-aware: pools are [L, B, S, d] (batch axis 1, padded S),
         cache lengths are [B], recurrent states have a unique axis where
-        dst == slots and src == 1."""
+        dst == slots and src == 1.  The hot buffer has no prefill
+        counterpart — the slot's lane is simply reset (a fresh request
+        starts cold; its pool pages are being overwritten)."""
         def splice_pool(dst, src):
             pad = dst.shape[2] - src.shape[2]
             if pad:
@@ -136,6 +180,12 @@ class Engine:
 
         new_state = dict(self.state)
         for key, dst in self.state.items():
+            if key == "hot_buf":
+                new_state[key] = hisparse.reset_lane(dst, slot)
+                continue
+            if key in ("buf_hits", "buf_misses"):
+                new_state[key] = dst.at[slot].set(0)
+                continue
             src = st_one[key]
             if key in ("kv_pool", "idx_pool", "self_kv"):
                 new_state[key] = splice_pool(dst, src)
@@ -159,16 +209,35 @@ class Engine:
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
         self.stats.steps += 1
 
-        # fabric accounting: each occupied slot fetched k entries per layer
+        # fabric accounting per occupied slot
         occupied = [s for s in range(self.slots) if self.slot_req[s]]
         if self.cfg.sac.enabled and self.model.mode == "sac":
-            k = min(self.cfg.sac.topk, self.max_ctx)
-            n_layers = max(getattr(self.model, "n_kv", 1), 1)
-            for s in occupied:
-                n = k * n_layers
-                self.stats.pool_entries_fetched += n
-                self.stats.fabric_time_s += self.sac.sparse_fetch_time(
-                    min(n, int(prev_len[s]) * n_layers or 1))
+            if self.device_buffer:
+                # miss-only charging: the jitted step measured per-slot
+                # hot-tier residency; only misses cross the fabric
+                hits = np.asarray(self.state["buf_hits"])
+                misses = np.asarray(self.state["buf_misses"])
+                for s in occupied:
+                    req = self.slot_req[s]
+                    self.sac.traffic.record_hits(int(hits[s]),
+                                                 int(misses[s]))
+                    n_miss = int(misses[s])
+                    self.stats.pool_entries_fetched += n_miss
+                    if n_miss:
+                        self.sac.sparse_fetch_time(
+                            n_miss, device=self.sac.device_of(
+                                req.request_id))
+            else:
+                # cold-read convention: every step is charged the full
+                # top-k transfer per layer
+                k = min(self.cfg.sac.topk, self.max_ctx)
+                n_layers = max(getattr(self.model, "n_kv", 1), 1)
+                for s in occupied:
+                    req = self.slot_req[s]
+                    n = min(k * n_layers, int(prev_len[s]) * n_layers or 1)
+                    self.stats.pool_entries_fetched += n
+                    self.sac.sparse_fetch_time(
+                        n, device=self.sac.device_of(req.request_id))
 
         finished = []
         for s in occupied:
@@ -205,5 +274,8 @@ class Engine:
         out.update(engine_steps=self.stats.steps,
                    engine_tokens=self.stats.tokens,
                    radix_hit_tokens=self.stats.radix_hit_tokens,
-                   fabric_time_s=self.stats.fabric_time_s)
+                   fabric_time_s=self.stats.fabric_time_s,
+                   buffer_hits=self.stats.buffer_hits,
+                   buffer_misses=self.stats.buffer_misses,
+                   buffer_hit_rate=self.stats.hit_rate)
         return out

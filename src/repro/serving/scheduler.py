@@ -1,12 +1,14 @@
 """Request scheduler: admission control + pool-device interleaving.
 
-Implements the paper's §4.3.3 dispatch policy: a request's KV lives on
-ONE pool device; the scheduler round-robins requests across devices so
-concurrent GPU fetches spread over fabric links.  Admission respects
-(a) the concurrency cap, (b) pool capacity, (c) local-memory capacity
-(the RDMA baseline's resident-KV constraint), and (d) HBM KV capacity
-(GPU-only baseline).  The max per-device queue imbalance is bounded by
-construction (property-tested).
+Implements the paper's §4.3.3 dispatch policy through the shared
+placement substrate (core/placement.py): a request's KV lives on ONE
+pool device; the placer's round-robin policy spreads requests across
+devices so concurrent GPU fetches spread over fabric links.  Admission
+respects (a) the concurrency cap, (b) pool capacity (byte-granular,
+enforced by the placer), (c) local-memory capacity (the RDMA baseline's
+resident-KV constraint), and (d) HBM KV capacity (GPU-only baseline).
+The max per-device queue imbalance is bounded by construction
+(property-tested in tests/test_placement.py).
 """
 from __future__ import annotations
 
@@ -14,6 +16,7 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
+from repro.core.placement import Placer, policy_for_interleave
 from repro.serving.request import Request
 
 
@@ -22,6 +25,7 @@ class SchedulerConfig:
     concurrency: int = 64
     n_pool_devices: int = 2
     interleave: bool = True
+    placement: Optional[str] = None            # override policy by name
     pool_device_bytes: float = 256e9
     local_dram_bytes: float = float("inf")     # RDMA baseline constraint
     hbm_kv_bytes: float = float("inf")         # GPU-only baseline constraint
@@ -33,10 +37,12 @@ class Scheduler:
         self.cfg = cfg
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
-        self.device_bytes = [0.0] * cfg.n_pool_devices
+        self.placer = Placer(
+            cfg.n_pool_devices,
+            policy=cfg.placement or policy_for_interleave(cfg.interleave),
+            capacity_bytes=cfg.pool_device_bytes)
         self.local_bytes = 0.0
         self.hbm_bytes = 0.0
-        self._rr = 0
 
     # -- queueing --------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -44,15 +50,6 @@ class Scheduler:
 
     def _kv_bytes(self, req: Request) -> float:
         return (req.context_len + req.output_len) * self.cfg.bytes_per_token
-
-    def _pick_device(self, need: float) -> Optional[int]:
-        n = self.cfg.n_pool_devices
-        order = ([(self._rr + i) % n for i in range(n)]
-                 if self.cfg.interleave else list(range(n)))
-        for dev in order:
-            if self.device_bytes[dev] + need <= self.cfg.pool_device_bytes:
-                return dev
-        return None
 
     def try_admit(self, now_s: float) -> List[Request]:
         """Admit queued requests while resources allow (FCFS)."""
@@ -64,35 +61,32 @@ class Scheduler:
                 break                      # RDMA local-memory wall (P2)
             if self.hbm_bytes + need > self.cfg.hbm_kv_bytes:
                 break                      # HBM capacity wall (fig 12)
-            dev = self._pick_device(need)
+            dev = self.placer.place(req.request_id, n_bytes=need)
             if dev is None:
                 break                      # pool exhausted
             self.queue.popleft()
             req.pool_device = dev
             req.dispatch_s = now_s
-            self.device_bytes[dev] += need
             self.local_bytes += need
             self.hbm_bytes += need
             self.active[req.request_id] = req
-            if self.cfg.interleave:
-                self._rr = (dev + 1) % self.cfg.n_pool_devices
             admitted.append(req)
         return admitted
 
     def finish(self, req: Request) -> None:
         self.active.pop(req.request_id, None)
         need = self._kv_bytes(req)
-        self.device_bytes[req.pool_device] -= need
+        self.placer.release(req.request_id)
         self.local_bytes -= need
         self.hbm_bytes -= need
 
     # -- introspection ----------------------------------------------------------
+    @property
+    def device_bytes(self) -> List[float]:
+        return list(self.placer.bytes_used)
+
     def device_loads(self) -> List[int]:
-        loads = [0] * self.cfg.n_pool_devices
-        for r in self.active.values():
-            loads[r.pool_device] += 1
-        return loads
+        return self.placer.device_loads()
 
     def max_imbalance(self) -> int:
-        loads = self.device_loads()
-        return max(loads) - min(loads) if loads else 0
+        return self.placer.max_imbalance()

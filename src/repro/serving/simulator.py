@@ -27,12 +27,21 @@ The HiSparse hot-buffer hit model: consecutive-step top-k sets overlap
 heavily; a buffer of ``buf`` entries (per layer per request) retains
 ``h = rho(ctx) * buf / (buf + topk)`` of each step's top-k, where rho
 decays slowly with context (score drift grows with more candidates).
-Calibrated against the real HiSparse implementation (core/hisparse.py)
-in tests/test_hit_model.py.
+``hit_rate`` is evaluated per request on its OWN context length, so a
+mixed-length trace charges each request its own miss traffic.  The model
+is calibrated against the real in-graph HiSparse buffer
+(core/hisparse.py) two ways: directly in tests/test_hisparse.py, and
+against the serving engine's *measured* hit rate (the engine decodes
+with the real buffer wired into its jitted step) in
+tests/test_engine_buffer.py.
+
+Shared substrate: placement decisions come from core/placement.py (via
+the embedded Scheduler) and per-device fetch demand is accumulated in a
+core/traffic.py ``FabricAccountant`` — the same schema the real engine
+reports, so simulator and engine traffic numbers are directly
+comparable.
 """
 from __future__ import annotations
-
-REARRANGE_BW = 10e9       # page-first -> layer-first re-layout engine (P1)
 
 import dataclasses
 import math
@@ -40,8 +49,11 @@ from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.core.traffic import FabricAccountant
 from repro.serving.request import Request, summarize
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+REARRANGE_BW = 10e9       # page-first -> layer-first re-layout engine (P1)
 
 
 # ---------------------------------------------------------------------------
@@ -244,9 +256,15 @@ def simulate(reqs: List[Request], model: ModelProfile,
     prefill_done: List[Tuple[float, Request]] = []
     prefill_busy_until = [0.0] * max(sim.prefill_concurrency, 1)
     n_done = 0
-    h = hit_rate(sim.device_buffer, model.topk, reqs[0].context_len)
-    miss_bytes = model.n_attn_layers * model.topk * (1 - h) \
-        * model.entry_bytes
+    acct = FabricAccountant(n_devices=backend.n_pool_devices)
+
+    # per-request miss traffic: each request's hot-buffer hit rate depends
+    # on its OWN context length (mixed-length traces are the norm).
+    step_topk = model.n_attn_layers * model.topk
+    hit_rates = {r.request_id: hit_rate(sim.device_buffer, model.topk,
+                                        r.context_len) for r in reqs}
+    miss_bytes = {rid: step_topk * (1 - h) * model.entry_bytes
+                  for rid, h in hit_rates.items()}
 
     def admit_ready(now: float):
         for r in sched.try_admit(now):
@@ -312,18 +330,22 @@ def simulate(reqs: List[Request], model: ModelProfile,
         # ---- one decode step over the active batch ----
         batch = len(decoding)
         t_comp = model.base_step_s + batch * model.per_token_compute_s()
-        # fetch demand per pool device
+        # fetch demand per pool device (shared traffic substrate)
         if backend.name == "hbm":
             t_fetch = 0.0
         else:
-            demand = [0.0] * backend.n_pool_devices
             for r in decoding.values():
-                demand[r.pool_device % backend.n_pool_devices] += miss_bytes
+                acct.add_step_demand(r.pool_device,
+                                     miss_bytes[r.request_id])
+                h = hit_rates[r.request_id]
+                acct.record_hits(h * step_topk, (1 - h) * step_topk)
+            demand = acct.drain_step()
             bw = backend.fetch_bw_Bps
             if backend.prefetch and (prefetch.busy() or rearrange.busy()):
                 bw *= (1 - backend.pcie_contention)   # PCIe bus contention
             t_fetch = (max(demand) / bw + backend.fetch_base_s
                        + model.n_attn_layers * backend.layer_latency_s)
+            acct.charge_seconds(t_fetch)
         dt = t_comp + max(0.0, t_fetch - sim.overlap_frac * t_comp)
         t += dt
 
@@ -350,7 +372,11 @@ def simulate(reqs: List[Request], model: ModelProfile,
             sched.finish(r)
             n_done += 1
 
-    return summarize(reqs)
+    out = summarize(reqs)
+    out.update(fabric_time_s=acct.stats.fabric_time_s,
+               bytes_fetched=acct.stats.bytes_fetched,
+               sim_hit_rate=acct.stats.hit_rate)
+    return out
 
 
 def run_backend_sweep(reqs: List[Request], model: ModelProfile,

@@ -1,0 +1,33 @@
+"""Guarded hypothesis import: property tests skip cleanly where the
+package is absent (pytest.importorskip semantics, but scoped to the
+``@given`` tests instead of nuking whole modules that also hold plain
+unit tests).
+
+Usage:  ``from hypothesis_compat import given, settings, st``
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Evaluates strategy expressions at decoration time to harmless
+        placeholders (the decorated test is skipped anyway)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*a, **k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*a, **k):
+        return lambda fn: fn

@@ -1,0 +1,123 @@
+"""Real HiSparse hot buffer wired into the engine decode path.
+
+Acceptance properties (paper §5.5 miss-only traffic):
+  - measured buffer_hits/buffer_misses are live, nonzero numbers;
+  - fabric time is charged on misses only (less than the cold-read
+    convention's full top-k charge);
+  - decoded tokens are bit-identical with the buffer on vs off (the hot
+    tier changes traffic, never results);
+  - parity: the simulator's analytic hit_rate() matches the
+    engine-measured hit rate on a shared drifting-top-k trace.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import Engine
+from repro.serving.request import sharegpt_trace
+from repro.serving.simulator import hit_rate
+
+
+def _trace(cfg, n=4, ctx=40, out=6, seed=3):
+    return sharegpt_trace(n, context_len=ctx, output_len=out, seed=seed,
+                          ctx_jitter=0.0, vocab=cfg.vocab)
+
+
+def test_buffer_counters_are_live():
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = Engine(cfg, slots=2, max_ctx=96)      # buffer on by default
+    out = eng.run(_trace(cfg, n=4))
+    assert out["n_done"] == 4
+    assert eng.stats.buffer_hits + eng.stats.buffer_misses > 0
+    assert eng.stats.buffer_hits > 0            # top-k sets overlap
+    assert 0.0 < eng.stats.hit_rate < 1.0
+    # pool traffic is THE miss traffic: entries fetched == misses, and
+    # bytes follow at entry granularity
+    assert eng.stats.pool_entries_fetched == eng.stats.buffer_misses
+    assert eng.stats.traffic.bytes_fetched == \
+        eng.stats.buffer_misses * eng.sac.entry_bytes
+
+
+def test_fabric_charged_on_misses_only():
+    cfg = get_config("qwen2-1.5b").reduced()
+    on = Engine(cfg, slots=2, max_ctx=96, seed=1)
+    off = Engine(cfg, slots=2, max_ctx=96, seed=1, track_buffer=False)
+    r_on = on.run(_trace(cfg, n=4))
+    r_off = off.run(_trace(cfg, n=4))
+    assert off.stats.buffer_hits == off.stats.buffer_misses == 0
+    # buffered engine fetched strictly fewer entries over the fabric
+    assert on.stats.pool_entries_fetched < off.stats.pool_entries_fetched
+    assert r_on["fabric_time_s"] < r_off["fabric_time_s"]
+    # both decoded the same number of tokens
+    assert r_on["engine_tokens"] == r_off["engine_tokens"]
+
+
+def test_tokens_bit_identical_buffer_on_off():
+    """The hot tier changes traffic, never results: greedy streams match
+    token-for-token."""
+    cfg = get_config("minicpm-2b").reduced()
+    engines = [Engine(cfg, slots=2, max_ctx=96, seed=2,
+                      track_buffer=tb) for tb in (True, False)]
+    for eng in engines:
+        # long outputs: no slot finishes within the observed window, so
+        # slot_tokens holds every decoded token
+        for r in _trace(cfg, n=2, ctx=40, out=50, seed=7):
+            eng.submit(r)
+        for _ in range(12):
+            eng.step()
+    on, off = engines
+    assert on.slot_tokens == off.slot_tokens
+    assert on.stats.buffer_hits + on.stats.buffer_misses > 0
+
+
+def test_slot_recycling_resets_buffer_lane():
+    """Three requests through one slot: the recycled lane must start cold
+    (no cross-request residency) and still complete correctly."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = Engine(cfg, slots=1, max_ctx=96, seed=0)
+    out = eng.run(_trace(cfg, n=3, ctx=24, out=4))
+    assert out["n_done"] == 3
+    # every request's first decode step starts cold: >= one full-topk miss
+    # burst per request
+    assert eng.stats.buffer_misses >= 3 * min(cfg.sac.topk, 24)
+
+
+def test_engine_hit_rate_parity_with_analytic_model():
+    """Ground the simulator's analytic hit model against the ENGINE's
+    measured hit rate on a shared trace.
+
+    The analytic model assumes the paper-scale workload: consecutive
+    top-k sets drift slowly.  Tiny reduced models churn far more (random
+    init indexer over a tiny candidate pool), so the shared trace is a
+    controlled drift injected via the engine's topk_fn hook — the read
+    path, buffer updates, and counters are the real jitted wiring."""
+    K, T, CTX, OUT = 16, 32, 80, 40
+
+    def drift_topk(scores, cache_len):
+        B = scores.shape[0]
+        j = jnp.arange(K, dtype=jnp.int32)[None, :]
+        t = cache_len[:, None]
+        # lane j re-points every T steps (staggered): ~K/T lane changes
+        # per step, matching the paper's slow salient-context drift
+        pos = (j * 7 + 131 * ((t + j) // T)) % CTX
+        return pos.astype(jnp.int32), jnp.ones((B, K), bool)
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    for buf in (32, 64):
+        eng = Engine(cfg, slots=1, max_ctx=160, device_buffer=buf,
+                     topk_fn=drift_topk)
+        eng.submit(_trace(cfg, n=1, ctx=CTX, out=OUT, seed=5)[0])
+        warm = (0, 0)
+        steps = 0
+        while any(eng.slot_req) or eng.queue:
+            eng.step()
+            steps += 1
+            if steps == 5:    # cold-start warmup excluded
+                warm = (eng.stats.buffer_hits, eng.stats.buffer_misses)
+            assert steps < 300
+        h = eng.stats.buffer_hits - warm[0]
+        m = eng.stats.buffer_misses - warm[1]
+        measured = h / (h + m)
+        modeled = hit_rate(buf, K, CTX)
+        assert abs(measured - modeled) < 0.08, (buf, measured, modeled)

@@ -1,0 +1,172 @@
+"""Shared placement substrate (core/placement.py): unit + seeded property
+tests (hypothesis-free so they run everywhere).
+
+The headline property: SACSystem (page-granular) and Scheduler
+(byte-granular) placement decisions AGREE for the same policy and request
+sequence — there is exactly one placement implementation and every layer
+consumes it.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.placement import (Placer, interleaved_assignment,
+                                  pages_for_tokens, policy_for_interleave)
+from repro.core.sac import SACSystem
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+# ---- Placer unit tests ----
+
+def test_round_robin_cycles_devices():
+    p = Placer(3, policy="round_robin")
+    assert [p.place(i) for i in range(6)] == [0, 1, 2, 0, 1, 2]
+    assert p.max_imbalance() == 0
+
+
+def test_first_fit_stacks_on_device_zero():
+    p = Placer(3, policy="first_fit")
+    assert [p.place(i) for i in range(4)] == [0, 0, 0, 0]
+
+
+def test_byte_capacity_skips_full_device():
+    p = Placer(2, policy="round_robin", capacity_bytes=100.0)
+    assert p.place(0, n_bytes=80.0) == 0
+    assert p.place(1, n_bytes=80.0) == 1
+    # both have 80/100 booked: a 30-byte request fits nowhere
+    assert p.place(2, n_bytes=30.0) is None
+    # a 20-byte request fits; round-robin pointer sits at device 0
+    assert p.place(3, n_bytes=20.0) == 0
+
+
+def test_page_capacity_independent_of_bytes():
+    p = Placer(2, policy="round_robin", capacity_pages=4)
+    assert p.place(0, n_pages=3) == 0
+    assert p.place(1, n_pages=3) == 1
+    assert p.place(2, n_pages=2) is None       # 3+2 > 4 on both
+    assert p.place(3, n_pages=1) == 0
+    p.release(0)
+    # rr pointer sits at 1, but device 1 has 3 booked and 3 more won't
+    # fit; falls through to device 0, which holds 1 page post-release
+    assert p.place(4, n_pages=3) == 0
+
+
+def test_least_loaded_balances_bytes():
+    p = Placer(3, policy="least_loaded")
+    assert p.place(0, n_bytes=100.0) == 0
+    assert p.place(1, n_bytes=10.0) == 1
+    assert p.place(2, n_bytes=10.0) == 2
+    # device 1 and 2 tie at 10 bytes; tie breaks to lower index
+    assert p.place(3, n_bytes=5.0) == 1
+    assert p.place(4, n_bytes=1.0) == 2
+
+
+def test_release_returns_device_and_frees():
+    p = Placer(2, policy="round_robin", capacity_bytes=10.0)
+    assert p.place(7, n_bytes=10.0) == 0
+    assert p.place(8, n_bytes=10.0) == 1
+    assert p.place(9, n_bytes=1.0) is None
+    assert p.release(7) == 0
+    assert p.release(7) is None                # idempotent
+    assert p.place(9, n_bytes=1.0) == 0
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError):
+        Placer(2, policy="random")
+
+
+def test_policy_for_interleave_mapping():
+    assert policy_for_interleave(True) == "round_robin"
+    assert policy_for_interleave(False) == "first_fit"
+
+
+def test_pages_for_tokens():
+    assert pages_for_tokens(0, 16) == 1
+    assert pages_for_tokens(16, 16) == 1
+    assert pages_for_tokens(17, 16) == 2
+
+
+def test_interleaved_assignment_compat():
+    # same helper is re-exported from core.pool for back-compat
+    from repro.core.pool import interleaved_assignment as via_pool
+    assert interleaved_assignment([0, 1, 2, 3], 2) == [0, 1, 0, 1]
+    assert interleaved_assignment([0, 1, 2, 3], 2, enabled=False) == [0] * 4
+    assert via_pool is interleaved_assignment
+
+
+# ---- cross-layer agreement (the substrate property) ----
+
+def _agree_one_seed(seed: int, policy: str, n_dev: int = 3,
+                    n_ops: int = 120):
+    """SACSystem and Scheduler must pick the same device for the same
+    request sequence under the same policy (ample capacity: the decision
+    is pure policy state, which both delegate to the shared Placer)."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    sac = SACSystem(cfg, n_pool_devices=n_dev, device_bytes=1 << 40,
+                    placement=policy)
+    # byte scale proportional to the SACSystem's page bytes so
+    # least-loaded orderings match: context lengths are page-aligned and
+    # bytes_per_token equals the per-token pool footprint
+    per_token = sac.page_bytes / sac.page_tokens
+    sched = Scheduler(SchedulerConfig(
+        concurrency=1 << 30, n_pool_devices=n_dev, placement=policy,
+        pool_device_bytes=float(1 << 40), bytes_per_token=per_token))
+    rng = np.random.default_rng(seed)
+    live = {}
+    for i in range(n_ops):
+        if live and rng.random() < 0.35:
+            rid = list(live)[int(rng.integers(len(live)))]
+            sac.release(rid)
+            sched.finish(live.pop(rid))
+        n_tok = int(rng.integers(1, 40)) * sac.page_tokens
+        rp = sac.place(i, n_tok)
+        req = Request(i, 0.0, n_tok, 0)
+        sched.submit(req)
+        admitted = sched.try_admit(0.0)
+        assert rp is not None and len(admitted) == 1
+        assert admitted[0].pool_device == rp.device, \
+            (seed, policy, i, admitted[0].pool_device, rp.device)
+        live[i] = req
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "first_fit",
+                                    "least_loaded"])
+def test_sacsystem_and_scheduler_placement_agree(policy):
+    for seed in range(5):
+        _agree_one_seed(seed, policy)
+
+
+def test_round_robin_imbalance_bounded():
+    """Admission-only round-robin keeps per-device load imbalance <= 1
+    (the paper's §4.3.3 link-balancing property), for any device count
+    and any request sizes that fit."""
+    rng = np.random.default_rng(0)
+    for n_dev in (1, 2, 3, 5):
+        p = Placer(n_dev, policy="round_robin")
+        for i in range(int(rng.integers(5, 60))):
+            p.place(i, n_bytes=float(rng.integers(1, 1000)))
+            assert p.max_imbalance() <= 1, (n_dev, i, p.device_loads())
+
+
+def test_round_robin_imbalance_bounded_with_releases():
+    """With arbitrary releases, imbalance stays bounded by the number of
+    in-flight removals + 1 — it never drifts unboundedly."""
+    rng = np.random.default_rng(1)
+    p = Placer(4, policy="round_robin")
+    live = []
+    nxt = 0
+    max_seen = 0
+    for step in range(400):
+        if live and rng.random() < 0.4:
+            p.release(live.pop(int(rng.integers(len(live)))))
+        else:
+            p.place(nxt)
+            live.append(nxt)
+            nxt += 1
+        max_seen = max(max_seen, p.max_imbalance())
+    # releases can dent one device, but round-robin refills the dents:
+    # imbalance stays small relative to 400 operations (deterministic
+    # seed; the observed max is 9 — this guards against linear drift)
+    assert max_seen <= 12, max_seen

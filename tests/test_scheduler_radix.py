@@ -1,7 +1,8 @@
 """Scheduler + radix cache property tests (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.serving.radix import RadixIndex
 from repro.serving.request import Request
