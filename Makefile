@@ -1,20 +1,27 @@
 # SAC reproduction — developer entry points.
 #
-#   make test       tier-1 suite (the ROADMAP verify command)
-#   make test-fast  substrate + engine-buffer slice (quick signal)
-#   make deps       install runtime + test dependencies
+#   make test        tier-1 suite (the ROADMAP verify command)
+#   make test-fast   substrate + engine-buffer slice (quick signal)
+#   make bench-smoke reduced buffer + prefetch sweeps; writes
+#                    BENCH_prefetch.json (the CI artifact)
+#   make deps        install runtime + test dependencies
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast deps
+.PHONY: test test-fast bench-smoke deps
 
 test:
 	python -m pytest -x -q
 
 test-fast:
 	python -m pytest -q tests/test_placement.py tests/test_engine_buffer.py \
-	    tests/test_core_system.py tests/test_simulator.py
+	    tests/test_prefetch.py tests/test_core_system.py \
+	    tests/test_simulator.py
+
+bench-smoke:
+	python -c "from benchmarks.fig14_buffer import run; run(quick=True)"
+	python -m benchmarks.prefetch_sweep --quick
 
 deps:
 	pip install -r requirements.txt

@@ -21,7 +21,9 @@ def run_cell(backend_name: str, *, ctx: int, concurrency: int = 64,
              n_requests: int = 512, output_len: int = 1024,
              device_buffer: int = 6144, round1: bool = False,
              backends=None, arch: str = PAPER_MODEL, seed: int = 1,
-             n_pool_devices: int = None) -> Dict[str, float]:
+             n_pool_devices: int = None, **sim_kw) -> Dict[str, float]:
+    """``sim_kw`` passes through to SimConfig (e.g. the fetch-pipeline
+    knobs ``prefetch_width`` / ``overlap_frac`` / ``pipeline_depth``)."""
     import dataclasses
     backends = backends or default_backends()
     b = backends[backend_name]
@@ -32,7 +34,8 @@ def run_cell(backend_name: str, *, ctx: int, concurrency: int = 64,
                           output_len=output_len, seed=seed)
     return simulate(reqs, model_profile(arch), b,
                     SimConfig(concurrency=concurrency,
-                              device_buffer=device_buffer, round1=round1))
+                              device_buffer=device_buffer, round1=round1,
+                              **sim_kw))
 
 
 class Csv:

@@ -17,19 +17,20 @@ def main() -> None:
                     help="reduced traces (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma list: fig5,fig9,fig10,fig11,fig12,fig13,"
-                         "fig14,kernels,roofline")
+                         "fig14,prefetch,kernels,roofline")
     args = ap.parse_args()
 
     from benchmarks import (appendix_d, fig5_retrieval, fig9_round1,
                             fig10_round2, fig11_scalability, fig12_nondisagg,
                             fig13_interleave, fig14_buffer, kernels_bench,
-                            roofline)
+                            prefetch_sweep, roofline)
     from benchmarks.common import Csv
 
     mods = {
         "fig5": fig5_retrieval, "fig9": fig9_round1, "fig10": fig10_round2,
         "fig11": fig11_scalability, "fig12": fig12_nondisagg,
         "fig13": fig13_interleave, "fig14": fig14_buffer,
+        "prefetch": prefetch_sweep,
         "appendixD": appendix_d,
         "kernels": kernels_bench, "roofline": roofline,
     }

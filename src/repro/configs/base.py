@@ -30,6 +30,18 @@ class SACConfig:
     overlap_fetch: bool = False      # beyond-paper: double-buffered fetch
     kv_quant: Optional[str] = None   # beyond-paper: None | "int8" pool quantization
 
+    # --- fetch pipeline (serving/prefetch.py) ---
+    prefetch_width: int = 512        # speculative entries/layer/step beyond
+                                     # top-k (ranks [k, k+w) of the indexer
+                                     # scores warm the hot tier for step t+1)
+    warmup_entries: int = 1024       # prefill warm-up: top-scoring prompt
+                                     # entries seeded per layer per request
+    warmup_radix: int = 512          # prefill warm-up: trailing tokens of the
+                                     # radix-reused prefix seeded per layer
+    pipeline_depth: int = 2          # double-buffered fetch queues/device
+    overlap_frac: float = 0.85       # fraction of step compute a queued
+                                     # fetch can hide behind
+
 
 # ---------------------------------------------------------------------------
 # Model architecture configuration
@@ -173,7 +185,9 @@ class ModelConfig:
             sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
             local_window=32,
             sac=dataclasses.replace(self.sac, topk=16, d_idx=8, n_idx_heads=2,
-                                    device_buffer_size=32, page_size=4),
+                                    device_buffer_size=32, page_size=4,
+                                    prefetch_width=8, warmup_entries=8,
+                                    warmup_radix=8),
         )
 
 

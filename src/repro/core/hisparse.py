@@ -34,12 +34,22 @@ _BIG = jnp.int32(1 << 30)
 
 
 class BufferState(NamedTuple):
-    """Per-request hot-tier state (all leading dims = [B, ...])."""
+    """Per-request hot-tier state (all leading dims = [B, ...]).
+
+    The ``pf_*`` fields are the speculative-prefetch bookkeeping of the
+    fetch pipeline (serving/prefetch.py): ``pf_flag`` marks slots filled
+    by ``warm_insert`` that have not been demand-hit yet; ``pf_inserted``
+    / ``pf_used`` are cumulative per-request counters, so prefetch
+    precision is measured *in-graph* (``wasted == inserted - used``).
+    """
     entries: jnp.ndarray      # [B, buf, d]   cached KV entries
     slot_pos: jnp.ndarray     # [B, buf]      global position held by slot (-1 empty)
     page_table: jnp.ndarray   # [B, S]        position -> slot (-1 not resident)
     last_use: jnp.ndarray     # [B, buf]      LRU clocks
     clock: jnp.ndarray        # [B]           step counter
+    pf_flag: jnp.ndarray      # [B, buf]      slot was prefetched, not yet used
+    pf_inserted: jnp.ndarray  # [B]           cumulative warm-inserted entries
+    pf_used: jnp.ndarray      # [B]           cumulative prefetched-then-hit
 
 
 def init_buffer(batch: int, buf_size: int, seq_len: int, entry_dim: int,
@@ -50,6 +60,9 @@ def init_buffer(batch: int, buf_size: int, seq_len: int, entry_dim: int,
         page_table=jnp.full((batch, seq_len), EMPTY),
         last_use=jnp.zeros((batch, buf_size), jnp.int32),
         clock=jnp.zeros((batch,), jnp.int32),
+        pf_flag=jnp.zeros((batch, buf_size), bool),
+        pf_inserted=jnp.zeros((batch,), jnp.int32),
+        pf_used=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -60,7 +73,7 @@ def lookup(state: BufferState, idx: jnp.ndarray
     return slots, slots >= 0
 
 
-def _swap_in_one(entries, slot_pos, page_table, last_use, clock,
+def _swap_in_one(entries, slot_pos, page_table, last_use, clock, pf_flag,
                  idx, fetched, valid):
     """Single-request swap-in (vmapped over B).
 
@@ -119,7 +132,16 @@ def _swap_in_one(entries, slot_pos, page_table, last_use, clock,
     lu = jnp.concatenate([last_use, jnp.zeros((1,), jnp.int32)])
     last_use = lu.at[touched].set(clock)[:buf]
 
-    return (entries, slot_pos, page_table, last_use,
+    # prefetch accounting: a demand hit on a prefetched slot consumes its
+    # flag (counted once per slot — the scatter-max dedupes repeated idx);
+    # demand fills overwrite any stale flag on the victim slot.
+    hit_mask = jnp.zeros((buf + 1,), bool) \
+        .at[jnp.where(hit, slots, buf)].max(hit)[:buf]
+    pf_used = (pf_flag & hit_mask).astype(jnp.int32).sum()
+    pf = jnp.concatenate([pf_flag & ~hit_mask, jnp.zeros((1,), bool)])
+    pf_flag = pf.at[assign].set(False)[:buf]
+
+    return (entries, slot_pos, page_table, last_use, pf_flag, pf_used,
             hit.astype(jnp.int32).sum(), miss.astype(jnp.int32).sum())
 
 
@@ -130,10 +152,13 @@ def swap_in(state: BufferState, idx: jnp.ndarray, fetched: jnp.ndarray,
     Returns (state', hits [B], misses [B]).
     """
     clock = state.clock + 1
-    entries, slot_pos, page_table, last_use, hits, misses = jax.vmap(
-        _swap_in_one)(state.entries, state.slot_pos, state.page_table,
-                      state.last_use, clock, idx, fetched, valid)
-    return (BufferState(entries, slot_pos, page_table, last_use, clock),
+    (entries, slot_pos, page_table, last_use, pf_flag, pf_used, hits,
+     misses) = jax.vmap(_swap_in_one)(
+        state.entries, state.slot_pos, state.page_table,
+        state.last_use, clock, state.pf_flag, idx, fetched, valid)
+    return (BufferState(entries, slot_pos, page_table, last_use, clock,
+                        pf_flag, state.pf_inserted,
+                        state.pf_used + pf_used),
             hits, misses)
 
 
@@ -159,6 +184,109 @@ def read_through(state: BufferState, idx: jnp.ndarray, fetched: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# warm inserts (fetch pipeline: speculative prefetch + prefill warm-up)
+# ---------------------------------------------------------------------------
+
+
+def _warm_insert_one(entries, slot_pos, page_table, last_use, clock, pf_flag,
+                     idx, vals, valid):
+    """Single-request warm insert (vmapped over B).
+
+    Insert-without-read: positions already resident are skipped (no hit
+    counted, no recency bump for THEIR slots beyond what the demand path
+    did), and the current step's working set — slots with
+    ``last_use >= clock`` (this step's hits, demand fills, and earlier
+    warm inserts) — is never evicted.  Inserted slots get the current
+    clock: the speculation is that they are next step's hits, so they age
+    exactly like this step's demand entries.
+    """
+    buf = slot_pos.shape[0]
+    w = idx.shape[0]
+    S = page_table.shape[0]
+    order = jnp.arange(w, dtype=jnp.int32)
+
+    resident = page_table[idx] >= 0
+    want = valid & ~resident
+    idx_dedup = jnp.where(want, idx, S)
+    first_occ = jnp.full((S + 1,), w, jnp.int32).at[idx_dedup].min(order)
+    want = want & (first_occ[idx_dedup] == order)
+
+    empty = slot_pos < 0
+    prot = (last_use >= clock) & ~empty
+    key = jnp.where(empty, jnp.arange(buf, dtype=jnp.int32) - _BIG,
+                    jnp.where(prot, _BIG, last_use))
+    victim_order = jnp.argsort(key).astype(jnp.int32)      # [buf]
+    avail = buf - prot.astype(jnp.int32).sum()             # evictable slots
+
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+    fill = want & (rank < avail)
+    assign = jnp.where(fill, victim_order[jnp.clip(rank, 0, buf - 1)],
+                       buf)                                # buf = sink row
+
+    pt = jnp.concatenate([page_table, jnp.full((1,), EMPTY)])
+    sp = jnp.concatenate([slot_pos, jnp.full((1,), EMPTY)])
+    old_pos = sp[assign]
+    pt = pt.at[jnp.where(old_pos >= 0, old_pos, S)].set(EMPTY)
+    pt = pt.at[jnp.where(fill, idx, S)].set(assign)
+    page_table = pt[:S]
+
+    sp = sp.at[assign].set(jnp.where(fill, idx, EMPTY))
+    slot_pos = sp[:buf]
+
+    ent = jnp.concatenate(
+        [entries, jnp.zeros((1, entries.shape[-1]), entries.dtype)])
+    ent = ent.at[assign].set(vals.astype(entries.dtype))
+    entries = ent[:buf]
+
+    lu = jnp.concatenate([last_use, jnp.zeros((1,), jnp.int32)])
+    last_use = lu.at[assign].set(clock)[:buf]
+
+    pf = jnp.concatenate([pf_flag, jnp.zeros((1,), bool)])
+    pf_flag = pf.at[assign].set(fill)[:buf]
+
+    return (entries, slot_pos, page_table, last_use, pf_flag,
+            fill.astype(jnp.int32).sum())
+
+
+def warm_insert(state: BufferState, idx: jnp.ndarray, vals: jnp.ndarray,
+                valid: jnp.ndarray) -> Tuple[BufferState, jnp.ndarray]:
+    """Batched warm insert.  idx: [B, w]; vals: [B, w, d]; valid: [B, w].
+
+    Inserts pool values into the hot tier WITHOUT serving a read — no
+    hit/miss is counted, current-step hits are never evicted, and already
+    resident positions are skipped.  Returns (state', inserted [B]); the
+    cumulative ``pf_inserted`` counter advances by the same amount.
+    """
+    (entries, slot_pos, page_table, last_use, pf_flag, ins) = jax.vmap(
+        _warm_insert_one)(state.entries, state.slot_pos, state.page_table,
+                          state.last_use, state.clock, state.pf_flag,
+                          idx, vals, valid)
+    return (BufferState(entries, slot_pos, page_table, last_use,
+                        state.clock, pf_flag, state.pf_inserted + ins,
+                        state.pf_used),
+            ins)
+
+
+def warm_lane(state: BufferState, lane, idx: jnp.ndarray,
+              vals: jnp.ndarray, valid: jnp.ndarray
+              ) -> Tuple[BufferState, jnp.ndarray]:
+    """Warm-insert into one request lane of a layered buffer.
+
+    state: layered ([L, B, ...]); idx: [L, w]; vals: [L, w, d];
+    valid: [L, w].  The per-layer slices of lane ``lane`` form exactly the
+    batched layout (L plays the batch axis), so this is ``warm_insert``
+    over layers.  Returns (state', total entries inserted) — the prefill
+    warm-up path of serving/prefetch.py (radix-reused pages + top-scoring
+    prompt entries seeding the hot tier).
+    """
+    sub = BufferState(*(t[:, lane] for t in state))
+    sub, ins = warm_insert(sub, idx, vals, valid)
+    new = BufferState(*(full.at[:, lane].set(part)
+                        for full, part in zip(state, sub)))
+    return new, ins.sum()
+
+
+# ---------------------------------------------------------------------------
 # layered layout (serving engine: one buffer per pool layer)
 # ---------------------------------------------------------------------------
 
@@ -178,6 +306,9 @@ def init_layered_buffer(n_layers: int, batch: int, buf_size: int,
         page_table=jnp.full((n_layers, batch, seq_len), EMPTY),
         last_use=jnp.zeros((n_layers, batch, buf_size), jnp.int32),
         clock=jnp.zeros((n_layers, batch), jnp.int32),
+        pf_flag=jnp.zeros((n_layers, batch, buf_size), bool),
+        pf_inserted=jnp.zeros((n_layers, batch), jnp.int32),
+        pf_used=jnp.zeros((n_layers, batch), jnp.int32),
     )
 
 
@@ -194,4 +325,7 @@ def reset_lane(state: BufferState, lane: int) -> BufferState:
         page_table=state.page_table.at[:, lane].set(EMPTY),
         last_use=state.last_use.at[:, lane].set(0),
         clock=state.clock.at[:, lane].set(0),
+        pf_flag=state.pf_flag.at[:, lane].set(False),
+        pf_inserted=state.pf_inserted.at[:, lane].set(0),
+        pf_used=state.pf_used.at[:, lane].set(0),
     )

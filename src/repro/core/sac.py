@@ -44,7 +44,9 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
                   fetch_fn: FetchFn = local_fetch,
                   topk_fn: Optional[Callable] = None,
                   window: int = 0,
-                  buf_state: Optional[hisparse.BufferState] = None):
+                  buf_state: Optional[hisparse.BufferState] = None,
+                  prefetch_width: int = 0,
+                  prefetch_fn: Optional[Callable] = None):
     """One layer of SAC decode attention.  x: [B, D] -> [B, D].
 
     kv_pool_l: [B, S, d_entry] (this layer's pool slice, S possibly sharded
@@ -58,6 +60,16 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
     bit-identical, but residency is measured so the host can charge only
     *misses* to the fabric (paper §5.5).  Returns the plain output when
     ``buf_state`` is None, else ``(out, new_buf_state, hits, misses)``.
+
+    ``prefetch_width`` > 0 (buffered path only) additionally warm-inserts
+    the next step's speculated entrants — ``prefetch_fn(scores,
+    cache_len) -> (idx [B, w], valid)``, default ranks [k, k+w) of this
+    step's indexer scores (dsa.speculate_next_topk) — into the hot tier
+    after the demand swap-in.  Prefetch only ever touches the buffer (the
+    pool stays authoritative), so decoded tokens are bit-identical with
+    prefetch on or off; the ``pf_*`` counters inside the returned buffer
+    state measure inserted/useful speculation for the host's wasted-
+    traffic accounting (serving/prefetch.py).
     """
     scores = dsa.indexer_scores(p_idx, x, idx_pool_l, cfg)
     if window:
@@ -66,14 +78,32 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
         pos = jnp.arange(scores.shape[-1], dtype=jnp.int32)
         in_win = pos[None, :] > (cache_len[:, None] - window)
         scores = jnp.where(in_win, scores, dsa.NEG_INF)
-    if topk_fn is None:
-        idx, valid = dsa.topk_select(scores, cache_len, cfg.sac.topk)
-    else:
+    speculate = buf_state is not None and prefetch_width > 0
+    p_idx_ = p_valid = None
+    if topk_fn is not None:
         idx, valid = topk_fn(scores, cache_len)
+    elif speculate and prefetch_fn is None:
+        # fused selection: one top_k(k+w) yields the (bit-identical)
+        # demand set AND the speculation tail
+        idx, valid, p_idx_, p_valid = dsa.topk_select_with_tail(
+            scores, cache_len, cfg.sac.topk, prefetch_width)
+    else:
+        idx, valid = dsa.topk_select(scores, cache_len, cfg.sac.topk)
     fetched = fetch_fn(kv_pool_l, idx)
     if buf_state is not None:
         fetched, buf_state, hits, misses = hisparse.read_through(
             buf_state, idx, fetched, valid)
+        if speculate:
+            if p_idx_ is None:
+                p_idx_, p_valid = (
+                    prefetch_fn(scores, cache_len) if prefetch_fn is not None
+                    else dsa.speculate_next_topk(scores, cache_len,
+                                                 cfg.sac.topk,
+                                                 prefetch_width))
+            p_vals = fetch_fn(kv_pool_l, jnp.clip(
+                p_idx_, 0, kv_pool_l.shape[1] - 1))
+            buf_state, _ = hisparse.warm_insert(buf_state, p_idx_, p_vals,
+                                                p_valid)
     fetched = jnp.concatenate(
         [fetched, own_entry[:, None, :].astype(fetched.dtype)], axis=1)
     valid = jnp.concatenate(
@@ -218,6 +248,14 @@ class SACSystem:
         return self.traffic.sparse_fetch(n_entries, self.entry_bytes,
                                          device=device,
                                          contention=contention)
+
+    def prefetch_fetch_time(self, n_entries: int, *, device: int = 0,
+                            contention: float = 1.0) -> float:
+        """Speculative/warm-up entry fetch (fetch pipeline): same wire cost
+        as a demand fetch, attributed to prefetch traffic."""
+        return self.traffic.prefetch_fetch(n_entries, self.entry_bytes,
+                                           device=device,
+                                           contention=contention)
 
     def full_prefetch_time(self, n_tokens: int, *, device: int = 0,
                            contention: float = 1.0) -> float:

@@ -19,19 +19,31 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-from repro.core.transfer import FABRICS, FabricModel
+from repro.core.transfer import FABRICS, FabricModel, PipelineModel
 
 
 @dataclasses.dataclass
 class TrafficStats:
-    """Cumulative fabric-traffic counters (one schema for all layers)."""
+    """Cumulative fabric-traffic counters (one schema for all layers).
+
+    ``fabric_time_s`` is the *issued* total: every second the fabric
+    links were busy.  ``exposed_fabric_s`` is the part that was NOT
+    hidden behind compute by the fetch pipeline and therefore landed on
+    the step critical path (serving/prefetch.py; without an overlap model
+    the two are equal).  Invariant: ``issued >= exposed >= 0``.
+    """
 
     n_devices: int = 1
     bytes_fetched: float = 0.0       # entries/pages pulled over the fabric
     bytes_written: float = 0.0       # prefill / decode write-back traffic
+    entries_fetched: float = 0.0     # discrete entries pulled over the fabric
     buffer_hits: float = 0.0         # HiSparse hot-tier hits (no fabric)
     buffer_misses: float = 0.0       # hot-tier misses (crossed the fabric)
-    fabric_time_s: float = 0.0       # seconds charged to the fabric
+    fabric_time_s: float = 0.0       # seconds issued on the fabric
+    exposed_fabric_s: float = 0.0    # issued seconds not hidden by compute
+    prefetched_entries: float = 0.0  # speculative/warm-up entries inserted
+    prefetch_useful: float = 0.0     # prefetched entries later demand-hit
+    prefetch_bytes: float = 0.0      # fabric bytes spent on prefetch
     device_demand_bytes: List[float] = dataclasses.field(
         default_factory=list)       # cumulative fetch demand per device
 
@@ -48,6 +60,51 @@ class TrafficStats:
     def total_bytes(self) -> float:
         return self.bytes_fetched + self.bytes_written
 
+    @property
+    def issued_fabric_s(self) -> float:
+        return self.fabric_time_s
+
+    @property
+    def prefetch_wasted(self) -> float:
+        """Prefetched entries never demand-hit (evicted unused, or still
+        resident unused).  ``prefetched == useful + wasted`` always."""
+        return self.prefetched_entries - self.prefetch_useful
+
+    @property
+    def prefetch_precision(self) -> float:
+        return (self.prefetch_useful / self.prefetched_entries
+                if self.prefetched_entries else 0.0)
+
+
+class OverlapQueue:
+    """Per-device double-buffered fetch queues (issued vs exposed split).
+
+    Fetch seconds are *issued* per device as the step discovers its
+    misses (and prefetch candidates); at step end ``drain`` hides as much
+    as the :class:`~repro.core.transfer.PipelineModel` window allows and
+    returns the step's *exposed* stall — the slowest device's unhidden
+    tail, since the step cannot advance past its critical-path link.
+    """
+
+    def __init__(self, n_devices: int, pipeline: PipelineModel):
+        self.pipeline = pipeline
+        self._pending = [0.0] * max(n_devices, 1)
+
+    def issue(self, device: int, seconds: float) -> None:
+        if seconds > 0:
+            self._pending[device % len(self._pending)] += seconds
+
+    @property
+    def pending_s(self) -> float:
+        return sum(self._pending)
+
+    def drain(self, compute_s: float) -> float:
+        """End-of-step: return exposed seconds, clear the queues."""
+        exposed = max((self.pipeline.exposed_time(p, compute_s)
+                       for p in self._pending), default=0.0)
+        self._pending = [0.0] * len(self._pending)
+        return exposed
+
 
 class FabricAccountant:
     """Charges fabric operations against a :class:`FabricModel` and keeps
@@ -63,6 +120,13 @@ class FabricAccountant:
         (the slowest device is the step's fetch critical path) and folds
         it into the cumulative stats; ``charge_seconds`` books the time
         the caller computed from that demand.
+
+    Overlap: without ``enable_overlap``, every charged second is also
+    exposed (``charge_exposed`` is called by the timed ops).  With an
+    :class:`OverlapQueue` enabled, timed ops *issue* into the per-device
+    queues instead and the caller drains once per step with its compute
+    window (``drain_overlap``) — only the unhidden tail lands in
+    ``exposed_fabric_s``.
     """
 
     def __init__(self, fabric: Optional[FabricModel] = None, *,
@@ -72,6 +136,33 @@ class FabricAccountant:
         self.fabric = fabric
         self.stats = TrafficStats(n_devices=n_devices)
         self._step_demand = [0.0] * n_devices
+        self.overlap: Optional[OverlapQueue] = None
+
+    # -- overlap (fetch pipeline) ------------------------------------------
+    def enable_overlap(self, pipeline: PipelineModel) -> OverlapQueue:
+        self.overlap = OverlapQueue(self.n_devices, pipeline)
+        return self.overlap
+
+    def charge_exposed(self, seconds: float) -> None:
+        self.stats.exposed_fabric_s += max(seconds, 0.0)
+
+    def drain_overlap(self, compute_s: float) -> float:
+        """Drain the per-device queues against this step's compute window
+        and book the exposed tail.  No-op (0.0) when overlap is off —
+        timed ops then charge exposed at issue time."""
+        if self.overlap is None:
+            return 0.0
+        exposed = self.overlap.drain(compute_s)
+        self.charge_exposed(exposed)
+        return exposed
+
+    def _book_time(self, seconds: float, device: int) -> None:
+        """Issued seconds: queue behind compute if overlap is on, else
+        expose immediately (the serial seed semantics)."""
+        if self.overlap is not None:
+            self.overlap.issue(device, seconds)
+        else:
+            self.charge_exposed(seconds)
 
     @property
     def n_devices(self) -> int:
@@ -88,8 +179,21 @@ class FabricAccountant:
                                           contention=contention)
         n_bytes = n_entries * entry_bytes
         self.stats.bytes_fetched += n_bytes
+        self.stats.entries_fetched += n_entries
         self.stats.device_demand_bytes[device % self.n_devices] += n_bytes
         self.stats.fabric_time_s += t
+        self._book_time(t, device)
+        return t
+
+    def prefetch_fetch(self, n_entries: int, entry_bytes: int, *,
+                       device: int = 0, contention: float = 1.0) -> float:
+        """Speculative/warm-up fetch of ``n_entries`` entries: same fabric
+        cost and accounting as a demand fetch, additionally attributed to
+        prefetch traffic so the wasted share is measurable."""
+        t = self.sparse_fetch(n_entries, entry_bytes, device=device,
+                              contention=contention)
+        if n_entries > 0:
+            self.stats.prefetch_bytes += n_entries * entry_bytes
         return t
 
     def bulk_fetch(self, n_bytes: float, *, device: int = 0,
@@ -102,6 +206,7 @@ class FabricAccountant:
         self.stats.bytes_fetched += n_bytes
         self.stats.device_demand_bytes[device % self.n_devices] += n_bytes
         self.stats.fabric_time_s += t
+        self._book_time(t, device)
         return t
 
     def write_back(self, n_bytes: float, *, contention: float = 1.0
@@ -113,6 +218,7 @@ class FabricAccountant:
         t = self.fabric.bulk_transfer_time(n_bytes, contention=contention)
         self.stats.bytes_written += n_bytes
         self.stats.fabric_time_s += t
+        self._book_time(t, 0)
         return t
 
     # -- hot-buffer accounting --------------------------------------------
@@ -120,6 +226,12 @@ class FabricAccountant:
         """Record HiSparse hot-tier outcomes (measured or analytic)."""
         self.stats.buffer_hits += hits
         self.stats.buffer_misses += misses
+
+    def record_prefetch(self, inserted: float, useful: float) -> None:
+        """Record prefetch outcomes (measured in-graph by the HiSparse
+        ``pf_*`` counters, or analytic in the simulator)."""
+        self.stats.prefetched_entries += inserted
+        self.stats.prefetch_useful += useful
 
     # -- per-step demand (simulator) ---------------------------------------
     def add_step_demand(self, device: int, n_bytes: float) -> None:

@@ -69,6 +69,47 @@ class FabricModel:
 
 
 # ---------------------------------------------------------------------------
+# fetch/compute overlap (fetch pipeline, serving/prefetch.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineModel:
+    """Issued-vs-exposed split for pipelined fabric traffic.
+
+    CXL's load/store semantics let a decode step's miss fetches (and all
+    speculative prefetch) be *issued* into per-device double-buffered
+    queues and drained while the step computes; only the tail that does
+    not fit in the hide window stalls the step — the *exposed* time.
+
+    ``depth`` is the number of in-flight step buffers (2 = classic double
+    buffering: the fetch for step t+1 drains behind step t's compute);
+    ``overlap_frac`` is the fraction of a step's compute the link can
+    actually hide behind (dependency chains — the layer's own indexer and
+    top-k must run before its miss set is known — keep it < 1).
+
+    Invariant (tested): ``0 <= exposed_time(...) <= issued``.
+    """
+
+    depth: int = 2
+    overlap_frac: float = 0.85
+
+    def hide_window_s(self, compute_s: float) -> float:
+        return max(self.overlap_frac, 0.0) * max(compute_s, 0.0) \
+            * max(self.depth - 1, 0)
+
+    def exposed_time(self, issued_s: float, compute_s: float) -> float:
+        """Seconds of ``issued_s`` fabric time NOT hidden behind compute."""
+        if issued_s <= 0.0:
+            return 0.0
+        return max(0.0, issued_s - self.hide_window_s(compute_s))
+
+
+# serial reference: nothing hides, exposed == issued (the seed's model)
+NO_OVERLAP = PipelineModel(depth=1, overlap_frac=0.0)
+
+
+# ---------------------------------------------------------------------------
 # calibrated fabrics (paper Fig 5 / §A.2)
 # ---------------------------------------------------------------------------
 

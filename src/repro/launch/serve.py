@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--device-buffer", type=int, default=None,
                     help="hot-buffer entries per layer per slot "
                          "(default: cfg.sac.device_buffer_size)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="enable the fetch pipeline (speculative "
+                         "prefetch + prefill warm-up + overlap queues; "
+                         "serving/prefetch.py)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -44,7 +48,8 @@ def main():
     eng = Engine(cfg, slots=args.slots, max_ctx=args.max_ctx,
                  backend=args.backend, mode=args.mode, seed=args.seed,
                  track_buffer=not args.no_buffer,
-                 device_buffer=args.device_buffer)
+                 device_buffer=args.device_buffer,
+                 prefetch=args.prefetch)
     reqs = sharegpt_trace(args.requests, context_len=args.ctx,
                           output_len=args.out_len, seed=args.seed,
                           ctx_jitter=0.0, vocab=cfg.vocab)

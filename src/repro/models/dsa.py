@@ -75,14 +75,81 @@ def topk_select(scores: jnp.ndarray, cache_len: jnp.ndarray, k: int
     masked = jnp.where(pos[None, :] < cache_len[:, None], scores, NEG_INF)
     top_scores, idx = jax.lax.top_k(masked, min(k, S))
     valid = top_scores > NEG_INF / 2
-    idx = idx.astype(jnp.int32)
     # position-sort the selected set (invalid lanes pushed last): the
     # sparse candidate order then matches the pool order, so with k >=
     # context the sparse decode is bit-exact vs dense (float accumulation
     # order is identical), and real gathers walk the pool monotonically
+    return _position_sort(idx.astype(jnp.int32), valid, S)
+
+
+def _position_sort(idx: jnp.ndarray, valid: jnp.ndarray, S: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort a selected set by position (invalid lanes pushed last)."""
     order = jnp.argsort(jnp.where(valid, idx, S), axis=-1)
     return (jnp.take_along_axis(idx, order, axis=-1),
             jnp.take_along_axis(valid, order, axis=-1))
+
+
+def _spec_tail(top_scores, idx, k: int, width: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Ranks [k, k+width) of a top-(k+width) result, padded to width."""
+    lo = min(k, idx.shape[-1])
+    tail_idx = idx[..., lo:].astype(jnp.int32)
+    tail_valid = top_scores[..., lo:] > NEG_INF / 2
+    pad = width - tail_idx.shape[-1]
+    if pad > 0:
+        tail_idx = jnp.pad(tail_idx, ((0, 0), (0, pad)))
+        tail_valid = jnp.pad(tail_valid, ((0, 0), (0, pad)))
+    return tail_idx, tail_valid
+
+
+def speculate_next_topk(scores: jnp.ndarray, cache_len: jnp.ndarray,
+                        k: int, width: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Speculative next-step candidates: ranks [k, k+width) of this step's
+    indexer scores.
+
+    Consecutive steps' score landscapes drift slowly, so the positions
+    just below the current top-k cut are the most likely *entrants* of
+    the next step's top-k — the fetch pipeline (serving/prefetch.py)
+    warm-inserts them into the HiSparse hot tier so next step's churn
+    hits instead of missing.  scores: [B, S]; -> (idx [B, width] int32,
+    valid [B, width]); lanes beyond the candidate count are invalid.
+
+    Standalone variant (used when the demand selection is injected via
+    ``topk_fn``); the default decode path uses the fused
+    :func:`topk_select_with_tail` to avoid a second top-k.
+    """
+    S = scores.shape[-1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    masked = jnp.where(pos[None, :] < cache_len[:, None], scores, NEG_INF)
+    kk = min(k + width, S)
+    top_scores, idx = jax.lax.top_k(masked, kk)
+    return _spec_tail(top_scores, idx, k, width)
+
+
+def topk_select_with_tail(scores: jnp.ndarray, cache_len: jnp.ndarray,
+                          k: int, width: int):
+    """Fused demand top-k + speculation tail: ONE ``top_k(k+width)``
+    serves both.
+
+    ``top_k`` orders by (score desc, index asc), so the first
+    ``min(k, S)`` lanes of the larger sort are exactly
+    :func:`topk_select`'s set — position-sorted identically, the demand
+    half is bit-identical to the unfused path (sparse decode results do
+    not depend on whether speculation runs).  Returns
+    ``(idx [B, min(k,S)], valid, tail_idx [B, width], tail_valid)``.
+    """
+    S = scores.shape[-1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    masked = jnp.where(pos[None, :] < cache_len[:, None], scores, NEG_INF)
+    kk = min(k + width, S)
+    top_scores, idx = jax.lax.top_k(masked, kk)
+    lo = min(k, kk)
+    d_idx = idx[..., :lo].astype(jnp.int32)
+    d_valid = top_scores[..., :lo] > NEG_INF / 2
+    d_idx, d_valid = _position_sort(d_idx, d_valid, S)
+    return d_idx, d_valid, *_spec_tail(top_scores, idx, k, width)
 
 
 # ---------------------------------------------------------------------------

@@ -102,6 +102,23 @@ def n_kv_layers(cfg: ModelConfig) -> int:
     return sum(s.n * s.kv_per_iter for s in build_segments(cfg))
 
 
+def kv_layer_windows(cfg: ModelConfig) -> List[int]:
+    """Sliding window per pool (attention) layer, in pool-layer order
+    (0 = full attention).  Length == n_kv_layers(cfg); used by the fetch
+    planner to avoid seeding windowed layers with positions their decode
+    mask can never select."""
+    wins: List[int] = []
+    for seg in build_segments(cfg):
+        if not seg.kv_per_iter:
+            continue
+        if seg.kind == "lg_super":
+            per_iter = [cfg.local_window] * cfg.local_global_ratio + [0]
+        else:
+            per_iter = [seg.window] * seg.kv_per_iter
+        wins.extend(per_iter * seg.n)
+    return wins
+
+
 def kv_entry_dim(cfg: ModelConfig) -> int:
     if not cfg.has_attention:
         return 0
@@ -198,7 +215,15 @@ def _mlp_apply(p_mlp, x, cfg, *, decode: bool = False):
 
 
 def _attn_fwd(p, x, cfg, positions, window):
-    """Shared attn sub-block on [B,S,D] -> (delta, entries, idx_keys)."""
+    """Shared attn sub-block on [B,S,D] -> (delta, entries, idx_keys,
+    warm_idx).
+
+    ``warm_idx`` ([B, w] int32, or None) is the layer's prefill warm-up
+    candidate set when the ``warmup_w`` opt is on: the top-``w`` prompt
+    positions by indexer score against the LAST prompt position's
+    activations — the closest in-graph proxy for the first decode step's
+    query, used by serving/prefetch.py to seed the HiSparse hot tier.
+    """
     xn = rms_norm(x, p["ln1"])
     if cfg.mla:
         out, entry = dsa.mla_prefill_attention(p["attn"], xn, cfg, positions)
@@ -207,16 +232,31 @@ def _attn_fwd(p, x, cfg, positions, window):
                                             window=window)
         entry = dsa.pack_kv_entry(k, v)
     idx_keys = (dsa.indexer_keys(p["idx"], xn) if cfg.sac.enabled else None)
-    return out, entry, idx_keys
+    warm = None
+    w = _opt("warmup_w", 0)
+    if w and cfg.sac.enabled:
+        scores = dsa.indexer_scores(p["idx"], xn[:, -1], idx_keys, cfg)
+        if window:
+            # windowed layers only ever select from the trailing window
+            # at decode time — seeding anything older is guaranteed waste
+            S = scores.shape[-1]
+            pos = jnp.arange(S, dtype=jnp.int32)
+            scores = jnp.where(pos[None, :] > S - window, scores,
+                               dsa.NEG_INF)
+        ws, warm = jax.lax.top_k(scores, min(w, scores.shape[-1]))
+        # masked-out lanes -> -1: the planner turns them into invalid
+        # warm-insert lanes instead of seeding position 0 junk
+        warm = jnp.where(ws > dsa.NEG_INF / 2, warm, -1).astype(jnp.int32)
+    return out, entry, idx_keys, warm
 
 
 def _layer_fwd(p, x, cfg, positions, window):
-    """Full (attn + mlp) layer.  Returns (x', entry, idx_keys, aux)."""
-    delta, entry, idx_keys = _attn_fwd(p, x, cfg, positions, window)
+    """Full (attn + mlp) layer.  Returns (x', entry, idx_keys, warm, aux)."""
+    delta, entry, idx_keys, warm = _attn_fwd(p, x, cfg, positions, window)
     x = constrain(x + delta, ("B", "S", "D"))
     out, aux = _mlp_apply(p["mlp"], rms_norm(x, p["ln2"]), cfg)
     x = constrain(x + out, ("B", "S", "D"))
-    return x, entry, idx_keys, aux
+    return x, entry, idx_keys, warm, aux
 
 
 def _mamba_fwd(p, x, cfg):
@@ -233,30 +273,33 @@ def segment_fwd(seg: Segment, cfg: ModelConfig, shared_params=None,
     entries: [kv_per_iter, B, S, d_kv] or None.
     """
 
-    def stack_entries(es, ks):
+    def stack_entries(es, ks, ws):
         if not collect_entries or not es:
             return None
         e = jnp.stack(es, 0)
         k = jnp.stack(ks, 0) if cfg.sac.enabled else jnp.zeros(())
-        return (e, k)
+        wm = (jnp.stack(ws, 0) if ws and ws[0] is not None
+              else jnp.zeros(()))
+        return (e, k, wm)
 
     if seg.kind in ("dense", "moe", "mla_dense", "mla_moe"):
         def body(x, p, positions):
-            x, entry, ikeys, aux = _layer_fwd(p, x, cfg, positions, seg.window)
-            return x, stack_entries([entry], [ikeys]), aux
+            x, entry, ikeys, wm, aux = _layer_fwd(p, x, cfg, positions,
+                                                  seg.window)
+            return x, stack_entries([entry], [ikeys], [wm]), aux
         return body
 
     if seg.kind == "lg_super":
         def body(x, p, positions):
-            es, ks, aux = [], [], jnp.float32(0)
+            es, ks, ws, aux = [], [], [], jnp.float32(0)
             for i in range(cfg.local_global_ratio):
                 pl = jax.tree.map(lambda a: a[i], p["local"])
-                x, e, kk, a = _layer_fwd(pl, x, cfg, positions,
-                                         cfg.local_window)
-                es.append(e); ks.append(kk); aux += a
-            x, e, kk, a = _layer_fwd(p["global"], x, cfg, positions, 0)
-            es.append(e); ks.append(kk); aux += a
-            return x, stack_entries(es, ks), aux
+                x, e, kk, wm, a = _layer_fwd(pl, x, cfg, positions,
+                                             cfg.local_window)
+                es.append(e); ks.append(kk); ws.append(wm); aux += a
+            x, e, kk, wm, a = _layer_fwd(p["global"], x, cfg, positions, 0)
+            es.append(e); ks.append(kk); ws.append(wm); aux += a
+            return x, stack_entries(es, ks, ws), aux
         return body
 
     if seg.kind == "zamba_super":
@@ -264,9 +307,9 @@ def segment_fwd(seg: Segment, cfg: ModelConfig, shared_params=None,
             for i in range(cfg.shared_attn_every):
                 pl = jax.tree.map(lambda a: a[i], p["mamba_layers"])
                 x = _mamba_fwd(pl, x, cfg)
-            x, entry, ikeys, aux = _layer_fwd(shared_params, x, cfg,
-                                              positions, 0)
-            return x, stack_entries([entry], [ikeys]), aux
+            x, entry, ikeys, wm, aux = _layer_fwd(shared_params, x, cfg,
+                                                  positions, 0)
+            return x, stack_entries([entry], [ikeys], [wm]), aux
         return body
 
     if seg.kind == "mamba_tail":
@@ -328,11 +371,15 @@ def _attn_decode(p, x, cfg, ctx, kv_slice, idx_slice, window, hbuf=None):
             topk_fn=ctx.get("topk_fn"), window=window)
         return delta, own, new_key, None, None, None
     # buffered read-through: values are bit-identical, but residency is
-    # measured so the host charges only misses to the fabric (paper §5.5)
+    # measured so the host charges only misses to the fabric (paper §5.5);
+    # prefetch_width > 0 additionally warm-inserts next-step speculation
+    # into the hot tier (counted in the buffer's pf_* fields)
     delta, hbuf, hits, misses = sac_core.sparse_attend(
         p["attn"], p["idx"], xn, cfg, kv_slice, idx_slice, cache_len,
         positions, own, fetch_fn=ctx["fetch_fn"], topk_fn=ctx.get("topk_fn"),
-        window=window, buf_state=hbuf)
+        window=window, buf_state=hbuf,
+        prefetch_width=ctx.get("prefetch_width", 0),
+        prefetch_fn=ctx.get("prefetch_fn"))
     return delta, own, new_key, hbuf, hits, misses
 
 
@@ -559,7 +606,8 @@ class TransformerLM:
         if lengths is None:
             lengths = jnp.full((B,), S, jnp.int32)
         x, positions = self._embed_seq(params, tokens)
-        pools, ikeys = [], []
+        pools, ikeys, warms = [], [], []
+        collect_warm = bool(self.opts.get("warmup_w")) and self.cfg.sac.enabled
         for si, seg in enumerate(self.segments):
             body = segment_fwd(seg, self.cfg, params.get("shared"),
                                collect_entries=True)
@@ -570,11 +618,13 @@ class TransformerLM:
 
             x, entries = jax.lax.scan(scan_body, x, params["segments"][si])
             if entries is not None and seg.kv_per_iter:
-                e, k = entries
+                e, k, wm = entries
                 # e: [n, a, B, S, d] -> [n*a, B, S, d]
                 pools.append(e.reshape(-1, B, S, e.shape[-1]))
                 if self.cfg.sac.enabled:
                     ikeys.append(k.reshape(-1, B, S, k.shape[-1]))
+                if collect_warm:
+                    warms.append(wm.reshape(-1, B, wm.shape[-1]))
         state = self._empty_state(B, S)
         if pools:
             state["kv_pool"] = constrain(
@@ -584,6 +634,11 @@ class TransformerLM:
                 state["idx_pool"] = constrain(
                     jnp.concatenate(ikeys, 0).astype(DTYPE),
                     ("L", "B", "SP", "G"))
+            if warms:
+                # per-layer top-scoring prompt positions [L, B, w]: the
+                # prefill-time warm-up plan consumed by serving/prefetch.py
+                # (popped by the engine — NOT part of the serve state)
+                state["warm_idx"] = jnp.concatenate(warms, 0)
         state["cache_len"] = lengths
         # recurrent archs: replay the sequence through decode to build state
         # (prefill for SSMs is exercised via forward(); serving starts decode
@@ -613,9 +668,15 @@ class TransformerLM:
             "fetch_fn": self.fetch_fn,
             "topk_fn": self.topk_fn,
             "mode": self.mode,
+            "prefetch_width": int(self.opts.get("prefetch_width", 0)),
+            "prefetch_fn": self.opts.get("prefetch_fn"),
         }
         kv_pool, idx_pool = state.get("kv_pool"), state.get("idx_pool")
         hot = state.get("hot_buf")    # layered hisparse.BufferState or None
+        # speculative-prefetch step deltas: the pf_* counters inside the
+        # buffer are cumulative, so the step's contribution is post - pre
+        pf_ins0 = hot.pf_inserted.sum(0) if hot is not None else None
+        pf_use0 = hot.pf_used.sum(0) if hot is not None else None
         pool_closure = bool(self.opts.get("pool_closure"))
         use_idx = idx_pool is not None and self.mode == "sac"
         new_entries, new_keys = [], []
@@ -711,6 +772,8 @@ class TransformerLM:
             # the engine reads these to charge miss-only fabric traffic
             state["buf_hits"] = buf_hits
             state["buf_misses"] = buf_misses
+            state["pf_inserted"] = hot.pf_inserted.sum(0) - pf_ins0
+            state["pf_useful"] = hot.pf_used.sum(0) - pf_use0
         state["cache_len"] = cache_len + 1
         x = rms_norm(x, params["final_norm"])
         logits = (x @ params["lm_head"]).astype(jnp.float32)
@@ -736,6 +799,9 @@ class TransformerLM:
                     self.kv_dtype)
                 state["buf_hits"] = jnp.zeros((batch,), jnp.int32)
                 state["buf_misses"] = jnp.zeros((batch,), jnp.int32)
+                # per-step speculative-prefetch outcomes (fetch pipeline)
+                state["pf_inserted"] = jnp.zeros((batch,), jnp.int32)
+                state["pf_useful"] = jnp.zeros((batch,), jnp.int32)
         for si, seg in enumerate(self.segments):
             shapes = _stacked_rec_shapes(seg, cfg, batch)
             if shapes is not None:

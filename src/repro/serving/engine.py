@@ -14,6 +14,21 @@ traffic).  ``EngineStats.buffer_hits/buffer_misses`` are therefore live
 numbers, grounded against the simulator's analytic ``hit_rate()`` model
 in tests/test_engine_buffer.py.
 
+The fetch pipeline (``prefetch=True``, serving/prefetch.py) adds
+speculative next-step prefetch (in-graph, ``dsa.speculate_next_topk``),
+prefill-time warm-up of the hot tier (radix-reused prefix tail +
+top-scoring prompt entries, applied with ``hisparse.warm_lane``), and
+overlap-aware charging: fetches are *issued* into per-device
+double-buffered queues and only the unhidden tail is *exposed* step
+time (``TrafficStats.issued_fabric_s >= exposed_fabric_s``).  None of it
+changes decoded tokens — prefetch touches only the hot tier, and the
+pool stays authoritative.
+
+Engine latency metrics are deterministic: ``now`` is a virtual clock
+advanced by the modeled per-step time (compute from the simulator's
+``ModelProfile`` constants + exposed fabric), so TTFT/TBT are
+reproducible and directly comparable to the simulator's.
+
 Placement and traffic accounting go through the shared substrate
 (core/placement.py, core/traffic.py): the engine's ``SACSystem`` places
 each request's pool pages with the same policy the scheduler and
@@ -23,7 +38,6 @@ simulator use, and charges fetch/write traffic to the same
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional
 
 import jax
@@ -34,10 +48,12 @@ from repro.configs.base import ModelConfig
 from repro.core import hisparse
 from repro.core.sac import SACSystem
 from repro.core.traffic import TrafficStats
+from repro.core.transfer import PipelineModel
 from repro.models.model import build_model
+from repro.serving.prefetch import FetchPlanner
 from repro.serving.radix import RadixIndex
 from repro.serving.request import Request, summarize
-from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.simulator import profile_from_config
 
 
 @dataclasses.dataclass
@@ -47,9 +63,15 @@ class EngineStats:
 
     steps: int = 0
     tokens: int = 0
-    pool_entries_fetched: int = 0      # entries that crossed the fabric
     radix_hit_tokens: int = 0
     traffic: TrafficStats = dataclasses.field(default_factory=TrafficStats)
+
+    @property
+    def pool_entries_fetched(self) -> int:
+        """Entries that crossed the fabric (demand misses + prefetch) —
+        the shared ``TrafficStats.entries_fetched`` counter, not a
+        separately drifting engine tally."""
+        return int(self.traffic.entries_fetched)
 
     @property
     def buffer_hits(self) -> int:
@@ -64,8 +86,32 @@ class EngineStats:
         return self.traffic.fabric_time_s
 
     @property
+    def issued_fabric_s(self) -> float:
+        return self.traffic.issued_fabric_s
+
+    @property
+    def exposed_fabric_s(self) -> float:
+        return self.traffic.exposed_fabric_s
+
+    @property
     def hit_rate(self) -> float:
         return self.traffic.hit_rate
+
+    @property
+    def prefetched_entries(self) -> int:
+        return int(self.traffic.prefetched_entries)
+
+    @property
+    def prefetch_useful(self) -> int:
+        return int(self.traffic.prefetch_useful)
+
+    @property
+    def prefetch_wasted(self) -> int:
+        return int(self.traffic.prefetch_wasted)
+
+    @property
+    def prefetch_precision(self) -> float:
+        return self.traffic.prefetch_precision
 
 
 class Engine:
@@ -82,35 +128,70 @@ class Engine:
     ``cfg.sac.device_buffer_size``); fabric time is then charged on
     measured misses only.  Off, every step is charged the full cold-read
     top-k transfer.
+
+    ``prefetch`` turns on the fetch pipeline (serving/prefetch.py):
+    speculative in-graph prefetch of ``cfg.sac.prefetch_width`` entries
+    per layer per step, prefill warm-up of the hot tier, and overlap
+    queues (issued vs exposed fabric seconds).  ``prefetch_fn`` overrides
+    the in-graph speculation ``(scores, cache_len) -> (idx, valid)`` —
+    the hook parity tests use to replay controlled drift.  ``overlap``
+    forces the overlap queues on/off independently of prefetch (default:
+    on when prefetch or ``cfg.sac.overlap_fetch`` is set).
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int = 4,
                  max_ctx: int = 256, backend: str = "cxl",
                  mode: str = "sac", track_buffer: bool = True,
                  device_buffer: Optional[int] = None,
+                 prefetch: bool = False, prefetch_fn=None,
+                 overlap: Optional[bool] = None,
                  topk_fn=None, seed: int = 0):
         self.cfg = cfg
         self.slots = slots
         self.max_ctx = max_ctx
+        buffered = (track_buffer and cfg.sac.enabled and not cfg.enc_dec
+                    and mode == "sac")
+        self.device_buffer = 0
+        if buffered:
+            self.device_buffer = (cfg.sac.device_buffer_size
+                                  if device_buffer is None else device_buffer)
+        self.prefetch = bool(prefetch and self.device_buffer)
         # topk_fn overrides the indexer's top-k selection inside the jitted
         # step (scores, cache_len) -> (idx, valid); used by parity tests to
         # replay controlled top-k traces through the real buffer wiring
-        self.model = build_model(cfg, mode=mode, topk_fn=topk_fn)
+        opts = {}
+        if self.prefetch:
+            opts["prefetch_width"] = int(cfg.sac.prefetch_width)
+            if prefetch_fn is not None:
+                opts["prefetch_fn"] = prefetch_fn
+            if cfg.sac.warmup_entries > 0:
+                opts["warmup_w"] = int(cfg.sac.warmup_entries)
+        self.model = build_model(cfg, mode=mode, topk_fn=topk_fn,
+                                 opts=opts or None)
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self.sac = SACSystem(cfg, backend=backend)
         self.radix = RadixIndex(page_size=cfg.sac.page_size)
         # the engine's stats share the SACSystem accountant's TrafficStats:
         # every charged fetch/write and recorded hit/miss lands here
         self.stats = EngineStats(traffic=self.sac.traffic.stats)
-        self.device_buffer = 0
-        if (track_buffer and cfg.sac.enabled and not cfg.enc_dec
-                and self.model.mode == "sac"):
-            self.device_buffer = (cfg.sac.device_buffer_size
-                                  if device_buffer is None else device_buffer)
+        self.planner = (FetchPlanner(cfg, n_layers=max(self.model.n_kv, 1))
+                        if self.prefetch else None)
+        self.pipeline = PipelineModel(depth=cfg.sac.pipeline_depth,
+                                      overlap_frac=cfg.sac.overlap_frac)
+        self.overlap_on = (bool(self.prefetch or cfg.sac.overlap_fetch)
+                           if overlap is None else bool(overlap))
+        if self.overlap_on:
+            self.sac.traffic.enable_overlap(self.pipeline)
+        # virtual clock: per-step compute from the simulator's profile
+        # constants, so engine latency numbers are deterministic and
+        # engine/simulator timing is built from the same model
+        self.profile = profile_from_config(cfg)
+        self.clock_s = 0.0
 
         self._decode = jax.jit(self.model.decode)
         self._prefill_one = jax.jit(
             lambda p, toks: self.model.prefill(p, toks))
+        self._warm = jax.jit(self._warm_apply)
         self.state = self.model.init_serve_state(
             slots, max_ctx, device_buffer=self.device_buffer)
         self.slot_req: List[Optional[Request]] = [None] * slots
@@ -124,21 +205,40 @@ class Engine:
             "request exceeds engine max_ctx"
         self.queue.append(req)
 
+    # -- modeled step time --------------------------------------------------------
+    def step_compute_s(self, batch: int) -> float:
+        """Modeled decode-step compute for ``batch`` occupied slots."""
+        return (self.profile.base_step_s
+                + batch * self.profile.per_token_compute_s())
+
+    @staticmethod
+    def _warm_apply(hot, kv_pool, lane, idx, valid):
+        """Seed one slot's hot-tier lanes from its pool slice (prefill
+        warm-up): gather the planned positions' entries and warm-insert
+        them (insert-without-read; never evicts current-step hits)."""
+        pool_lane = jnp.take(kv_pool, lane, axis=1)          # [L, S, d]
+        idx = jnp.clip(idx, 0, pool_lane.shape[1] - 1)
+        vals = jax.vmap(lambda p, i: p[i])(pool_lane, idx)   # [L, w, d]
+        return hisparse.warm_lane(hot, lane, idx, vals, valid)
+
     # -- slot refill -------------------------------------------------------------
-    def _fill_slots(self, now: float):
+    def _fill_slots(self):
         for s in range(self.slots):
             if self.slot_req[s] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
-            req.dispatch_s = now
+            req.dispatch_s = self.clock_s
             prompt = req.prompt_tokens[: req.context_len]
             # radix prefix lookup (page-aligned reuse accounting)
             matched, _ = self.radix.match_prefix(prompt.tolist())
             self.stats.radix_hit_tokens += matched
             rp = self.sac.place(req.request_id, len(prompt) + req.output_len)
             req.pool_device = rp.device if rp else 0
+            issued0 = self.stats.traffic.fabric_time_s
             # prefill this slot (batch of 1), splice into the shared state
             st, _ = self._prefill_one(self.params, prompt[None, :])
+            st = dict(st)
+            warm_idx = st.pop("warm_idx", None)
             self._splice_state(s, st, len(prompt))
             # charge the pool write (prefill write path)
             self.sac.write_back_time(len(prompt))
@@ -149,6 +249,30 @@ class Engine:
                                   req.pool_device,
                                   list(range(page_tokens
                                              // self.cfg.sac.page_size)))
+            # prefill-time warm-up: seed the recycled (cold) lane from the
+            # radix-reused prefix tail + top-scoring prompt entries
+            if self.planner is not None:
+                plan = self.planner.warmup_plan(
+                    None if warm_idx is None else warm_idx[:, 0],
+                    matched, len(prompt))
+                if plan is not None:
+                    hot, n_ins = self._warm(
+                        self.state["hot_buf"], self.state["kv_pool"],
+                        jnp.int32(s), plan.idx, plan.valid)
+                    self.state["hot_buf"] = hot
+                    n_ins = int(n_ins)
+                    if n_ins:
+                        self.sac.traffic.record_prefetch(n_ins, 0)
+                        self.sac.prefetch_fetch_time(
+                            n_ins, device=req.pool_device)
+            # virtual clock: prefill compute; fill-time fabric traffic
+            # (pool write + warm-up) hides behind it when overlap is on
+            t_prefill = self.profile.prefill_s(len(prompt))
+            if self.overlap_on:
+                exposed = self.sac.traffic.drain_overlap(t_prefill)
+            else:
+                exposed = self.stats.traffic.fabric_time_s - issued0
+            self.clock_s += t_prefill + exposed
             self.slot_req[s] = req
             self.slot_tokens[s] = [int(prompt[-1])]
 
@@ -159,7 +283,8 @@ class Engine:
         cache lengths are [B], recurrent states have a unique axis where
         dst == slots and src == 1.  The hot buffer has no prefill
         counterpart — the slot's lane is simply reset (a fresh request
-        starts cold; its pool pages are being overwritten)."""
+        starts cold; its pool pages are being overwritten) and then
+        optionally re-seeded by the warm-up plan."""
         def splice_pool(dst, src):
             pad = dst.shape[2] - src.shape[2]
             if pad:
@@ -183,7 +308,7 @@ class Engine:
             if key == "hot_buf":
                 new_state[key] = hisparse.reset_lane(dst, slot)
                 continue
-            if key in ("buf_hits", "buf_misses"):
+            if key in ("buf_hits", "buf_misses", "pf_inserted", "pf_useful"):
                 new_state[key] = dst.at[slot].set(0)
                 continue
             src = st_one[key]
@@ -196,9 +321,13 @@ class Engine:
         self.state = new_state
 
     # -- stepping -----------------------------------------------------------------
-    def step(self, now: float = 0.0) -> List[Request]:
-        """One decode step for all occupied slots; returns finished reqs."""
-        self._fill_slots(now)
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        """One decode step for all occupied slots; returns finished reqs.
+
+        ``now`` defaults to the engine's virtual clock (advanced by the
+        modeled compute + exposed fabric of this step); passing an
+        explicit value only overrides the request timestamps."""
+        self._fill_slots()
         if not any(r is not None for r in self.slot_req):
             return []
         tokens = jnp.array(
@@ -211,22 +340,34 @@ class Engine:
 
         # fabric accounting per occupied slot
         occupied = [s for s in range(self.slots) if self.slot_req[s]]
+        t_comp = self.step_compute_s(len(occupied))
+        issued0 = self.stats.traffic.fabric_time_s
         if self.cfg.sac.enabled and self.model.mode == "sac":
             if self.device_buffer:
                 # miss-only charging: the jitted step measured per-slot
                 # hot-tier residency; only misses cross the fabric
                 hits = np.asarray(self.state["buf_hits"])
                 misses = np.asarray(self.state["buf_misses"])
+                if self.prefetch:
+                    pf_ins = np.asarray(self.state["pf_inserted"])
+                    pf_use = np.asarray(self.state["pf_useful"])
                 for s in occupied:
                     req = self.slot_req[s]
+                    dev = self.sac.device_of(req.request_id)
                     self.sac.traffic.record_hits(int(hits[s]),
                                                  int(misses[s]))
                     n_miss = int(misses[s])
-                    self.stats.pool_entries_fetched += n_miss
                     if n_miss:
-                        self.sac.sparse_fetch_time(
-                            n_miss, device=self.sac.device_of(
-                                req.request_id))
+                        self.sac.sparse_fetch_time(n_miss, device=dev)
+                    if self.prefetch:
+                        # measured speculation outcomes (in-graph pf_*
+                        # counters): issued entries cross the fabric as
+                        # prefetch traffic; useful ones were demand hits
+                        self.sac.traffic.record_prefetch(int(pf_ins[s]),
+                                                         int(pf_use[s]))
+                        if int(pf_ins[s]):
+                            self.sac.prefetch_fetch_time(int(pf_ins[s]),
+                                                         device=dev)
             else:
                 # cold-read convention: every step is charged the full
                 # top-k transfer per layer
@@ -235,9 +376,17 @@ class Engine:
                 for s in occupied:
                     req = self.slot_req[s]
                     n = min(k * n_layers, int(prev_len[s]) * n_layers or 1)
-                    self.stats.pool_entries_fetched += n
                     self.sac.sparse_fetch_time(
                         n, device=self.sac.device_of(req.request_id))
+        # issued vs exposed: drain the per-device queues against this
+        # step's compute window (exposed == issued when overlap is off)
+        if self.overlap_on:
+            exposed = self.sac.traffic.drain_overlap(t_comp)
+        else:
+            exposed = self.stats.traffic.fabric_time_s - issued0
+        self.clock_s += t_comp + exposed
+        if now is None:
+            now = self.clock_s
 
         finished = []
         for s in occupied:
@@ -263,10 +412,9 @@ class Engine:
             ) -> Dict[str, float]:
         for r in requests:
             self.submit(r)
-        t0 = time.time()
         done = 0
         while done < len(requests) and self.stats.steps < max_steps:
-            finished = self.step(now=time.time() - t0)
+            finished = self.step()
             done += len(finished)
             if not finished and not any(self.slot_req) and not self.queue:
                 break
@@ -275,7 +423,13 @@ class Engine:
                    engine_tokens=self.stats.tokens,
                    radix_hit_tokens=self.stats.radix_hit_tokens,
                    fabric_time_s=self.stats.fabric_time_s,
+                   issued_fabric_s=self.stats.issued_fabric_s,
+                   exposed_fabric_s=self.stats.exposed_fabric_s,
                    buffer_hits=self.stats.buffer_hits,
                    buffer_misses=self.stats.buffer_misses,
-                   buffer_hit_rate=self.stats.hit_rate)
+                   buffer_hit_rate=self.stats.hit_rate,
+                   prefetched_entries=self.stats.prefetched_entries,
+                   prefetch_useful=self.stats.prefetch_useful,
+                   prefetch_wasted=self.stats.prefetch_wasted,
+                   prefetch_precision=self.stats.prefetch_precision)
         return out

@@ -1,0 +1,142 @@
+"""Fetch pipeline: speculative prefetch + prefill warm-up planning.
+
+SAC's decode-side wins assume the per-step top-k *miss* fetches can be
+pipelined behind compute (CXL load/store semantics make the issue cheap);
+this module is the host half of that pipeline:
+
+  - :class:`FetchPlanner` builds the **prefill warm-up plan**: the hot
+    tier of a freshly placed request is seeded from (a) the trailing
+    pages of the radix-reused prefix (they were the previous occupant's
+    working set for the same tokens) and (b) the top-scoring prompt
+    entries per layer, emitted in-graph by ``prefill`` (scored against
+    the last prompt position's activations — the closest proxy for the
+    first decode query).  The plan is applied with
+    ``hisparse.warm_lane`` (insert-without-read) so results never change.
+  - **Speculative per-step prefetch** runs fully in-graph
+    (``dsa.speculate_next_topk`` inside ``sac.sparse_attend``): ranks
+    [k, k+w) of the current step's indexer scores are warm-inserted for
+    step t+1.  The planner's analytic counterpart
+    (:func:`analytic_prefetch`) gives the simulator the same knob.
+  - The **issued/exposed split** lives in the shared substrate
+    (``transfer.PipelineModel`` + ``traffic.OverlapQueue``): fetches are
+    issued into per-device double-buffered queues and only the tail that
+    does not fit the hide window is exposed step time.
+
+Everything here changes *traffic and timing only*: decoded tokens are
+bit-identical with the pipeline on or off (tests/test_prefetch.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import kv_layer_windows
+
+
+@dataclasses.dataclass
+class WarmupPlan:
+    """One request's prefill warm-up: per-layer positions to seed."""
+
+    idx: jnp.ndarray        # [L, w_total] int32 pool positions
+    valid: jnp.ndarray      # [L, w_total] bool
+
+
+class FetchPlanner:
+    """Host-side planner for the fetch pipeline of one serving engine.
+
+    The planner owns no device state — it turns host facts (radix match
+    length, prompt length) plus the in-graph warm-candidate tensor into
+    the index plan ``hisparse.warm_lane`` applies.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_layers: int,
+                 layer_windows: Optional[List[int]] = None):
+        self.cfg = cfg
+        self.sac = cfg.sac
+        self.n_layers = max(n_layers, 1)
+        wins = (kv_layer_windows(cfg) if layer_windows is None
+                else list(layer_windows))
+        self.layer_windows = (wins + [0] * self.n_layers)[:self.n_layers]
+
+    def warmup_plan(self, warm_idx: Optional[jnp.ndarray],
+                    matched_tokens: int, prompt_len: int
+                    ) -> Optional[WarmupPlan]:
+        """Merge score-based and radix-based warm-up candidates.
+
+        warm_idx: [L, w] per-layer top-scoring prompt positions (from
+        ``prefill``; lanes of -1 mark masked-out candidates on windowed
+        layers; None when score warm-up is off); matched_tokens is
+        the radix prefix hit (page-aligned).  Duplicates across the two
+        sources are fine — ``warm_insert`` skips already-resident
+        positions, so the radix tail lanes only fill what scores missed.
+        """
+        r = min(max(int(self.sac.warmup_radix), 0), prompt_len)
+        parts_idx, parts_valid = [], []
+        if warm_idx is not None and warm_idx.shape[-1]:
+            scores_idx = np.asarray(warm_idx, np.int32)
+            parts_idx.append(np.maximum(scores_idx, 0))
+            parts_valid.append(scores_idx >= 0)
+        if r:
+            # trailing positions of the reused prefix (the radix hit is
+            # layer-agnostic); lanes below the match length are invalid
+            # when the prefix was shorter, and windowed layers only get
+            # positions their decode mask (pos > cache_len - window) can
+            # still select — anything older is guaranteed waste
+            pos = np.arange(matched_tokens - r, matched_tokens)
+            valid = pos >= 0
+            wins = np.asarray(self.layer_windows)[:, None]    # [L, 1]
+            in_window = (wins == 0) | (pos[None, :] > prompt_len - wins)
+            pos = np.clip(pos, 0, max(prompt_len - 1, 0))
+            parts_idx.append(
+                np.broadcast_to(pos[None, :], (self.n_layers, r))
+                .astype(np.int32))
+            parts_valid.append(valid[None, :] & in_window)
+        if not parts_idx:
+            return None
+        idx = np.concatenate(parts_idx, axis=1)
+        valid = np.concatenate(parts_valid, axis=1)
+        if not valid.any():
+            return None
+        return WarmupPlan(idx=jnp.asarray(idx), valid=jnp.asarray(valid))
+
+
+# ---------------------------------------------------------------------------
+# analytic counterpart (serving/simulator.py)
+# ---------------------------------------------------------------------------
+
+
+def analytic_prefetch(base_hit: float, width: int, topk: int,
+                      *, churn_cover: float = 0.25,
+                      spill_frac: float = 0.5) -> Tuple[float, float]:
+    """Analytic model of speculative prefetch, mirroring the engine.
+
+    The hot tier's misses are the *entrants* of each step's top-k;
+    speculation over ranks [k, k+width) catches the fraction of entrants
+    that were already near the cut the step before — modeled as
+    ``cover = width / (width + churn_cover * topk)`` (deep entrants
+    jumping from far below the cut stay misses).  The caught entrants
+    (``useful = cover * miss * topk`` per layer per step) were all
+    warm-inserted, plus a spill of speculation that never lands
+    (``spill_frac * width * miss`` — resident candidates are skipped
+    in-graph, so a stable top-k issues almost nothing); issued entries =
+    useful + spill, which keeps the schema invariant ``prefetched >=
+    useful`` (wasted >= 0) that the engine measures in-graph.
+
+    Returns ``(hit', issued_entries_per_layer_step)`` with
+    ``(hit' - base_hit) * topk <= issued``; ``hit' >= base_hit``
+    always; calibrated loosely against the engine-measured drift trace
+    in tests/test_prefetch.py.
+    """
+    base_hit = min(max(base_hit, 0.0), 1.0)
+    if width <= 0 or topk <= 0:
+        return base_hit, 0.0
+    miss = 1.0 - base_hit
+    cover = width / (width + churn_cover * topk)
+    useful = cover * miss * topk
+    hit2 = base_hit + useful / topk       # == 1 - miss * (1 - cover)
+    issued = useful + spill_frac * width * miss
+    return hit2, issued

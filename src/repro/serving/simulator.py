@@ -7,9 +7,12 @@ a disaggregated pool backend.
 
 Backend semantics (the crux of the paper):
 
-  - **cxl** (SAC): no prefetch.  Every decode step, each request fetches
-    its per-layer top-k *misses* straight from the pool; per-pool-device
-    links serialize their demand (interleaving spreads requests).
+  - **cxl** (SAC): no *full* prefetch.  Every decode step, each request
+    fetches its per-layer top-k *misses* straight from the pool; per-
+    pool-device links serialize their demand (interleaving spreads
+    requests).  ``SimConfig.prefetch_width`` adds the fetch pipeline's
+    *speculative* per-step prefetch (serving/prefetch.py) and the
+    overlap knobs split fabric time into issued vs exposed seconds.
   - **rdma**: full-prefetch.  A request only becomes decodable after its
     ENTIRE prefix KV crosses the NIC (FIFO, shared aggregate bandwidth) —
     the transmission bottleneck (P1); resident KV consumes local DRAM —
@@ -50,6 +53,8 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.traffic import FabricAccountant
+from repro.core.transfer import PipelineModel
+from repro.serving.prefetch import analytic_prefetch
 from repro.serving.request import Request, summarize
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
@@ -189,6 +194,12 @@ class SimConfig:
     device_buffer: int = 6144
     overlap_frac: float = 0.0          # fetch/compute overlap (off: swap-in
                                        # is on the per-layer critical path)
+    pipeline_depth: int = 2            # double-buffered fetch queues; the
+                                       # hide window is overlap_frac *
+                                       # t_comp * (depth - 1) (PipelineModel)
+    prefetch_width: int = 0            # speculative entries/layer/step; the
+                                       # analytic twin of the engine's
+                                       # in-graph prefetch (prefetch.py)
     round1: bool = False               # cold cache: prefill + write first
     prefill_concurrency: int = 8
     max_sim_s: float = 1e5
@@ -260,11 +271,23 @@ def simulate(reqs: List[Request], model: ModelProfile,
 
     # per-request miss traffic: each request's hot-buffer hit rate depends
     # on its OWN context length (mixed-length traces are the norm).
+    # Speculative prefetch (fetch pipeline) lifts the hit rate and issues
+    # its own fabric traffic — the analytic twin of the engine's in-graph
+    # speculation (serving/prefetch.py).
+    pipeline = PipelineModel(depth=sim.pipeline_depth,
+                             overlap_frac=sim.overlap_frac)
     step_topk = model.n_attn_layers * model.topk
-    hit_rates = {r.request_id: hit_rate(sim.device_buffer, model.topk,
-                                        r.context_len) for r in reqs}
+    base_hit = {r.request_id: hit_rate(sim.device_buffer, model.topk,
+                                       r.context_len) for r in reqs}
+    hit_rates, pf_entries, pf_useful = {}, {}, {}
+    for rid, h in base_hit.items():
+        h2, issued = analytic_prefetch(h, sim.prefetch_width, model.topk)
+        hit_rates[rid] = h2
+        pf_entries[rid] = issued * model.n_attn_layers
+        pf_useful[rid] = (h2 - h) * step_topk
     miss_bytes = {rid: step_topk * (1 - h) * model.entry_bytes
                   for rid, h in hit_rates.items()}
+    pf_bytes = {rid: n * model.entry_bytes for rid, n in pf_entries.items()}
 
     def admit_ready(now: float):
         for r in sched.try_admit(now):
@@ -332,21 +355,29 @@ def simulate(reqs: List[Request], model: ModelProfile,
         t_comp = model.base_step_s + batch * model.per_token_compute_s()
         # fetch demand per pool device (shared traffic substrate)
         if backend.name == "hbm":
-            t_fetch = 0.0
+            t_fetch = t_exposed = 0.0
         else:
             for r in decoding.values():
+                rid = r.request_id
                 acct.add_step_demand(r.pool_device,
-                                     miss_bytes[r.request_id])
-                h = hit_rates[r.request_id]
+                                     miss_bytes[rid] + pf_bytes[rid])
+                h = hit_rates[rid]
                 acct.record_hits(h * step_topk, (1 - h) * step_topk)
+                if sim.prefetch_width:
+                    acct.record_prefetch(pf_entries[rid], pf_useful[rid])
+                    acct.stats.prefetch_bytes += pf_bytes[rid]
             demand = acct.drain_step()
             bw = backend.fetch_bw_Bps
             if backend.prefetch and (prefetch.busy() or rearrange.busy()):
                 bw *= (1 - backend.pcie_contention)   # PCIe bus contention
             t_fetch = (max(demand) / bw + backend.fetch_base_s
                        + model.n_attn_layers * backend.layer_latency_s)
+            # issued vs exposed: only the tail of the step's fetch that
+            # does not fit the double-buffered hide window stalls decode
+            t_exposed = pipeline.exposed_time(t_fetch, t_comp)
             acct.charge_seconds(t_fetch)
-        dt = t_comp + max(0.0, t_fetch - sim.overlap_frac * t_comp)
+            acct.charge_exposed(t_exposed)
+        dt = t_comp + t_exposed
         t += dt
 
         # prefetch progress during the step; completed transfers queue for
@@ -374,7 +405,12 @@ def simulate(reqs: List[Request], model: ModelProfile,
 
     out = summarize(reqs)
     out.update(fabric_time_s=acct.stats.fabric_time_s,
+               issued_fabric_s=acct.stats.issued_fabric_s,
+               exposed_fabric_s=acct.stats.exposed_fabric_s,
                bytes_fetched=acct.stats.bytes_fetched,
+               prefetch_bytes=acct.stats.prefetch_bytes,
+               prefetched_entries=acct.stats.prefetched_entries,
+               prefetch_useful=acct.stats.prefetch_useful,
                sim_hit_rate=acct.stats.hit_rate)
     return out
 

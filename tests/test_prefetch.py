@@ -1,0 +1,423 @@
+"""Fetch pipeline: speculative prefetch, radix/score warm-up, and the
+issued/exposed fabric split (serving/prefetch.py + hisparse warm inserts).
+
+Acceptance properties (ISSUE 2):
+  - warm inserts never change results: decoded tokens are bit-identical
+    with the pipeline on vs off (the pool stays authoritative);
+  - ``issued_fabric_s >= exposed_fabric_s >= 0`` everywhere, and exposed
+    is STRICTLY below issued on the CXL backend once overlap is on;
+  - wasted-prefetch accounting is consistent: prefetched == useful +
+    wasted, measured in-graph by the HiSparse pf_* counters;
+  - on the shared drift trace of tests/test_engine_buffer.py, the
+    engine-measured hit rate with prefetch + warm-up STRICTLY beats the
+    LRU-only buffer;
+  - the simulator's analytic overlap model (transfer.PipelineModel, the
+    exact object simulate() uses) agrees with the engine-measured
+    exposed time on the same trace.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core import hisparse
+from repro.core.transfer import FABRICS, PipelineModel
+from repro.serving.engine import Engine
+from repro.serving.prefetch import FetchPlanner, analytic_prefetch
+from repro.serving.request import sharegpt_trace
+from repro.serving.simulator import hit_rate
+
+
+def _trace(cfg, n=4, ctx=40, out=6, seed=3):
+    return sharegpt_trace(n, context_len=ctx, output_len=out, seed=seed,
+                          ctx_jitter=0.0, vocab=cfg.vocab)
+
+
+def _pool(B, S, d, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, S, d),
+                             jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# warm_insert unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_warm_insert_is_insert_without_read():
+    """Warm inserts make positions resident but count no hits/misses and
+    advance no clock; a later demand read then hits."""
+    B, S, d, buf, w = 1, 32, 4, 8, 4
+    state = hisparse.init_buffer(B, buf, S, d)
+    pool = _pool(B, S, d)
+    idx = jnp.array([[3, 5, 7, 9]], jnp.int32)
+    vals = jnp.take_along_axis(pool, idx[..., None], axis=1)
+    state2, ins = hisparse.warm_insert(state, idx, vals,
+                                       jnp.ones((B, w), bool))
+    assert int(ins[0]) == w
+    assert int(state2.pf_inserted[0]) == w and int(state2.pf_used[0]) == 0
+    assert int(state2.clock[0]) == int(state.clock[0])
+    _, hit = hisparse.lookup(state2, idx)
+    assert bool(hit.all())
+    # demand read: all four are hits, and all four consume their pf flag
+    _, state3, hits, misses = hisparse.read_through(
+        state2, idx, vals, jnp.ones((B, w), bool))
+    assert int(hits[0]) == w and int(misses[0]) == 0
+    assert int(state3.pf_used[0]) == w
+    assert not bool(state3.pf_flag.any())        # flags consumed once
+
+
+def test_warm_insert_never_evicts_current_step_hits():
+    """A warm insert after a demand swap-in must evict older LRU slots,
+    never the entries the current step just touched."""
+    B, S, d, buf = 1, 64, 4, 4
+    state = hisparse.init_buffer(B, buf, S, d)
+    pool = _pool(B, S, d)
+
+    def demand(state, positions):
+        idx = jnp.array([positions], jnp.int32)
+        f = jnp.take_along_axis(pool, idx[..., None], axis=1)
+        return hisparse.swap_in(state, idx, f, jnp.ones_like(idx, bool))[0]
+
+    state = demand(state, [0, 1])        # clock 1 (older)
+    state = demand(state, [2, 3])        # clock 2: current step {2, 3}
+    idx = jnp.array([[10, 11, 12]], jnp.int32)
+    vals = jnp.take_along_axis(pool, idx[..., None], axis=1)
+    state, ins = hisparse.warm_insert(state, idx, vals,
+                                      jnp.ones_like(idx, bool))
+    # only 2 evictable slots (0 and 1): the third candidate is dropped
+    # rather than evicting the protected current-step entries
+    assert int(ins[0]) == 2
+    _, hit = hisparse.lookup(state, jnp.array([[2, 3]], jnp.int32))
+    assert bool(hit.all())
+    _, hit01 = hisparse.lookup(state, jnp.array([[0, 1]], jnp.int32))
+    assert not bool(hit01.any())
+
+
+def test_warm_insert_skips_resident_positions():
+    B, S, d, buf = 1, 32, 4, 8
+    state = hisparse.init_buffer(B, buf, S, d)
+    pool = _pool(B, S, d)
+    idx = jnp.array([[4, 5]], jnp.int32)
+    vals = jnp.take_along_axis(pool, idx[..., None], axis=1)
+    state, ins = hisparse.warm_insert(state, idx, vals,
+                                      jnp.ones_like(idx, bool))
+    assert int(ins[0]) == 2
+    # same positions again: nothing inserted, counters unchanged
+    state, ins2 = hisparse.warm_insert(state, idx, vals,
+                                       jnp.ones_like(idx, bool))
+    assert int(ins2[0]) == 0
+    assert int(state.pf_inserted[0]) == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_property_warm_insert_preserves_read_values(data):
+    """Interleaved warm inserts never change read_through values, keep
+    the page table consistent, and keep pf accounting exact:
+    used <= inserted and both monotone (wasted = inserted - used >= 0)."""
+    B = data.draw(st.integers(1, 2))
+    S = data.draw(st.sampled_from([16, 32]))
+    buf = data.draw(st.sampled_from([4, 8]))
+    k = data.draw(st.sampled_from([2, 4]))
+    w = data.draw(st.sampled_from([1, 3]))
+    d = 4
+    pool = _pool(B, S, d, seed=data.draw(st.integers(0, 99)))
+    state = hisparse.init_buffer(B, buf, S, d)
+    rng = np.random.default_rng(data.draw(st.integers(0, 99)))
+    for _ in range(data.draw(st.integers(1, 5))):
+        idx = jnp.asarray(rng.integers(0, S, (B, k)), jnp.int32)
+        valid = jnp.asarray(rng.random((B, k)) < 0.9)
+        fetched = jnp.take_along_axis(pool, idx[..., None], axis=1)
+        vals, state, _, _ = hisparse.read_through(state, idx, fetched, valid)
+        v = np.asarray(valid)
+        np.testing.assert_array_equal(
+            np.asarray(vals, np.float32)[v],
+            np.asarray(fetched, np.float32)[v])
+        widx = jnp.asarray(rng.integers(0, S, (B, w)), jnp.int32)
+        wvals = jnp.take_along_axis(pool, widx[..., None], axis=1)
+        state, _ = hisparse.warm_insert(
+            state, widx, wvals, jnp.asarray(rng.random((B, w)) < 0.9))
+        ins = np.asarray(state.pf_inserted)
+        used = np.asarray(state.pf_used)
+        assert (used <= ins).all() and (used >= 0).all()
+        # residency maps stay bijective under mixed demand/warm updates
+        pt = np.asarray(state.page_table)
+        sp = np.asarray(state.slot_pos)
+        for b in range(B):
+            for slot in range(buf):
+                if sp[b, slot] >= 0:
+                    assert pt[b, sp[b, slot]] == slot
+            for pos in range(S):
+                if pt[b, pos] >= 0:
+                    assert sp[b, pt[b, pos]] == pos
+
+
+# ---------------------------------------------------------------------------
+# engine: bit-identity + accounting invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "minicpm-2b"])
+def test_tokens_bit_identical_prefetch_on_off(arch):
+    """The fetch pipeline changes traffic and timing, never results."""
+    cfg = get_config(arch).reduced()
+    engines = [Engine(cfg, slots=2, max_ctx=96, seed=2, prefetch=pf)
+               for pf in (True, False)]
+    for eng in engines:
+        for r in _trace(cfg, n=2, ctx=40, out=50, seed=7):
+            eng.submit(r)
+        for _ in range(10):
+            eng.step()
+    on, off = engines
+    assert on.slot_tokens == off.slot_tokens
+    assert on.stats.prefetched_entries > 0
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.data())
+def test_property_prefetch_bit_identity_random_configs(data):
+    """Random (arch, seed, trace) draws: greedy token streams match
+    prefetch-on vs prefetch-off exactly."""
+    arch = data.draw(st.sampled_from(["qwen2-1.5b", "gemma3-12b"]))
+    seed = data.draw(st.integers(0, 5))
+    tseed = data.draw(st.integers(0, 5))
+    cfg = get_config(arch).reduced()
+    streams = []
+    for pf in (True, False):
+        eng = Engine(cfg, slots=1, max_ctx=64, seed=seed, prefetch=pf)
+        for r in _trace(cfg, n=1, ctx=24, out=20, seed=tseed):
+            eng.submit(r)
+        for _ in range(6):
+            eng.step()
+        streams.append([t[:] for t in eng.slot_tokens])
+    assert streams[0] == streams[1]
+
+
+def test_engine_accounting_invariants_with_prefetch():
+    """issued >= exposed >= 0; prefetched == useful + wasted; prefetch
+    entries are part of the unified entries_fetched tally."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = Engine(cfg, slots=2, max_ctx=96, prefetch=True)
+    out = eng.run(_trace(cfg, n=4))
+    assert out["n_done"] == 4
+    s = eng.stats
+    assert s.issued_fabric_s >= s.exposed_fabric_s >= 0.0
+    assert s.exposed_fabric_s < s.issued_fabric_s     # CXL: overlap hides
+    assert s.prefetched_entries == s.prefetch_useful + s.prefetch_wasted
+    assert s.prefetch_useful > 0                      # speculation lands
+    assert s.prefetch_wasted >= 0
+    # unified schema: fabric entries = demand misses + prefetched
+    assert s.pool_entries_fetched == s.buffer_misses + s.prefetched_entries
+    assert s.traffic.prefetch_bytes > 0
+    assert s.traffic.bytes_fetched >= s.traffic.prefetch_bytes
+
+
+def test_engine_virtual_clock_is_deterministic():
+    """Engine latency metrics come from the virtual clock (modeled
+    compute + exposed fabric): two identical runs report identical
+    TTFT/TBT, and timestamps are strictly positive/ordered."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    outs = []
+    for _ in range(2):
+        eng = Engine(cfg, slots=2, max_ctx=96, seed=1)
+        reqs = _trace(cfg, n=4)
+        outs.append(eng.run(reqs))
+        assert eng.clock_s > 0
+        for r in reqs:
+            assert 0 <= r.dispatch_s < r.first_token_s <= r.finish_s
+    assert outs[0]["ttft_mean_s"] == outs[1]["ttft_mean_s"]
+    assert outs[0]["tbt_mean_s"] == outs[1]["tbt_mean_s"]
+    assert outs[0]["throughput_tok_s"] == outs[1]["throughput_tok_s"]
+
+
+def test_warmup_plan_merges_scores_and_radix():
+    cfg = get_config("qwen2-1.5b").reduced()
+    planner = FetchPlanner(cfg, n_layers=2)
+    warm = jnp.array([[1, 5, 9], [2, 6, 10]], jnp.int32)
+    plan = planner.warmup_plan(warm, matched_tokens=4, prompt_len=40)
+    assert plan is not None
+    w_total = 3 + cfg.sac.warmup_radix
+    assert plan.idx.shape == (2, w_total)
+    assert bool(plan.valid[:, :3].all())
+    # radix lanes: the 4 matched tail positions valid, earlier ones not
+    radix_valid = np.asarray(plan.valid[:, 3:])
+    assert radix_valid.sum(axis=1).tolist() == [4, 4]
+    # no radix match, no scores -> no plan
+    assert planner.warmup_plan(None, 0, 40) is None
+
+
+def test_warmup_plan_masks_windowed_layers():
+    """Radix warm-up lanes outside a windowed layer's decode mask are
+    invalid — seeding them would be guaranteed waste."""
+    cfg = get_config("gemma3-12b").reduced()   # kv layers: [local 32, global]
+    planner = FetchPlanner(cfg, n_layers=2)
+    assert planner.layer_windows == [cfg.local_window, 0]
+    plan = planner.warmup_plan(None, matched_tokens=12, prompt_len=40)
+    rv = np.asarray(plan.valid)
+    r = cfg.sac.warmup_radix                   # prefix-tail positions 4..11
+    # global layer keeps all tail lanes; the windowed layer only those
+    # its decode mask (pos > prompt_len - window) can still select
+    assert rv[1].sum() == r
+    assert rv[0].sum() == sum(p > 40 - cfg.local_window
+                              for p in range(12 - r, 12))
+    assert 0 < rv[0].sum() < rv[1].sum()
+
+
+def test_radix_warmup_seeds_shared_prefix():
+    """Identical prompts through one slot: the recycled request's hot
+    tier is pre-seeded from the radix-reused pages, so its cold-start
+    misses drop vs the LRU-only engine."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    runs = {}
+    for pf in (False, True):
+        eng = Engine(cfg, slots=1, max_ctx=96, seed=0, prefetch=pf)
+        reqs = _trace(cfg, n=3, ctx=40, out=4)
+        shared = reqs[0].prompt_tokens
+        for r in reqs:
+            r.prompt_tokens = shared.copy()
+        out = eng.run(reqs)
+        assert out["n_done"] == 3
+        runs[pf] = eng.stats
+    assert runs[True].buffer_misses < runs[False].buffer_misses
+    assert runs[True].hit_rate > runs[False].hit_rate
+
+
+# ---------------------------------------------------------------------------
+# shared drift trace (the controlled workload of tests/test_engine_buffer.py)
+# ---------------------------------------------------------------------------
+
+K, T, CTX, OUT = 16, 32, 80, 40
+
+
+def drift_topk(scores, cache_len):
+    """Lane j re-points every T steps (staggered): ~K/T changes/step."""
+    B = scores.shape[0]
+    j = jnp.arange(K, dtype=jnp.int32)[None, :]
+    t = cache_len[:, None]
+    pos = (j * 7 + 131 * ((t + j) // T)) % CTX
+    return pos.astype(jnp.int32), jnp.ones((B, K), bool)
+
+
+def drift_prefetch(scores, cache_len):
+    """Speculate the NEXT step's drift selection — the planner hook's
+    analogue of score-based speculation for the synthetic workload."""
+    idx, valid = drift_topk(scores, cache_len + 1)
+    return idx, valid
+
+
+def _run_drift(buf, *, prefetch, overlap=None):
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = Engine(cfg, slots=1, max_ctx=160, device_buffer=buf,
+                 topk_fn=drift_topk, prefetch=prefetch,
+                 prefetch_fn=drift_prefetch if prefetch else None,
+                 overlap=overlap)
+    eng.submit(_trace(cfg, n=1, ctx=CTX, out=OUT, seed=5)[0])
+    steps = 0
+    while any(eng.slot_req) or eng.queue:
+        eng.step()
+        steps += 1
+        assert steps < 300
+    return eng
+
+
+def test_drift_trace_prefetch_strictly_improves_hit_rate():
+    """Acceptance: with prefetch + warm-up on, the engine-measured hit
+    rate strictly beats the LRU-only buffer on the shared drift trace,
+    and exposed < issued on the CXL backend."""
+    for buf in (32, 64):
+        lru = _run_drift(buf, prefetch=False)
+        pf = _run_drift(buf, prefetch=True)
+        assert pf.stats.hit_rate > lru.stats.hit_rate, \
+            (buf, pf.stats.hit_rate, lru.stats.hit_rate)
+        assert pf.stats.buffer_misses < lru.stats.buffer_misses
+        assert pf.stats.exposed_fabric_s < pf.stats.issued_fabric_s
+        # speculation on this trace is near-perfect: most prefetched
+        # entries are demand-hit the following step
+        assert pf.stats.prefetch_precision > 0.5
+        assert pf.stats.prefetched_entries == \
+            pf.stats.prefetch_useful + pf.stats.prefetch_wasted
+
+
+def test_sim_overlap_model_matches_engine_exposed():
+    """Acceptance: the simulator's analytic overlap model — the exact
+    PipelineModel simulate() evaluates — reproduces the engine-measured
+    exposed seconds when driven by the engine's per-step issued traffic,
+    and the hit-model-predicted issued total brackets the measured one."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    buf = 32
+    eng = Engine(cfg, slots=1, max_ctx=160, device_buffer=buf,
+                 topk_fn=drift_topk, overlap=True)
+    assert eng.overlap_on
+    pipeline = eng.pipeline                     # == simulate()'s model
+    assert isinstance(pipeline, PipelineModel)
+    eng.submit(_trace(cfg, n=1, ctx=CTX, out=OUT, seed=5)[0])
+    eng.step()                                  # prefill + cold first step
+    issued0 = eng.stats.issued_fabric_s
+    exposed0 = eng.stats.exposed_fabric_s
+    t_comp = eng.step_compute_s(1)
+    predicted, steps = 0.0, 0
+    while any(eng.slot_req) or eng.queue:
+        i0 = eng.stats.issued_fabric_s
+        eng.step()
+        steps += 1
+        predicted += pipeline.exposed_time(
+            eng.stats.issued_fabric_s - i0, t_comp)
+        assert steps < 300
+    measured = eng.stats.exposed_fabric_s - exposed0
+    issued = eng.stats.issued_fabric_s - issued0
+    assert 0.0 <= measured <= issued
+    # per-step agreement of the analytic split with the engine's queues
+    assert measured == pytest.approx(predicted, rel=1e-6, abs=1e-12)
+    # and the simulator's hit model predicts the issued total to within
+    # a loose factor (the hit-rate parity bound of test_engine_buffer)
+    fabric = FABRICS["cxl"]
+    miss_per_step = (1 - hit_rate(buf, K, CTX)) * K * eng.model.n_kv
+    analytic_issued = steps * fabric.sparse_fetch_time(
+        miss_per_step, eng.sac.entry_bytes)
+    assert 0.2 * analytic_issued < issued < 5.0 * analytic_issued, \
+        (issued, analytic_issued)
+
+
+# ---------------------------------------------------------------------------
+# analytic prefetch model (simulator side)
+# ---------------------------------------------------------------------------
+
+
+def test_analytic_prefetch_monotone_and_bounded():
+    base = hit_rate(4096, 2048, 65536)
+    h0, issued0 = analytic_prefetch(base, 0, 2048)
+    assert h0 == base and issued0 == 0.0
+    prev = base
+    for w in (128, 512, 2048):
+        h, issued = analytic_prefetch(base, w, 2048)
+        assert base <= prev <= h <= 1.0
+        assert issued > 0
+        # consistency with the measured schema: the modeled useful
+        # entries ((h - base) * topk) never exceed the modeled inserts
+        assert (h - base) * 2048 <= issued + 1e-9
+        prev = h
+
+
+def test_simulator_prefetch_and_overlap_improve_cxl():
+    from repro.serving.simulator import (SimConfig, default_backends,
+                                         profile_from_config, simulate)
+    model = profile_from_config(get_config("deepseek-v32"))
+    b = default_backends()["cxl"]
+    reqs = sharegpt_trace(48, context_len=65536, output_len=128, seed=1)
+    base = simulate(reqs, model, b, SimConfig(concurrency=32))
+    pipe = simulate(reqs, model, b, SimConfig(concurrency=32,
+                                              overlap_frac=0.85,
+                                              prefetch_width=512))
+    assert base["n_done"] == pipe["n_done"] == 48
+    # without an overlap model every issued second is exposed
+    assert base["exposed_fabric_s"] == pytest.approx(
+        base["issued_fabric_s"])
+    assert pipe["exposed_fabric_s"] < pipe["issued_fabric_s"]
+    assert pipe["sim_hit_rate"] > base["sim_hit_rate"]
+    assert pipe["throughput_tok_s"] > base["throughput_tok_s"]
+    # wasted-prefetch consistency holds for the analytic twin too:
+    # prefetched >= useful >= 0 (wasted = prefetched - useful >= 0)
+    assert pipe["prefetched_entries"] >= pipe["prefetch_useful"] >= 0
