@@ -42,6 +42,22 @@ class SACConfig:
     overlap_frac: float = 0.85       # fraction of step compute a queued
                                      # fetch can hide behind
 
+    # --- fabric budget arbiter (serving/arbiter.py) ---
+    arbiter: bool = False            # cross-request prefetch budget
+                                     # arbitration (per-device link pressure
+                                     # shrinks speculative widths)
+    link_budget_frac: float = 1.0    # fraction of the pipeline hide window
+                                     # speculation may fill per device
+    min_prefetch_width: int = 0      # granted-width floor under saturation
+    score_margin: float = 1.0        # score-threshold speculation: tail
+                                     # entries within margin*(s_max - s_k)
+                                     # of the k-th demand score qualify;
+                                     # < 0 = pure rank window [k, k+w)
+    layer_sizing: str = "uniform"    # hot-tier slot apportioning across
+                                     # layers: "uniform" | "windowed"
+                                     # (LayerSizer prior: windowed layers
+                                     # capped at their selectable window)
+
 
 # ---------------------------------------------------------------------------
 # Model architecture configuration

@@ -24,12 +24,18 @@ traffic, which is exactly what Fig 14 measures).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 EMPTY = jnp.int32(-1)
+# per-layer buffer sizing (serving/arbiter.py LayerSizer): a DISABLED
+# slot belongs to no layer budget — it is never empty, never a victim,
+# and never assigned, so a layered buffer can give each layer its own
+# effective size inside one static [L, B, buf_max, ...] allocation
+DISABLED = jnp.int32(-2)
 _BIG = jnp.int32(1 << 30)
 
 
@@ -99,15 +105,19 @@ def _swap_in_one(entries, slot_pos, page_table, last_use, clock, pf_flag,
     miss = miss & (first_occ[idx_dedup] == order)
 
     # eviction order: empty slots first, then LRU, protected (current hits)
-    # last.
+    # second-to-last, DISABLED slots (per-layer sizing) strictly last and
+    # outside the assignable range.
     prot = jnp.zeros((buf,), bool).at[jnp.where(hit, slots, buf - 1)].max(hit)
-    empty = slot_pos < 0
+    empty = slot_pos == EMPTY
+    disabled = slot_pos == DISABLED
     key = jnp.where(empty, jnp.arange(buf, dtype=jnp.int32) - _BIG,
-                    jnp.where(prot, _BIG, last_use))
+                    jnp.where(disabled, _BIG,
+                              jnp.where(prot, _BIG - 1, last_use)))
     victim_order = jnp.argsort(key).astype(jnp.int32)      # [buf]
+    n_slots = buf - disabled.astype(jnp.int32).sum()       # layer's size
 
     miss_rank = jnp.cumsum(miss.astype(jnp.int32)) - 1     # [k]
-    fillable = miss & (miss_rank < buf)
+    fillable = miss & (miss_rank < n_slots)
     assign = jnp.where(fillable,
                        victim_order[jnp.clip(miss_rank, 0, buf - 1)],
                        buf)                                # buf = sink row
@@ -211,12 +221,15 @@ def _warm_insert_one(entries, slot_pos, page_table, last_use, clock, pf_flag,
     first_occ = jnp.full((S + 1,), w, jnp.int32).at[idx_dedup].min(order)
     want = want & (first_occ[idx_dedup] == order)
 
-    empty = slot_pos < 0
-    prot = (last_use >= clock) & ~empty
+    empty = slot_pos == EMPTY
+    disabled = slot_pos == DISABLED
+    prot = (last_use >= clock) & ~empty & ~disabled
     key = jnp.where(empty, jnp.arange(buf, dtype=jnp.int32) - _BIG,
-                    jnp.where(prot, _BIG, last_use))
+                    jnp.where(disabled, _BIG,
+                              jnp.where(prot, _BIG - 1, last_use)))
     victim_order = jnp.argsort(key).astype(jnp.int32)      # [buf]
-    avail = buf - prot.astype(jnp.int32).sum()             # evictable slots
+    avail = (buf - prot.astype(jnp.int32).sum()            # evictable slots
+             - disabled.astype(jnp.int32).sum())
 
     rank = jnp.cumsum(want.astype(jnp.int32)) - 1
     fill = want & (rank < avail)
@@ -291,22 +304,41 @@ def warm_lane(state: BufferState, lane, idx: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def init_layered_buffer(n_layers: int, batch: int, buf_size: int,
+def init_layered_buffer(n_layers: int, batch: int,
+                        buf_size: Union[int, Sequence[int]],
                         seq_len: int, entry_dim: int,
                         dtype=jnp.bfloat16) -> BufferState:
     """Per-(layer, request) buffer stack: every field gains a leading
     [L] axis (entries [L, B, buf, d], page_table [L, B, S], ...).
 
+    ``buf_size`` may be a single size (uniform layers, the PR 1 layout)
+    or a per-layer sequence (serving/arbiter.py ``LayerSizer``): the
+    allocation is ``max(sizes)`` wide and layer ``l``'s slots beyond
+    ``sizes[l]`` are marked :data:`DISABLED` — never resident, never a
+    victim — so each layer runs at its own effective capacity inside one
+    static layout.
+
     This is the ``hot_buf`` entry of the engine's serve_state pytree;
     the decode step threads per-layer slices through ``read_through``.
     """
+    if isinstance(buf_size, (int, np.integer)):
+        sizes = [int(buf_size)] * n_layers
+    else:
+        sizes = [int(s) for s in buf_size]
+        assert len(sizes) == n_layers, (len(sizes), n_layers)
+    buf_max = max(max(sizes), 1)
+    slot = np.arange(buf_max)[None, None, :]
+    sz = np.asarray(sizes, np.int32)[:, None, None]
+    slot_pos = jnp.asarray(
+        np.where(np.broadcast_to(slot < sz, (n_layers, batch, buf_max)),
+                 int(EMPTY), int(DISABLED)), jnp.int32)
     return BufferState(
-        entries=jnp.zeros((n_layers, batch, buf_size, entry_dim), dtype),
-        slot_pos=jnp.full((n_layers, batch, buf_size), EMPTY),
+        entries=jnp.zeros((n_layers, batch, buf_max, entry_dim), dtype),
+        slot_pos=slot_pos,
         page_table=jnp.full((n_layers, batch, seq_len), EMPTY),
-        last_use=jnp.zeros((n_layers, batch, buf_size), jnp.int32),
+        last_use=jnp.zeros((n_layers, batch, buf_max), jnp.int32),
         clock=jnp.zeros((n_layers, batch), jnp.int32),
-        pf_flag=jnp.zeros((n_layers, batch, buf_size), bool),
+        pf_flag=jnp.zeros((n_layers, batch, buf_max), bool),
         pf_inserted=jnp.zeros((n_layers, batch), jnp.int32),
         pf_used=jnp.zeros((n_layers, batch), jnp.int32),
     )
@@ -317,11 +349,15 @@ def reset_lane(state: BufferState, lane: int) -> BufferState:
 
     Used when a serving slot is recycled: the next request must not see
     the previous occupant's residency (its pool pages are reused).
-    Entries need no clearing — unmapped slots are unreachable.
+    Entries need no clearing — unmapped slots are unreachable.  DISABLED
+    slots (per-layer sizing) keep their marker: layer capacities are a
+    property of the buffer layout, not of the occupant.
     """
+    lane_slots = state.slot_pos[:, lane]
+    cleared = jnp.where(lane_slots == DISABLED, DISABLED, EMPTY)
     return BufferState(
         entries=state.entries,
-        slot_pos=state.slot_pos.at[:, lane].set(EMPTY),
+        slot_pos=state.slot_pos.at[:, lane].set(cleared),
         page_table=state.page_table.at[:, lane].set(EMPTY),
         last_use=state.last_use.at[:, lane].set(0),
         clock=state.clock.at[:, lane].set(0),

@@ -46,7 +46,9 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
                   window: int = 0,
                   buf_state: Optional[hisparse.BufferState] = None,
                   prefetch_width: int = 0,
-                  prefetch_fn: Optional[Callable] = None):
+                  prefetch_fn: Optional[Callable] = None,
+                  score_margin: float = -1.0,
+                  pf_budget: Optional[jnp.ndarray] = None):
     """One layer of SAC decode attention.  x: [B, D] -> [B, D].
 
     kv_pool_l: [B, S, d_entry] (this layer's pool slice, S possibly sharded
@@ -65,11 +67,16 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
     the next step's speculated entrants — ``prefetch_fn(scores,
     cache_len) -> (idx [B, w], valid)``, default ranks [k, k+w) of this
     step's indexer scores (dsa.speculate_next_topk) — into the hot tier
-    after the demand swap-in.  Prefetch only ever touches the buffer (the
+    after the demand swap-in.  ``score_margin >= 0`` switches the default
+    speculation from the rank window to score-threshold selection (tail
+    entries within the margin of the k-th demand score, dsa._spec_tail);
+    ``pf_budget`` ([B] int32, from the fabric budget arbiter,
+    serving/arbiter.py) caps how many speculation lanes each request may
+    actually issue this step.  Prefetch only ever touches the buffer (the
     pool stays authoritative), so decoded tokens are bit-identical with
-    prefetch on or off; the ``pf_*`` counters inside the returned buffer
-    state measure inserted/useful speculation for the host's wasted-
-    traffic accounting (serving/prefetch.py).
+    prefetch on or off and under any margin/budget; the ``pf_*`` counters
+    inside the returned buffer state measure inserted/useful speculation
+    for the host's wasted-traffic accounting (serving/prefetch.py).
     """
     scores = dsa.indexer_scores(p_idx, x, idx_pool_l, cfg)
     if window:
@@ -86,7 +93,7 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
         # fused selection: one top_k(k+w) yields the (bit-identical)
         # demand set AND the speculation tail
         idx, valid, p_idx_, p_valid = dsa.topk_select_with_tail(
-            scores, cache_len, cfg.sac.topk, prefetch_width)
+            scores, cache_len, cfg.sac.topk, prefetch_width, score_margin)
     else:
         idx, valid = dsa.topk_select(scores, cache_len, cfg.sac.topk)
     fetched = fetch_fn(kv_pool_l, idx)
@@ -99,7 +106,12 @@ def sparse_attend(p_attn: Dict, p_idx: Dict, x: jnp.ndarray, cfg: ModelConfig,
                     prefetch_fn(scores, cache_len) if prefetch_fn is not None
                     else dsa.speculate_next_topk(scores, cache_len,
                                                  cfg.sac.topk,
-                                                 prefetch_width))
+                                                 prefetch_width,
+                                                 score_margin))
+            if pf_budget is not None:
+                # arbiter-granted cap: only the first budget[b] lanes may
+                # issue (lanes are best-first) — traffic shaping only
+                p_valid = dsa.budget_mask(p_valid, pf_budget)
             p_vals = fetch_fn(kv_pool_l, jnp.clip(
                 p_idx_, 0, kv_pool_l.shape[1] - 1))
             buf_state, _ = hisparse.warm_insert(buf_state, p_idx_, p_vals,
@@ -263,10 +275,11 @@ class SACSystem:
         return self.traffic.bulk_fetch(n_bytes, device=device,
                                        contention=contention)
 
-    def write_back_time(self, n_tokens: int, *, contention: float = 1.0
-                        ) -> float:
+    def write_back_time(self, n_tokens: int, *, device: int = 0,
+                        contention: float = 1.0) -> float:
         n_bytes = n_tokens * self.entry_bytes * max(self.cfg.n_attn_layers, 1)
-        return self.traffic.write_back(n_bytes, contention=contention)
+        return self.traffic.write_back(n_bytes, device=device,
+                                       contention=contention)
 
     def device_of(self, request_id: int) -> int:
         rp = self.requests.get(request_id)

@@ -46,10 +46,27 @@ class TrafficStats:
     prefetch_bytes: float = 0.0      # fabric bytes spent on prefetch
     device_demand_bytes: List[float] = dataclasses.field(
         default_factory=list)       # cumulative fetch demand per device
+    device_issued_s: List[float] = dataclasses.field(
+        default_factory=list)       # cumulative issued seconds per device
+    device_prefetch_s: List[float] = dataclasses.field(
+        default_factory=list)       # issued seconds spent on prefetch, per
+                                    # device (subset of device_issued_s) —
+                                    # the arbiter's per-link pressure split
 
     def __post_init__(self):
         if not self.device_demand_bytes:
             self.device_demand_bytes = [0.0] * self.n_devices
+        if not self.device_issued_s:
+            self.device_issued_s = [0.0] * self.n_devices
+        if not self.device_prefetch_s:
+            self.device_prefetch_s = [0.0] * self.n_devices
+
+    def device_demand_s(self) -> List[float]:
+        """Per-device issued seconds attributable to *demand* traffic
+        (total issued minus the speculative share) — the link-pressure
+        signal the budget arbiter (serving/arbiter.py) reads."""
+        return [t - p for t, p in zip(self.device_issued_s,
+                                      self.device_prefetch_s)]
 
     @property
     def hit_rate(self) -> float:
@@ -182,6 +199,7 @@ class FabricAccountant:
         self.stats.entries_fetched += n_entries
         self.stats.device_demand_bytes[device % self.n_devices] += n_bytes
         self.stats.fabric_time_s += t
+        self.stats.device_issued_s[device % self.n_devices] += t
         self._book_time(t, device)
         return t
 
@@ -194,6 +212,7 @@ class FabricAccountant:
                               contention=contention)
         if n_entries > 0:
             self.stats.prefetch_bytes += n_entries * entry_bytes
+            self.stats.device_prefetch_s[device % self.n_devices] += t
         return t
 
     def bulk_fetch(self, n_bytes: float, *, device: int = 0,
@@ -206,19 +225,25 @@ class FabricAccountant:
         self.stats.bytes_fetched += n_bytes
         self.stats.device_demand_bytes[device % self.n_devices] += n_bytes
         self.stats.fabric_time_s += t
+        self.stats.device_issued_s[device % self.n_devices] += t
         self._book_time(t, device)
         return t
 
-    def write_back(self, n_bytes: float, *, contention: float = 1.0
-                   ) -> float:
-        """Pool write (prefill bulk write / decode write-back)."""
+    def write_back(self, n_bytes: float, *, device: int = 0,
+                   contention: float = 1.0) -> float:
+        """Pool write (prefill bulk write / decode write-back).
+
+        ``device`` matters for the arbiter's per-link demand signal: a
+        prefill write lands on the request's pool device, not device 0.
+        """
         if n_bytes <= 0:
             return 0.0
         assert self.fabric is not None, "timed ops need a fabric model"
         t = self.fabric.bulk_transfer_time(n_bytes, contention=contention)
         self.stats.bytes_written += n_bytes
         self.stats.fabric_time_s += t
-        self._book_time(t, 0)
+        self.stats.device_issued_s[device % self.n_devices] += t
+        self._book_time(t, device)
         return t
 
     # -- hot-buffer accounting --------------------------------------------

@@ -58,6 +58,17 @@ class FabricModel:
         return (self.base_latency_s + n_msgs * self.per_message_s
                 + n_entries * self.per_entry_s * cong + bw_t)
 
+    def per_entry_seconds(self, entry_bytes: int, *,
+                          nominal_batch: int = 256) -> float:
+        """Amortized seconds per entry for a sparse fetch of
+        ``nominal_batch`` entries — the marginal cost the budget arbiter
+        (serving/arbiter.py) uses to convert a link-seconds budget into a
+        per-request speculative entry budget.  Amortizing over a batch
+        spreads the one-time ``base_latency_s`` the way a real per-step
+        miss burst does."""
+        n = max(int(nominal_batch), 1)
+        return self.sparse_fetch_time(n, entry_bytes) / n
+
     def bulk_transfer_time(self, n_bytes: int, contention: float = 1.0
                            ) -> float:
         """Streaming transfer of a contiguous region (full-prefetch path)."""

@@ -32,6 +32,14 @@ def main():
                     help="enable the fetch pipeline (speculative "
                          "prefetch + prefill warm-up + overlap queues; "
                          "serving/prefetch.py)")
+    ap.add_argument("--arbiter", action="store_true",
+                    help="enable cross-request prefetch budget "
+                         "arbitration (serving/arbiter.py); implies "
+                         "--prefetch — the arbiter governs speculation")
+    ap.add_argument("--layer-sizing", default=None,
+                    choices=["uniform", "windowed"],
+                    help="hot-tier slot apportioning across layers "
+                         "(LayerSizer; default cfg.sac.layer_sizing)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -42,6 +50,11 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.arbiter and not args.prefetch:
+        # the arbiter governs speculative prefetch; without the pipeline
+        # it would be a silent no-op
+        print("--arbiter implies --prefetch: enabling the fetch pipeline")
+        args.prefetch = True
     if cfg.enc_dec:
         raise SystemExit("serve driver targets decoder-only archs; "
                          "whisper decode is exercised in tests")
@@ -49,7 +62,9 @@ def main():
                  backend=args.backend, mode=args.mode, seed=args.seed,
                  track_buffer=not args.no_buffer,
                  device_buffer=args.device_buffer,
-                 prefetch=args.prefetch)
+                 prefetch=args.prefetch,
+                 arbiter=args.arbiter or None,
+                 layer_sizing=args.layer_sizing)
     reqs = sharegpt_trace(args.requests, context_len=args.ctx,
                           output_len=args.out_len, seed=args.seed,
                           ctx_jitter=0.0, vocab=cfg.vocab)

@@ -90,12 +90,29 @@ def _position_sort(idx: jnp.ndarray, valid: jnp.ndarray, S: int
             jnp.take_along_axis(valid, order, axis=-1))
 
 
-def _spec_tail(top_scores, idx, k: int, width: int
+def _spec_tail(top_scores, idx, k: int, width: int,
+               score_margin: float = -1.0
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Ranks [k, k+width) of a top-(k+width) result, padded to width."""
+    """Ranks [k, k+width) of a top-(k+width) result, padded to width.
+
+    ``score_margin >= 0`` switches the tail from a pure rank window to
+    **score-threshold** selection: a tail entry only qualifies while its
+    score is within ``margin * (s_max - s_k)`` of the k-th demand score
+    ``s_k`` (scale-free — indexer score magnitudes vary per model).  A
+    flat score landscape near the cut keeps the full window; a steep
+    drop-off after rank k stops speculation early, so cheap steps stop
+    fetching useless tail entries.  Negative margin = rank-only (PR 2
+    semantics).
+    """
     lo = min(k, idx.shape[-1])
     tail_idx = idx[..., lo:].astype(jnp.int32)
-    tail_valid = top_scores[..., lo:] > NEG_INF / 2
+    tail_scores = top_scores[..., lo:]
+    tail_valid = tail_scores > NEG_INF / 2
+    if score_margin >= 0 and lo > 0:
+        s_max = top_scores[..., :1]
+        s_k = top_scores[..., lo - 1:lo]
+        thr = s_k - score_margin * (s_max - s_k)
+        tail_valid = tail_valid & (tail_scores >= thr)
     pad = width - tail_idx.shape[-1]
     if pad > 0:
         tail_idx = jnp.pad(tail_idx, ((0, 0), (0, pad)))
@@ -104,7 +121,7 @@ def _spec_tail(top_scores, idx, k: int, width: int
 
 
 def speculate_next_topk(scores: jnp.ndarray, cache_len: jnp.ndarray,
-                        k: int, width: int
+                        k: int, width: int, score_margin: float = -1.0
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Speculative next-step candidates: ranks [k, k+width) of this step's
     indexer scores.
@@ -125,11 +142,11 @@ def speculate_next_topk(scores: jnp.ndarray, cache_len: jnp.ndarray,
     masked = jnp.where(pos[None, :] < cache_len[:, None], scores, NEG_INF)
     kk = min(k + width, S)
     top_scores, idx = jax.lax.top_k(masked, kk)
-    return _spec_tail(top_scores, idx, k, width)
+    return _spec_tail(top_scores, idx, k, width, score_margin)
 
 
 def topk_select_with_tail(scores: jnp.ndarray, cache_len: jnp.ndarray,
-                          k: int, width: int):
+                          k: int, width: int, score_margin: float = -1.0):
     """Fused demand top-k + speculation tail: ONE ``top_k(k+width)``
     serves both.
 
@@ -137,7 +154,9 @@ def topk_select_with_tail(scores: jnp.ndarray, cache_len: jnp.ndarray,
     ``min(k, S)`` lanes of the larger sort are exactly
     :func:`topk_select`'s set — position-sorted identically, the demand
     half is bit-identical to the unfused path (sparse decode results do
-    not depend on whether speculation runs).  Returns
+    not depend on whether speculation runs).  ``score_margin`` applies
+    score-threshold selection to the tail only (see :func:`_spec_tail`);
+    the demand half never depends on it.  Returns
     ``(idx [B, min(k,S)], valid, tail_idx [B, width], tail_valid)``.
     """
     S = scores.shape[-1]
@@ -149,7 +168,22 @@ def topk_select_with_tail(scores: jnp.ndarray, cache_len: jnp.ndarray,
     d_idx = idx[..., :lo].astype(jnp.int32)
     d_valid = top_scores[..., :lo] > NEG_INF / 2
     d_idx, d_valid = _position_sort(d_idx, d_valid, S)
-    return d_idx, d_valid, *_spec_tail(top_scores, idx, k, width)
+    return d_idx, d_valid, *_spec_tail(top_scores, idx, k, width,
+                                       score_margin)
+
+
+def budget_mask(valid: jnp.ndarray, budget: jnp.ndarray) -> jnp.ndarray:
+    """Cap a speculation candidate set to a per-request granted budget.
+
+    valid: [B, w] candidate lanes (score/rank-ordered best-first);
+    budget: [B] int32 granted widths from the fabric budget arbiter
+    (serving/arbiter.py).  Only the first ``budget[b]`` lanes survive —
+    lanes are best-first, so the cap drops the least likely entrants.
+    Budgets shape *speculation traffic* only; demand selection (and thus
+    decoded tokens) never flows through this mask.
+    """
+    lanes = jnp.arange(valid.shape[-1], dtype=jnp.int32)
+    return valid & (lanes[None, :] < budget[:, None].astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------

@@ -379,7 +379,9 @@ def _attn_decode(p, x, cfg, ctx, kv_slice, idx_slice, window, hbuf=None):
         positions, own, fetch_fn=ctx["fetch_fn"], topk_fn=ctx.get("topk_fn"),
         window=window, buf_state=hbuf,
         prefetch_width=ctx.get("prefetch_width", 0),
-        prefetch_fn=ctx.get("prefetch_fn"))
+        prefetch_fn=ctx.get("prefetch_fn"),
+        score_margin=ctx.get("score_margin", -1.0),
+        pf_budget=ctx.get("pf_budget"))
     return delta, own, new_key, hbuf, hits, misses
 
 
@@ -406,10 +408,16 @@ def _hb_stack(hbs):
 
 
 def _hm_sum(hits, misses):
-    """Sum per-layer hit/miss counts ([B] each) into one (hits, misses)."""
+    """Stack per-layer hit/miss counts ([B] each) into ([a, B], [a, B]).
+
+    Kept per-layer (not summed) so the host can measure per-layer miss
+    rates — the signal the ``LayerSizer`` (serving/arbiter.py) apportions
+    hot-tier slots by.  The decode assembly reduces over layers for the
+    per-request ``buf_hits``/``buf_misses`` totals.
+    """
     if not hits or hits[0] is None:
         return None
-    return (sum(hits[1:], hits[0]), sum(misses[1:], misses[0]))
+    return (jnp.stack(hits), jnp.stack(misses))
 
 
 def segment_decode(seg: Segment, cfg: ModelConfig, shared_params=None):
@@ -651,12 +659,17 @@ class TransformerLM:
         return state, last
 
     # -- decode ----------------------------------------------------------------
-    def decode(self, params, state, tokens):
-        """One decode step.  tokens [B] -> (state', logits [B, V])."""
-        with _use_opts(self.opts):
-            return self._decode(params, state, tokens)
+    def decode(self, params, state, tokens, pf_budget=None):
+        """One decode step.  tokens [B] -> (state', logits [B, V]).
 
-    def _decode(self, params, state, tokens):
+        ``pf_budget`` ([B] int32 or None) is the step's arbiter-granted
+        speculative width per request (serving/arbiter.py): it caps how
+        many speculation lanes each request may warm-insert — traffic
+        shaping only, decoded tokens never depend on it."""
+        with _use_opts(self.opts):
+            return self._decode(params, state, tokens, pf_budget)
+
+    def _decode(self, params, state, tokens, pf_budget=None):
         cfg = self.cfg
         B = tokens.shape[0]
         x = jnp.take(params["embed"], tokens, axis=0).astype(DTYPE)
@@ -670,6 +683,8 @@ class TransformerLM:
             "mode": self.mode,
             "prefetch_width": int(self.opts.get("prefetch_width", 0)),
             "prefetch_fn": self.opts.get("prefetch_fn"),
+            "score_margin": float(self.opts.get("score_margin", -1.0)),
+            "pf_budget": pf_budget,
         }
         kv_pool, idx_pool = state.get("kv_pool"), state.get("idx_pool")
         hot = state.get("hot_buf")    # layered hisparse.BufferState or None
@@ -680,8 +695,7 @@ class TransformerLM:
         pool_closure = bool(self.opts.get("pool_closure"))
         use_idx = idx_pool is not None and self.mode == "sac"
         new_entries, new_keys = [], []
-        buf_hits = jnp.zeros((B,), jnp.int32)
-        buf_misses = jnp.zeros((B,), jnp.int32)
+        hits_l, misses_l = [], []     # per-kv-layer [l, B] blocks, in order
         kv_off = 0
         for si, seg in enumerate(self.segments):
             body = segment_decode(seg, cfg, params.get("shared"))
@@ -754,8 +768,10 @@ class TransformerLM:
                         jax.lax.dynamic_update_slice_in_dim(full, upd, _o, 0),
                     hot, flat)
             if hm is not None:
-                buf_hits = buf_hits + hm[0].sum(0)
-                buf_misses = buf_misses + hm[1].sum(0)
+                # hm: ([n, a, B], [n, a, B]) — flatten to this segment's
+                # kv layers in pool order
+                hits_l.append(hm[0].reshape(-1, B))
+                misses_l.append(hm[1].reshape(-1, B))
             if rec2 is not None:
                 state = dict(state)
                 state[f"rec_{si}"] = rec2
@@ -768,10 +784,17 @@ class TransformerLM:
                     idx_pool, jnp.concatenate(new_keys, 0), cache_len)
         if hot is not None:
             state["hot_buf"] = hot
-            # per-step measured hot-tier outcomes (summed over layers);
-            # the engine reads these to charge miss-only fabric traffic
-            state["buf_hits"] = buf_hits
-            state["buf_misses"] = buf_misses
+            # per-step measured hot-tier outcomes, per layer ([L, B]) and
+            # summed; the engine charges miss-only fabric traffic from the
+            # totals and feeds the per-layer miss rates to the LayerSizer
+            hl = (jnp.concatenate(hits_l, 0) if hits_l
+                  else jnp.zeros((self.n_kv, B), jnp.int32))
+            ml = (jnp.concatenate(misses_l, 0) if misses_l
+                  else jnp.zeros((self.n_kv, B), jnp.int32))
+            state["buf_hits_l"] = hl
+            state["buf_misses_l"] = ml
+            state["buf_hits"] = hl.sum(0)
+            state["buf_misses"] = ml.sum(0)
             state["pf_inserted"] = hot.pf_inserted.sum(0) - pf_ins0
             state["pf_useful"] = hot.pf_used.sum(0) - pf_use0
         state["cache_len"] = cache_len + 1
@@ -781,8 +804,14 @@ class TransformerLM:
 
     # -- state builders ---------------------------------------------------------
     def _empty_state(self, batch: int, seq_len: int,
-                     device_buffer: int = 0) -> Dict:
+                     device_buffer=0) -> Dict:
+        """``device_buffer`` is the hot-tier size per layer: one int
+        (uniform) or a per-layer sequence (serving/arbiter.py LayerSizer
+        apportioning, realized by hisparse DISABLED slot markers)."""
         cfg = self.cfg
+        buffered = (max(device_buffer) if isinstance(device_buffer,
+                                                     (list, tuple))
+                    else device_buffer)
         state: Dict[str, Any] = {"cache_len": jnp.zeros((batch,), jnp.int32)}
         if self.n_kv:
             state["kv_pool"] = jnp.zeros(
@@ -790,7 +819,7 @@ class TransformerLM:
             if cfg.sac.enabled:
                 state["idx_pool"] = jnp.zeros(
                     (self.n_kv, batch, seq_len, cfg.sac.d_idx), DTYPE)
-            if device_buffer and cfg.sac.enabled and self.mode == "sac":
+            if buffered and cfg.sac.enabled and self.mode == "sac":
                 # HiSparse hot tier: per-(layer, request) device buffer;
                 # the decode step reads through it and reports measured
                 # per-request hit/miss counts in buf_hits/buf_misses.
@@ -799,6 +828,11 @@ class TransformerLM:
                     self.kv_dtype)
                 state["buf_hits"] = jnp.zeros((batch,), jnp.int32)
                 state["buf_misses"] = jnp.zeros((batch,), jnp.int32)
+                # per-layer split of the same counters (LayerSizer signal)
+                state["buf_hits_l"] = jnp.zeros((self.n_kv, batch),
+                                                jnp.int32)
+                state["buf_misses_l"] = jnp.zeros((self.n_kv, batch),
+                                                  jnp.int32)
                 # per-step speculative-prefetch outcomes (fetch pipeline)
                 state["pf_inserted"] = jnp.zeros((batch,), jnp.int32)
                 state["pf_useful"] = jnp.zeros((batch,), jnp.int32)
@@ -810,7 +844,7 @@ class TransformerLM:
         return state
 
     def serve_state_shapes(self, batch: int, seq_len: int,
-                           device_buffer: int = 0) -> Dict:
+                           device_buffer=0) -> Dict:
         """ShapeDtypeStruct pytree of the serve state (dry-run input specs).
 
         Traced abstractly (zero allocation) so dry-runs can lower against
@@ -819,7 +853,7 @@ class TransformerLM:
             lambda: self._empty_state(batch, seq_len, device_buffer))
 
     def init_serve_state(self, batch: int, seq_len: int,
-                         device_buffer: int = 0) -> Dict:
+                         device_buffer=0) -> Dict:
         return self._empty_state(batch, seq_len, device_buffer)
 
     # -- shared pieces -----------------------------------------------------------

@@ -1,0 +1,207 @@
+"""Fabric budget arbiter: the control loop between the fetch pipeline's
+mechanisms (serving/prefetch.py) and a multi-tenant serving story.
+
+PR 2 let every request speculate at the full ``prefetch_width`` no matter
+how loaded its pool link was — exactly the regime where speculative
+fetching degrades: once a device's issued seconds outgrow the pipeline's
+hide window, every extra prefetched entry lands on the step critical
+path.  Two host-side policies close that loop:
+
+  - :class:`BudgetArbiter` — each step, read per-device link pressure
+    (the per-step deltas of ``TrafficStats.device_demand_s()``: issued
+    seconds minus the speculative share) and grant every request a
+    speculative entry budget: requests on saturated links shrink toward
+    ``min_width``, requests on idle links keep full ``max_width``.
+    Grants obey, per device: ``sum(width * n_layers) * per_entry_s <=
+    link_budget_frac * hide_window - demand_s`` (when that headroom is
+    positive; property-tested in tests/test_arbiter.py).
+  - :class:`LayerSizer` — apportion the hot tier's total slot budget
+    (``device_buffer_size * n_layers``) across layers by miss pressure
+    instead of uniformly: windowed layers can never select more than
+    ``window`` distinct positions, so their slots are capped and the
+    surplus goes to the full-attention layers that actually churn.
+
+Both consume the engine and the simulator identically — the simulator
+evaluates ``grant`` analytically on its modeled per-device demand, so
+engine↔simulator stay comparable (tests/test_parity_suite.py).  Neither
+ever changes decoded tokens: arbitration caps *speculation* (warm
+inserts) and *buffer slots* (residency), never demand reads — the pool
+stays authoritative.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, List, Mapping, Optional, Sequence
+
+from repro.core.transfer import FabricModel, PipelineModel
+
+
+@dataclasses.dataclass(frozen=True)
+class ArbiterConfig:
+    """Budget-arbitration knobs (mirrored by ``SACConfig``)."""
+
+    max_width: int                   # = cfg.sac.prefetch_width
+    min_width: int = 0               # floor granted even when saturated
+    link_budget_frac: float = 1.0    # fraction of the pipeline hide window
+                                     # speculation may fill per device
+
+
+class BudgetArbiter:
+    """Cross-request speculative-prefetch budget arbitration.
+
+    One instance per serving engine (or simulated cluster).  ``grant``
+    is a pure function of the step's compute window and the previous
+    step's measured per-device demand seconds — a feedback control loop:
+    pressure observed at step t shapes speculation issued at step t+1.
+    """
+
+    def __init__(self, cfg: ArbiterConfig, *, entry_s: float,
+                 n_layers: int, pipeline: PipelineModel):
+        assert entry_s > 0, "per-entry fabric seconds must be positive"
+        self.cfg = cfg
+        self.entry_s = float(entry_s)
+        self.n_layers = max(int(n_layers), 1)
+        self.pipeline = pipeline
+
+    @classmethod
+    def from_fabric(cls, cfg: ArbiterConfig, fabric: FabricModel,
+                    entry_bytes: int, *, n_layers: int,
+                    pipeline: PipelineModel) -> "BudgetArbiter":
+        """Engine-side constructor: amortized per-entry cost from the
+        calibrated fabric model, over a nominal full-width burst."""
+        nominal = max(cfg.max_width * max(n_layers, 1), 1)
+        entry_s = fabric.per_entry_seconds(entry_bytes,
+                                           nominal_batch=nominal)
+        return cls(cfg, entry_s=entry_s, n_layers=n_layers,
+                   pipeline=pipeline)
+
+    # -- budget arithmetic -------------------------------------------------
+    def link_budget_s(self, compute_s: float) -> float:
+        """Per-device link seconds speculation may fill this step."""
+        return (max(self.cfg.link_budget_frac, 0.0)
+                * self.pipeline.hide_window_s(compute_s))
+
+    def device_entry_budget(self, compute_s: float, demand_s: float
+                            ) -> float:
+        """Speculative entries that fit a device's remaining headroom
+        after the measured demand backlog is accounted for."""
+        headroom = self.link_budget_s(compute_s) - max(demand_s, 0.0)
+        return max(headroom, 0.0) / self.entry_s
+
+    def grant(self, compute_s: float, demand_s: Sequence[float],
+              device_requests: Mapping[int, Sequence[Hashable]]
+              ) -> Dict[Hashable, int]:
+        """Allocate per-request speculative widths for one step.
+
+        compute_s: the step's modeled compute window; demand_s: per-device
+        demand seconds observed last step (``TrafficStats.device_demand_s``
+        deltas, or the simulator's analytic miss seconds);
+        device_requests: device -> request keys decoding on that device.
+
+        Returns request -> granted width (entries per layer per step),
+        clamped to ``[min(min_width, max_width), max_width]``; with
+        ``min_width == 0`` the per-device sum respects the link budget:
+        ``sum(w_r) * n_layers * entry_s <= max(headroom, 0)``.
+        """
+        grants: Dict[Hashable, int] = {}
+        floor = min(self.cfg.min_width, self.cfg.max_width)
+        for dev, rids in device_requests.items():
+            if not rids:
+                continue
+            d = (demand_s[dev % len(demand_s)] if len(demand_s) else 0.0)
+            entries = self.device_entry_budget(compute_s, d)
+            per_req = int(entries // (len(rids) * self.n_layers))
+            w = max(min(per_req, self.cfg.max_width), max(floor, 0))
+            for rid in rids:
+                grants[rid] = w
+        return grants
+
+
+# ---------------------------------------------------------------------------
+# per-layer hot-tier sizing
+# ---------------------------------------------------------------------------
+
+
+class LayerSizer:
+    """Apportion ``total_slots`` hot-tier entries across pool layers.
+
+    Weights come from measured per-layer miss rates when available (the
+    engine's ``buf_misses_l`` counters), else from a structural prior:
+    a windowed layer's decode mask only ever selects from its trailing
+    ``window`` positions, so it is weighted (and hard-capped) by
+    ``min(window, topk)`` while full-attention layers carry weight
+    ``topk``.  Sizes always sum exactly to ``total_slots`` and every
+    layer keeps at least ``min_slots`` (capacity permitting) so the
+    layered buffer layout stays valid.
+    """
+
+    def __init__(self, n_layers: int, total_slots: int, *,
+                 layer_windows: Optional[Sequence[int]] = None,
+                 topk: int = 0, min_slots: int = 1):
+        self.n_layers = max(int(n_layers), 1)
+        self.total_slots = max(int(total_slots), self.n_layers)
+        wins = list(layer_windows or [])
+        self.layer_windows = (wins + [0] * self.n_layers)[:self.n_layers]
+        self.topk = max(int(topk), 1)
+        self.min_slots = max(int(min_slots), 1)
+
+    def caps(self) -> List[int]:
+        """Per-layer ceilings: a windowed layer never benefits from more
+        resident slots than distinct selectable positions.  The caps are
+        honored while the budget fits under them; when ``total_slots``
+        exceeds their sum (every layer windowed and over-provisioned),
+        ``sizes`` spreads the surplus past the caps — the total is the
+        engine↔simulator comparability contract and always wins."""
+        return [min(w, self.total_slots) if w > 0 else self.total_slots
+                for w in self.layer_windows]
+
+    def weights(self, miss_rates: Optional[Sequence[float]] = None
+                ) -> List[float]:
+        if miss_rates is not None:
+            rates = (list(miss_rates) + [0.0] * self.n_layers)
+            return [max(float(r), 0.0) + 1e-9
+                    for r in rates[:self.n_layers]]
+        return [float(min(w, self.topk)) if w > 0 else float(self.topk)
+                for w in self.layer_windows]
+
+    def sizes(self, miss_rates: Optional[Sequence[float]] = None
+              ) -> List[int]:
+        n, total = self.n_layers, self.total_slots
+        caps = self.caps()
+        w = self.weights(miss_rates)
+        base = min(self.min_slots, total // n)
+        sizes = [min(max(base, 1), caps[l]) for l in range(n)]
+        remaining = total - sum(sizes)
+        # proportional fill under caps; iterate because capped layers
+        # return their unused share to the pool
+        while remaining > 0:
+            active = [l for l in range(n) if sizes[l] < caps[l]]
+            if not active:
+                break
+            tw = sum(w[l] for l in active)
+            if tw <= 0:
+                w = [1.0] * n
+                continue
+            shares = [(l, remaining * w[l] / tw) for l in active]
+            progressed = 0
+            for l, s in shares:
+                add = min(int(s), caps[l] - sizes[l])
+                sizes[l] += add
+                progressed += add
+            remaining -= progressed
+            if progressed == 0:
+                # fractional shares all rounded to zero: hand out single
+                # slots by descending weight until the budget is spent
+                for l, _ in sorted(shares, key=lambda t: -w[t[0]]):
+                    if remaining <= 0:
+                        break
+                    if sizes[l] < caps[l]:
+                        sizes[l] += 1
+                        remaining -= 1
+        if remaining > 0:
+            # every layer capped but budget left: keep the sum invariant
+            # (the total is the comparability contract) by spreading the
+            # surplus round-robin past the caps
+            for i in range(remaining):
+                sizes[i % n] += 1
+        return sizes

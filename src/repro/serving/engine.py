@@ -50,6 +50,8 @@ from repro.core.sac import SACSystem
 from repro.core.traffic import TrafficStats
 from repro.core.transfer import PipelineModel
 from repro.models.model import build_model
+from repro.models.transformer import kv_layer_windows
+from repro.serving.arbiter import ArbiterConfig, BudgetArbiter, LayerSizer
 from repro.serving.prefetch import FetchPlanner
 from repro.serving.radix import RadixIndex
 from repro.serving.request import Request, summarize
@@ -65,6 +67,17 @@ class EngineStats:
     tokens: int = 0
     radix_hit_tokens: int = 0
     traffic: TrafficStats = dataclasses.field(default_factory=TrafficStats)
+    # measured per-layer hot-tier outcomes ([L] arrays, accumulated per
+    # step) — the LayerSizer's miss-rate signal (serving/arbiter.py)
+    layer_hits: Optional[np.ndarray] = None
+    layer_misses: Optional[np.ndarray] = None
+
+    def layer_miss_rates(self) -> Optional[np.ndarray]:
+        """Per-layer miss fraction of the layer's demand top-k reads."""
+        if self.layer_hits is None or self.layer_misses is None:
+            return None
+        tot = self.layer_hits + self.layer_misses
+        return self.layer_misses / np.maximum(tot, 1)
 
     @property
     def pool_entries_fetched(self) -> int:
@@ -137,6 +150,16 @@ class Engine:
     the hook parity tests use to replay controlled drift.  ``overlap``
     forces the overlap queues on/off independently of prefetch (default:
     on when prefetch or ``cfg.sac.overlap_fetch`` is set).
+
+    ``arbiter`` (default ``cfg.sac.arbiter``) turns on cross-request
+    prefetch budget arbitration (serving/arbiter.py): each step, last
+    step's measured per-device demand seconds shrink or grow every
+    request's granted speculative width, passed into the jitted decode
+    as a per-slot budget tensor.  ``layer_sizing`` (default
+    ``cfg.sac.layer_sizing``) apportions the hot tier's total slot
+    budget across layers via the LayerSizer instead of uniformly.
+    Neither changes decoded tokens (property-tested in
+    tests/test_arbiter.py).
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int = 4,
@@ -145,6 +168,8 @@ class Engine:
                  device_buffer: Optional[int] = None,
                  prefetch: bool = False, prefetch_fn=None,
                  overlap: Optional[bool] = None,
+                 arbiter: Optional[bool] = None,
+                 layer_sizing: Optional[str] = None,
                  topk_fn=None, seed: int = 0):
         self.cfg = cfg
         self.slots = slots
@@ -162,6 +187,7 @@ class Engine:
         opts = {}
         if self.prefetch:
             opts["prefetch_width"] = int(cfg.sac.prefetch_width)
+            opts["score_margin"] = float(cfg.sac.score_margin)
             if prefetch_fn is not None:
                 opts["prefetch_fn"] = prefetch_fn
             if cfg.sac.warmup_entries > 0:
@@ -187,13 +213,47 @@ class Engine:
         # engine/simulator timing is built from the same model
         self.profile = profile_from_config(cfg)
         self.clock_s = 0.0
+        # fabric budget arbiter (serving/arbiter.py): grants per-slot
+        # speculative widths from last step's measured demand backlog
+        self.arbiter_on = bool((cfg.sac.arbiter if arbiter is None
+                                else arbiter) and self.prefetch)
+        self.arbiter: Optional[BudgetArbiter] = None
+        self.last_grants: Dict[int, int] = {}
+        self._grant_sum = 0
+        self._grant_n = 0
+        self._demand_mark = [0.0] * self.sac.n_devices
+        self._last_demand_s = [0.0] * self.sac.n_devices
+        if self.arbiter_on:
+            self.arbiter = BudgetArbiter.from_fabric(
+                ArbiterConfig(max_width=int(cfg.sac.prefetch_width),
+                              min_width=int(cfg.sac.min_prefetch_width),
+                              link_budget_frac=float(
+                                  cfg.sac.link_budget_frac)),
+                self.sac.fabric, self.sac.entry_bytes,
+                n_layers=max(self.model.n_kv, 1), pipeline=self.pipeline)
+        # per-layer hot-tier sizing: apportion the uniform total
+        # (device_buffer * n_layers) by the LayerSizer's windowed prior
+        self.layer_sizing = (cfg.sac.layer_sizing if layer_sizing is None
+                             else layer_sizing)
+        self.buffer_sizes: Optional[List[int]] = None
+        if self.device_buffer and self.layer_sizing != "uniform":
+            n_kv = max(self.model.n_kv, 1)
+            self.buffer_sizes = LayerSizer(
+                n_kv, self.device_buffer * n_kv,
+                layer_windows=kv_layer_windows(cfg),
+                topk=cfg.sac.topk).sizes()
 
         self._decode = jax.jit(self.model.decode)
         self._prefill_one = jax.jit(
             lambda p, toks: self.model.prefill(p, toks))
         self._warm = jax.jit(self._warm_apply)
         self.state = self.model.init_serve_state(
-            slots, max_ctx, device_buffer=self.device_buffer)
+            slots, max_ctx,
+            device_buffer=self.buffer_sizes or self.device_buffer)
+        if self.device_buffer:
+            n_kv = max(self.model.n_kv, 1)
+            self.stats.layer_hits = np.zeros(n_kv)
+            self.stats.layer_misses = np.zeros(n_kv)
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_tokens: List[List[int]] = [[] for _ in range(slots)]
         self.queue: List[Request] = []
@@ -240,8 +300,10 @@ class Engine:
             st = dict(st)
             warm_idx = st.pop("warm_idx", None)
             self._splice_state(s, st, len(prompt))
-            # charge the pool write (prefill write path)
-            self.sac.write_back_time(len(prompt))
+            # charge the pool write (prefill write path) against the
+            # request's own pool link — the arbiter's demand signal must
+            # see prefill pressure on the device it actually loads
+            self.sac.write_back_time(len(prompt), device=req.pool_device)
             page_tokens = (len(prompt) // self.cfg.sac.page_size) \
                 * self.cfg.sac.page_size
             if page_tokens:
@@ -311,6 +373,9 @@ class Engine:
             if key in ("buf_hits", "buf_misses", "pf_inserted", "pf_useful"):
                 new_state[key] = dst.at[slot].set(0)
                 continue
+            if key in ("buf_hits_l", "buf_misses_l"):   # [L, B] layouts
+                new_state[key] = dst.at[:, slot].set(0)
+                continue
             src = st_one[key]
             if key in ("kv_pool", "idx_pool", "self_kv"):
                 new_state[key] = splice_pool(dst, src)
@@ -334,13 +399,31 @@ class Engine:
             [(toks[-1] if toks else 0) for toks in self.slot_tokens],
             jnp.int32)
         prev_len = np.asarray(self.state["cache_len"])
-        self.state, logits = self._decode(self.params, self.state, tokens)
+        occupied = [s for s in range(self.slots) if self.slot_req[s]]
+        t_comp = self.step_compute_s(len(occupied))
+        if self.arbiter is not None:
+            # cross-request budget arbitration: last step's measured
+            # per-device demand backlog shapes this step's speculation
+            dev_slots: Dict[int, List[int]] = {}
+            for s in occupied:
+                dev = self.sac.device_of(self.slot_req[s].request_id)
+                dev_slots.setdefault(dev, []).append(s)
+            self.last_grants = self.arbiter.grant(
+                t_comp, self._last_demand_s, dev_slots)
+            budgets = np.zeros((self.slots,), np.int32)
+            for s, w in self.last_grants.items():
+                budgets[s] = w
+                self._grant_sum += w
+                self._grant_n += 1
+            self.state, logits = self._decode(
+                self.params, self.state, tokens, jnp.asarray(budgets))
+        else:
+            self.state, logits = self._decode(self.params, self.state,
+                                              tokens)
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
         self.stats.steps += 1
 
         # fabric accounting per occupied slot
-        occupied = [s for s in range(self.slots) if self.slot_req[s]]
-        t_comp = self.step_compute_s(len(occupied))
         issued0 = self.stats.traffic.fabric_time_s
         if self.cfg.sac.enabled and self.model.mode == "sac":
             if self.device_buffer:
@@ -348,6 +431,12 @@ class Engine:
                 # hot-tier residency; only misses cross the fabric
                 hits = np.asarray(self.state["buf_hits"])
                 misses = np.asarray(self.state["buf_misses"])
+                # per-layer split (LayerSizer miss-rate signal)
+                self.stats.layer_hits += \
+                    np.asarray(self.state["buf_hits_l"])[:, occupied].sum(1)
+                self.stats.layer_misses += \
+                    np.asarray(self.state["buf_misses_l"])[:, occupied] \
+                    .sum(1)
                 if self.prefetch:
                     pf_ins = np.asarray(self.state["pf_inserted"])
                     pf_use = np.asarray(self.state["pf_useful"])
@@ -384,6 +473,11 @@ class Engine:
             exposed = self.sac.traffic.drain_overlap(t_comp)
         else:
             exposed = self.stats.traffic.fabric_time_s - issued0
+        # arbiter feedback: snapshot this step's per-device demand-only
+        # issued seconds (total minus prefetch) as next step's pressure
+        cur = self.stats.traffic.device_demand_s()
+        self._last_demand_s = [c - m for c, m in zip(cur, self._demand_mark)]
+        self._demand_mark = cur
         self.clock_s += t_comp + exposed
         if now is None:
             now = self.clock_s
@@ -432,4 +526,7 @@ class Engine:
                    prefetch_useful=self.stats.prefetch_useful,
                    prefetch_wasted=self.stats.prefetch_wasted,
                    prefetch_precision=self.stats.prefetch_precision)
+        if self.arbiter is not None:
+            out["arbiter_width_mean"] = (self._grant_sum / self._grant_n
+                                         if self._grant_n else 0.0)
         return out

@@ -140,3 +140,27 @@ def analytic_prefetch(base_hit: float, width: int, topk: int,
     hit2 = base_hit + useful / topk       # == 1 - miss * (1 - cover)
     issued = useful + spill_frac * width * miss
     return hit2, issued
+
+
+def analytic_warmup(warmup_entries: int, topk: int, buf: int,
+                    *, precision: float = 0.7) -> float:
+    """Analytic model of prefill warm-up's cold-start miss reduction.
+
+    A freshly placed request's first decode step starts with an empty hot
+    tier — every top-k read is a miss — unless prefill warm-up seeded it
+    (FetchPlanner.warmup_plan + ``hisparse.warm_lane``).  The seeds are
+    the top-``warmup_entries`` prompt positions by indexer score against
+    the *last prompt position* — a proxy for the first decode query —
+    plus radix-reused tail pages, so only a ``precision`` fraction of
+    the seeded coverage lands in the actual first top-k.  At most
+    ``buf`` seeds fit the tier and at most ``topk`` can be demand-hit.
+
+    Returns the modeled first-step hit rate (0 when warm-up is off);
+    monotone non-decreasing in ``warmup_entries`` — the simulator-side
+    twin of the engine's measured cold-start reduction
+    (tests/test_arbiter.py asserts both directions).
+    """
+    if warmup_entries <= 0 or topk <= 0 or buf <= 0:
+        return 0.0
+    cover = min(warmup_entries, buf, topk) / topk
+    return cover * min(max(precision, 0.0), 1.0)

@@ -54,7 +54,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.configs.base import ModelConfig
 from repro.core.traffic import FabricAccountant
 from repro.core.transfer import PipelineModel
-from repro.serving.prefetch import analytic_prefetch
+from repro.serving.arbiter import ArbiterConfig, BudgetArbiter
+from repro.serving.prefetch import analytic_prefetch, analytic_warmup
 from repro.serving.request import Request, summarize
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
@@ -200,6 +201,21 @@ class SimConfig:
     prefetch_width: int = 0            # speculative entries/layer/step; the
                                        # analytic twin of the engine's
                                        # in-graph prefetch (prefetch.py)
+    arbiter: bool = False              # cross-request prefetch budget
+                                       # arbitration (serving/arbiter.py):
+                                       # per-device demand pressure shrinks
+                                       # the granted speculative width
+    link_budget_frac: float = 1.0      # arbiter link budget vs hide window
+    min_prefetch_width: int = 0        # granted-width floor
+    warmup_entries: int = 0            # prefill warm-up seeds per layer —
+                                       # models the engine's cold-start
+                                       # miss reduction (analytic_warmup)
+    warm_precision: float = 0.7        # fraction of warm seeds that land
+                                       # in the first step's actual top-k
+    layer_buffer_sizes: Optional[List[int]] = None
+                                       # per-layer hot-tier sizes (the
+                                       # LayerSizer apportioning); None =
+                                       # uniform device_buffer per layer
     round1: bool = False               # cold cache: prefill + write first
     prefill_concurrency: int = 8
     max_sim_s: float = 1e5
@@ -277,17 +293,56 @@ def simulate(reqs: List[Request], model: ModelProfile,
     pipeline = PipelineModel(depth=sim.pipeline_depth,
                              overlap_frac=sim.overlap_frac)
     step_topk = model.n_attn_layers * model.topk
-    base_hit = {r.request_id: hit_rate(sim.device_buffer, model.topk,
-                                       r.context_len) for r in reqs}
-    hit_rates, pf_entries, pf_useful = {}, {}, {}
-    for rid, h in base_hit.items():
-        h2, issued = analytic_prefetch(h, sim.prefetch_width, model.topk)
-        hit_rates[rid] = h2
-        pf_entries[rid] = issued * model.n_attn_layers
-        pf_useful[rid] = (h2 - h) * step_topk
-    miss_bytes = {rid: step_topk * (1 - h) * model.entry_bytes
-                  for rid, h in hit_rates.items()}
-    pf_bytes = {rid: n * model.entry_bytes for rid, n in pf_entries.items()}
+    if sim.layer_buffer_sizes:
+        # per-layer hot-tier sizing (serving/arbiter.py LayerSizer): the
+        # request's steady hit rate is the mean of per-layer hit rates at
+        # each layer's own capacity
+        sizes = list(sim.layer_buffer_sizes)
+        base_hit = {r.request_id:
+                    sum(hit_rate(s, model.topk, r.context_len)
+                        for s in sizes) / max(len(sizes), 1)
+                    for r in reqs}
+    else:
+        base_hit = {r.request_id: hit_rate(sim.device_buffer, model.topk,
+                                           r.context_len) for r in reqs}
+
+    # steady-state prefetch outcome at a granted width w, cached per
+    # (request, w) — the arbiter re-grants every step but the analytic
+    # model only depends on (base_hit, w)
+    _pf_cache: Dict[Tuple[int, int], Tuple[float, float, float]] = {}
+
+    def pf_at(rid: int, w: int) -> Tuple[float, float, float]:
+        key = (rid, w)
+        if key not in _pf_cache:
+            h2, issued = analytic_prefetch(base_hit[rid], w, model.topk)
+            _pf_cache[key] = (h2, issued * model.n_attn_layers,
+                              (h2 - base_hit[rid]) * step_topk)
+        return _pf_cache[key]
+
+    # the budget arbiter, evaluated analytically on the same grant logic
+    # the engine runs (serving/arbiter.py): per-device demand seconds
+    # observed last step shape this step's speculative widths
+    arb = None
+    if sim.arbiter and sim.prefetch_width:
+        arb = BudgetArbiter(
+            ArbiterConfig(max_width=sim.prefetch_width,
+                          min_width=sim.min_prefetch_width,
+                          link_budget_frac=sim.link_budget_frac),
+            entry_s=model.entry_bytes / backend.fetch_bw_Bps,
+            n_layers=model.n_attn_layers, pipeline=pipeline)
+    last_demand_s = [0.0] * backend.n_pool_devices
+    grant_sum = grant_n = 0
+
+    # prefill warm-up's cold-start miss reduction: a request's FIRST
+    # decode step runs against a cold hot tier, lifted to the modeled
+    # warm-up hit rate when warmup_entries seeds it (analytic_warmup —
+    # the simulator twin of the engine's prefill warm_lane path)
+    cold = {r.request_id for r in reqs}
+    cold_hit = analytic_warmup(sim.warmup_entries, model.topk,
+                               sim.device_buffer,
+                               precision=sim.warm_precision)
+    warm_inserts = (min(sim.warmup_entries, sim.device_buffer)
+                    * model.n_attn_layers if sim.warmup_entries else 0)
 
     def admit_ready(now: float):
         for r in sched.try_admit(now):
@@ -357,19 +412,45 @@ def simulate(reqs: List[Request], model: ModelProfile,
         if backend.name == "hbm":
             t_fetch = t_exposed = 0.0
         else:
+            grants = None
+            if arb is not None:
+                dev_reqs: Dict[int, List[int]] = {}
+                for r in decoding.values():
+                    dev_reqs.setdefault(r.pool_device,
+                                        []).append(r.request_id)
+                grants = arb.grant(t_comp, last_demand_s, dev_reqs)
+            demand_only = [0.0] * backend.n_pool_devices
             for r in decoding.values():
                 rid = r.request_id
-                acct.add_step_demand(r.pool_device,
-                                     miss_bytes[rid] + pf_bytes[rid])
-                h = hit_rates[rid]
+                w = (grants[rid] if grants is not None
+                     else sim.prefetch_width)
+                if grants is not None:
+                    grant_sum += w
+                    grant_n += 1
+                if rid in cold:
+                    # first decode step: cold tier, warm-up seeds only
+                    cold.discard(rid)
+                    h = cold_hit
+                    pf_n = float(warm_inserts)
+                    pf_u = min(h * step_topk, pf_n)
+                else:
+                    h, pf_n, pf_u = pf_at(rid, w)
+                miss_b = step_topk * (1 - h) * model.entry_bytes
+                pf_b = pf_n * model.entry_bytes
+                acct.add_step_demand(r.pool_device, miss_b + pf_b)
+                demand_only[r.pool_device % backend.n_pool_devices] \
+                    += miss_b
                 acct.record_hits(h * step_topk, (1 - h) * step_topk)
-                if sim.prefetch_width:
-                    acct.record_prefetch(pf_entries[rid], pf_useful[rid])
-                    acct.stats.prefetch_bytes += pf_bytes[rid]
+                if pf_n:
+                    acct.record_prefetch(pf_n, pf_u)
+                    acct.stats.prefetch_bytes += pf_b
             demand = acct.drain_step()
             bw = backend.fetch_bw_Bps
             if backend.prefetch and (prefetch.busy() or rearrange.busy()):
                 bw *= (1 - backend.pcie_contention)   # PCIe bus contention
+            # arbiter feedback: this step's demand-only (non-speculative)
+            # seconds per device are next step's link-pressure signal
+            last_demand_s = [d / bw for d in demand_only]
             t_fetch = (max(demand) / bw + backend.fetch_base_s
                        + model.n_attn_layers * backend.layer_latency_s)
             # issued vs exposed: only the tail of the step's fetch that
@@ -411,7 +492,11 @@ def simulate(reqs: List[Request], model: ModelProfile,
                prefetch_bytes=acct.stats.prefetch_bytes,
                prefetched_entries=acct.stats.prefetched_entries,
                prefetch_useful=acct.stats.prefetch_useful,
-               sim_hit_rate=acct.stats.hit_rate)
+               sim_hit_rate=acct.stats.hit_rate,
+               cold_hit_rate=cold_hit)
+    if arb is not None:
+        out["arbiter_width_mean"] = (grant_sum / grant_n if grant_n
+                                     else 0.0)
     return out
 
 

@@ -3,8 +3,15 @@ package is absent (pytest.importorskip semantics, but scoped to the
 ``@given`` tests instead of nuking whole modules that also hold plain
 unit tests).
 
+CI sets ``REQUIRE_HYPOTHESIS=1`` (.github/workflows/ci.yml): there a
+missing hypothesis is a hard error instead of a silent skip, so the
+property tests — bit-identity, budget bounds, buffer invariants —
+actually run on every push.  Local runs keep the auto-skip fallback.
+
 Usage:  ``from hypothesis_compat import given, settings, st``
 """
+import os
+
 import pytest
 
 try:
@@ -13,6 +20,11 @@ try:
     HAVE_HYPOTHESIS = True
 except ImportError:                       # pragma: no cover - env dependent
     HAVE_HYPOTHESIS = False
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        raise RuntimeError(
+            "REQUIRE_HYPOTHESIS is set but hypothesis is not importable: "
+            "the property tests would silently skip.  Install it "
+            "(pip install -r requirements.txt) or unset the variable.")
 
     class _StrategyStub:
         """Evaluates strategy expressions at decoration time to harmless

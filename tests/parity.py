@@ -1,0 +1,240 @@
+"""Engine↔simulator parity harness: one reusable fixture for the shared
+drift/saturation traces that ground the simulator's analytic models
+against the real engine.
+
+Before PR 3 every parity check re-declared its own drift trace and
+replay loop (tests/test_engine_buffer.py and tests/test_prefetch.py each
+carried a copy).  This module owns them:
+
+  - the **drift trace**: a controlled synthetic top-k stream (lane j
+    re-points every T steps, staggered — ~K/T churn per step, the
+    paper's slow salient-context drift) injected through the engine's
+    ``topk_fn`` hook, so the read path, buffer updates, and counters are
+    the real jitted wiring;
+  - the **saturation trace**: the same drift demand plus deliberately
+    wide speculation whose tail lanes are junk — the regime where
+    unarbitrated prefetch floods the link and the budget arbiter
+    (serving/arbiter.py) must cut exactly the useless share;
+  - :func:`drift_parity` / :func:`assert_parity`: run the engine on a
+    trace, evaluate the simulator-side analytic twins (``hit_rate``,
+    ``analytic_prefetch``, ``PipelineModel``, the fabric models) on the
+    same parameters, and compare hit rate, issued/exposed seconds, and
+    prefetch precision within tolerance.
+"""
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.transfer import FABRICS, PipelineModel
+from repro.serving.engine import Engine
+from repro.serving.prefetch import analytic_prefetch
+from repro.serving.request import sharegpt_trace
+from repro.serving.simulator import hit_rate
+
+# the shared drift-trace constants (PR 1's controlled workload)
+K, T, CTX, OUT = 16, 32, 80, 40
+
+
+def drift_topk(scores, cache_len):
+    """Lane j re-points every T steps (staggered): ~K/T changes/step."""
+    B = scores.shape[0]
+    j = jnp.arange(K, dtype=jnp.int32)[None, :]
+    t = cache_len[:, None]
+    pos = (j * 7 + 131 * ((t + j) // T)) % CTX
+    return pos.astype(jnp.int32), jnp.ones((B, K), bool)
+
+
+def drift_prefetch(scores, cache_len):
+    """Speculate the NEXT step's drift selection — the planner hook's
+    analogue of score-based speculation for the synthetic workload."""
+    idx, valid = drift_topk(scores, cache_len + 1)
+    return idx, valid
+
+
+def junk_prefetch(width: int):
+    """Saturation-trace speculation: the first K lanes are next step's
+    true drift selection, the remaining ``width - K`` lanes are junk
+    positions that will never be demand-read.  Lanes are best-first, so
+    an arbiter budget of K keeps exactly the useful share."""
+
+    def fn(scores, cache_len):
+        B = scores.shape[0]
+        idx, _ = drift_topk(scores, cache_len + 1)
+        j = jnp.arange(width - K, dtype=jnp.int32)[None, :]
+        t = cache_len[:, None]
+        junk = (j * 17 + t * 13 + 37) % CTX
+        full = jnp.concatenate([idx, junk.astype(jnp.int32)], axis=1)
+        return full, jnp.ones((B, width), bool)
+
+    return fn
+
+
+def drift_requests(cfg, n=1, ctx=CTX, out=OUT, seed=5):
+    return sharegpt_trace(n, context_len=ctx, output_len=out, seed=seed,
+                          ctx_jitter=0.0, vocab=cfg.vocab)
+
+
+def build_engine(buf: int, *, arch: str = "qwen2-1.5b",
+                 prefetch: bool = False, prefetch_fn="drift",
+                 overlap: Optional[bool] = None,
+                 arbiter: Optional[bool] = None,
+                 sac_overrides: Optional[Dict] = None,
+                 slots: int = 1, seed: int = 0) -> Engine:
+    """A reduced engine wired to the controlled drift top-k stream."""
+    cfg = get_config(arch).reduced()
+    if sac_overrides:
+        cfg = dataclasses.replace(
+            cfg, sac=dataclasses.replace(cfg.sac, **sac_overrides))
+    fn = drift_prefetch if prefetch_fn == "drift" else prefetch_fn
+    return Engine(cfg, slots=slots, max_ctx=160, device_buffer=buf,
+                  topk_fn=drift_topk, prefetch=prefetch,
+                  prefetch_fn=fn if prefetch else None,
+                  overlap=overlap, arbiter=arbiter, seed=seed)
+
+
+# the saturation-trace constants: hot tier strictly below the context so
+# junk inserts churn the tier instead of eventually caching the whole
+# prefix; speculation 3x wider than the useful share; near-zero hide
+# window so every issued second is exposed
+SAT_BUF, SAT_WIDTH = 40, 48
+SAT_SAC = dict(prefetch_width=SAT_WIDTH, overlap_frac=0.05,
+               warmup_entries=0, warmup_radix=0)
+
+
+def build_saturation_engine(*, arbiter: bool, min_width: int = K,
+                            link_budget_frac: Optional[float] = None,
+                            seed: int = 0) -> Engine:
+    """The saturation trace: drift demand + junk-tailed speculation."""
+    sac = dict(SAT_SAC)
+    if arbiter:
+        sac["min_prefetch_width"] = min_width
+    if link_budget_frac is not None:
+        sac["link_budget_frac"] = link_budget_frac
+    return build_engine(SAT_BUF, prefetch=True,
+                        prefetch_fn=junk_prefetch(SAT_WIDTH),
+                        sac_overrides=sac, arbiter=arbiter, seed=seed)
+
+
+def run_to_completion(eng: Engine, reqs, *, max_steps: int = 300,
+                      on_step=None) -> int:
+    """Submit ``reqs`` and step until drained; ``on_step(eng)`` runs
+    after every step (per-step issued/exposed deltas for replays)."""
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while any(eng.slot_req) or eng.queue:
+        eng.step()
+        steps += 1
+        if on_step is not None:
+            on_step(eng)
+        assert steps < max_steps, "drift trace failed to drain"
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# the parity report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParityReport:
+    """Engine-measured vs simulator-analytic numbers on one trace."""
+
+    buf: int
+    steps: int
+    # hit rate (cold warm-up window excluded, as in PR 1's parity test)
+    measured_hit: float
+    modeled_hit: float
+    # issued/exposed fabric seconds
+    issued_s: float
+    analytic_issued_s: float
+    measured_exposed_s: float
+    predicted_exposed_s: float
+    # prefetch precision (0 when speculation is off)
+    measured_precision: float
+    modeled_precision: float
+
+
+def drift_parity(buf: int, *, prefetch: bool = False, arch="qwen2-1.5b",
+                 warmup_steps: int = 5) -> ParityReport:
+    """Run the drift trace through the real engine and evaluate the
+    simulator's analytic twins on the same parameters."""
+    eng = build_engine(buf, arch=arch, prefetch=prefetch, overlap=True)
+    assert eng.overlap_on
+    pipeline = eng.pipeline                  # == simulate()'s PipelineModel
+    assert isinstance(pipeline, PipelineModel)
+    reqs = drift_requests(eng.cfg)
+    t_comp = eng.step_compute_s(1)
+
+    marks = {"steps": 0, "predicted": 0.0, "warm": (0, 0),
+             "issued0": None, "exposed0": None, "last_issued": 0.0}
+
+    def on_step(e):
+        marks["steps"] += 1
+        if marks["steps"] == 1:
+            # cold first step (prefill + full-miss burst) starts the
+            # replay window
+            marks["issued0"] = e.stats.issued_fabric_s
+            marks["exposed0"] = e.stats.exposed_fabric_s
+        else:
+            marks["predicted"] += pipeline.exposed_time(
+                e.stats.issued_fabric_s - marks["last_issued"], t_comp)
+        if marks["steps"] == warmup_steps:
+            marks["warm"] = (e.stats.buffer_hits, e.stats.buffer_misses)
+        marks["last_issued"] = e.stats.issued_fabric_s
+
+    steps = run_to_completion(eng, reqs, on_step=on_step)
+
+    h = eng.stats.buffer_hits - marks["warm"][0]
+    m = eng.stats.buffer_misses - marks["warm"][1]
+    measured_hit = h / max(h + m, 1)
+    base = hit_rate(buf, K, CTX)
+    width = eng.cfg.sac.prefetch_width if prefetch else 0
+    modeled_hit, spec_issued = analytic_prefetch(base, width, K)
+    modeled_prec = ((modeled_hit - base) * K / spec_issued
+                    if spec_issued else 0.0)
+
+    issued = eng.stats.issued_fabric_s - marks["issued0"]
+    measured_exposed = eng.stats.exposed_fabric_s - marks["exposed0"]
+    fabric = FABRICS["cxl"]
+    per_step_entries = ((1 - modeled_hit) * K + spec_issued) \
+        * eng.model.n_kv
+    analytic_issued = steps * fabric.sparse_fetch_time(
+        per_step_entries, eng.sac.entry_bytes)
+    return ParityReport(
+        buf=buf, steps=steps,
+        measured_hit=measured_hit, modeled_hit=modeled_hit,
+        issued_s=issued, analytic_issued_s=analytic_issued,
+        measured_exposed_s=measured_exposed,
+        predicted_exposed_s=marks["predicted"],
+        measured_precision=eng.stats.prefetch_precision,
+        modeled_precision=modeled_prec)
+
+
+def assert_parity(rep: ParityReport, *, hit_tol: float = 0.08,
+                  exposed_rel: float = 1e-6,
+                  issued_band=(0.2, 5.0), precision_band=(0.25, 4.0)):
+    """The acceptance bounds shared by every parity consumer:
+
+    - hit rate: |measured - modeled| < hit_tol (PR 1's bound);
+    - exposed seconds: the engine's queues must agree with a replay of
+      the analytic PipelineModel split to float precision;
+    - issued seconds: the analytic hit/speculation model brackets the
+      measured total within a loose factor;
+    - prefetch precision: same loose-factor bracket (0 ≡ 0 when off).
+    """
+    assert abs(rep.measured_hit - rep.modeled_hit) < hit_tol, rep
+    assert 0.0 <= rep.measured_exposed_s <= rep.issued_s + 1e-12, rep
+    np.testing.assert_allclose(rep.measured_exposed_s,
+                               rep.predicted_exposed_s,
+                               rtol=exposed_rel, atol=1e-12)
+    lo, hi = issued_band
+    assert lo * rep.analytic_issued_s < rep.issued_s \
+        < hi * rep.analytic_issued_s, rep
+    if rep.modeled_precision or rep.measured_precision:
+        plo, phi = precision_band
+        assert plo * rep.modeled_precision <= rep.measured_precision \
+            <= phi * rep.modeled_precision, rep

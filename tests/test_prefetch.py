@@ -21,10 +21,11 @@ import numpy as np
 import pytest
 
 from hypothesis_compat import given, settings, st
+from parity import assert_parity, build_engine, drift_parity, \
+    drift_requests, run_to_completion
 
 from repro.configs import get_config
 from repro.core import hisparse
-from repro.core.transfer import FABRICS, PipelineModel
 from repro.serving.engine import Engine
 from repro.serving.prefetch import FetchPlanner, analytic_prefetch
 from repro.serving.request import sharegpt_trace
@@ -286,41 +287,8 @@ def test_radix_warmup_seeds_shared_prefix():
 
 
 # ---------------------------------------------------------------------------
-# shared drift trace (the controlled workload of tests/test_engine_buffer.py)
+# shared drift trace — now owned by the parity harness (tests/parity.py)
 # ---------------------------------------------------------------------------
-
-K, T, CTX, OUT = 16, 32, 80, 40
-
-
-def drift_topk(scores, cache_len):
-    """Lane j re-points every T steps (staggered): ~K/T changes/step."""
-    B = scores.shape[0]
-    j = jnp.arange(K, dtype=jnp.int32)[None, :]
-    t = cache_len[:, None]
-    pos = (j * 7 + 131 * ((t + j) // T)) % CTX
-    return pos.astype(jnp.int32), jnp.ones((B, K), bool)
-
-
-def drift_prefetch(scores, cache_len):
-    """Speculate the NEXT step's drift selection — the planner hook's
-    analogue of score-based speculation for the synthetic workload."""
-    idx, valid = drift_topk(scores, cache_len + 1)
-    return idx, valid
-
-
-def _run_drift(buf, *, prefetch, overlap=None):
-    cfg = get_config("qwen2-1.5b").reduced()
-    eng = Engine(cfg, slots=1, max_ctx=160, device_buffer=buf,
-                 topk_fn=drift_topk, prefetch=prefetch,
-                 prefetch_fn=drift_prefetch if prefetch else None,
-                 overlap=overlap)
-    eng.submit(_trace(cfg, n=1, ctx=CTX, out=OUT, seed=5)[0])
-    steps = 0
-    while any(eng.slot_req) or eng.queue:
-        eng.step()
-        steps += 1
-        assert steps < 300
-    return eng
 
 
 def test_drift_trace_prefetch_strictly_improves_hit_rate():
@@ -328,8 +296,12 @@ def test_drift_trace_prefetch_strictly_improves_hit_rate():
     rate strictly beats the LRU-only buffer on the shared drift trace,
     and exposed < issued on the CXL backend."""
     for buf in (32, 64):
-        lru = _run_drift(buf, prefetch=False)
-        pf = _run_drift(buf, prefetch=True)
+        runs = {}
+        for pf in (False, True):
+            eng = build_engine(buf, prefetch=pf)
+            run_to_completion(eng, drift_requests(eng.cfg))
+            runs[pf] = eng
+        lru, pf = runs[False], runs[True]
         assert pf.stats.hit_rate > lru.stats.hit_rate, \
             (buf, pf.stats.hit_rate, lru.stats.hit_rate)
         assert pf.stats.buffer_misses < lru.stats.buffer_misses
@@ -345,40 +317,17 @@ def test_sim_overlap_model_matches_engine_exposed():
     """Acceptance: the simulator's analytic overlap model — the exact
     PipelineModel simulate() evaluates — reproduces the engine-measured
     exposed seconds when driven by the engine's per-step issued traffic,
-    and the hit-model-predicted issued total brackets the measured one."""
-    cfg = get_config("qwen2-1.5b").reduced()
-    buf = 32
-    eng = Engine(cfg, slots=1, max_ctx=160, device_buffer=buf,
-                 topk_fn=drift_topk, overlap=True)
-    assert eng.overlap_on
-    pipeline = eng.pipeline                     # == simulate()'s model
-    assert isinstance(pipeline, PipelineModel)
-    eng.submit(_trace(cfg, n=1, ctx=CTX, out=OUT, seed=5)[0])
-    eng.step()                                  # prefill + cold first step
-    issued0 = eng.stats.issued_fabric_s
-    exposed0 = eng.stats.exposed_fabric_s
-    t_comp = eng.step_compute_s(1)
-    predicted, steps = 0.0, 0
-    while any(eng.slot_req) or eng.queue:
-        i0 = eng.stats.issued_fabric_s
-        eng.step()
-        steps += 1
-        predicted += pipeline.exposed_time(
-            eng.stats.issued_fabric_s - i0, t_comp)
-        assert steps < 300
-    measured = eng.stats.exposed_fabric_s - exposed0
-    issued = eng.stats.issued_fabric_s - issued0
-    assert 0.0 <= measured <= issued
-    # per-step agreement of the analytic split with the engine's queues
-    assert measured == pytest.approx(predicted, rel=1e-6, abs=1e-12)
-    # and the simulator's hit model predicts the issued total to within
-    # a loose factor (the hit-rate parity bound of test_engine_buffer)
-    fabric = FABRICS["cxl"]
-    miss_per_step = (1 - hit_rate(buf, K, CTX)) * K * eng.model.n_kv
-    analytic_issued = steps * fabric.sparse_fetch_time(
-        miss_per_step, eng.sac.entry_bytes)
-    assert 0.2 * analytic_issued < issued < 5.0 * analytic_issued, \
-        (issued, analytic_issued)
+    and the hit-model-predicted issued total brackets the measured one.
+
+    The measurement/replay loop and its tolerances now live in the
+    parity harness (tests/parity.py assert_parity), shared with
+    tests/test_engine_buffer.py and tests/test_parity_suite.py."""
+    rep = drift_parity(32)
+    assert_parity(rep)
+    rep_pf = drift_parity(32, prefetch=True)
+    assert_parity(rep_pf)
+    # speculation issues extra fabric seconds on top of the LRU baseline
+    assert rep_pf.measured_precision > 0.5
 
 
 # ---------------------------------------------------------------------------
