@@ -2,8 +2,9 @@
 #
 #   make test        tier-1 suite (the ROADMAP verify command)
 #   make test-fast   substrate + engine-buffer slice (quick signal)
-#   make bench-smoke reduced buffer + prefetch + arbiter sweeps; writes
-#                    BENCH_prefetch.json + BENCH_arbiter.json (CI artifacts)
+#   make bench-smoke reduced buffer + prefetch + arbiter + placement
+#                    sweeps; writes BENCH_prefetch.json +
+#                    BENCH_arbiter.json + BENCH_placement.json (CI artifacts)
 #   make deps        install runtime + test dependencies
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -23,6 +24,7 @@ bench-smoke:
 	python -c "from benchmarks.fig14_buffer import run; run(quick=True)"
 	python -m benchmarks.prefetch_sweep --quick
 	python -m benchmarks.arbiter_sweep --quick
+	python -m benchmarks.placement_sweep --quick
 
 deps:
 	pip install -r requirements.txt

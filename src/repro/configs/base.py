@@ -58,6 +58,19 @@ class SACConfig:
                                      # (LayerSizer prior: windowed layers
                                      # capped at their selectable window)
 
+    # --- PR 4: the closed control loop ---
+    placement: Optional[str] = None  # pool placement policy override
+                                     # (core/placement.py): None = the
+                                     # interleave default; "pressure_aware"
+                                     # lands new requests on the least-
+                                     # pressured fabric link
+    precision_weighted: bool = False  # arbiter grants split per-request by
+                                      # measured prefetch precision instead
+                                      # of uniformly (serving/arbiter.py)
+    resize_interval: int = 0         # decode steps between online LayerSizer
+                                     # re-apportionings of the hot tier from
+                                     # measured per-layer miss rates (0=off)
+
 
 # ---------------------------------------------------------------------------
 # Model architecture configuration

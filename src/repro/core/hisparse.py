@@ -307,7 +307,8 @@ def warm_lane(state: BufferState, lane, idx: jnp.ndarray,
 def init_layered_buffer(n_layers: int, batch: int,
                         buf_size: Union[int, Sequence[int]],
                         seq_len: int, entry_dim: int,
-                        dtype=jnp.bfloat16) -> BufferState:
+                        dtype=jnp.bfloat16,
+                        buf_max: Union[int, None] = None) -> BufferState:
     """Per-(layer, request) buffer stack: every field gains a leading
     [L] axis (entries [L, B, buf, d], page_table [L, B, S], ...).
 
@@ -316,7 +317,9 @@ def init_layered_buffer(n_layers: int, batch: int,
     allocation is ``max(sizes)`` wide and layer ``l``'s slots beyond
     ``sizes[l]`` are marked :data:`DISABLED` — never resident, never a
     victim — so each layer runs at its own effective capacity inside one
-    static layout.
+    static layout.  ``buf_max`` overrides the allocation width (must be
+    >= every size): the headroom online re-sizing (``resize_layers``)
+    needs to grow a layer past its initial share later.
 
     This is the ``hot_buf`` entry of the engine's serve_state pytree;
     the decode step threads per-layer slices through ``read_through``.
@@ -326,7 +329,11 @@ def init_layered_buffer(n_layers: int, batch: int,
     else:
         sizes = [int(s) for s in buf_size]
         assert len(sizes) == n_layers, (len(sizes), n_layers)
-    buf_max = max(max(sizes), 1)
+    if buf_max is None:
+        buf_max = max(max(sizes), 1)
+    else:
+        buf_max = int(buf_max)
+        assert buf_max >= max(max(sizes), 1), (buf_max, sizes)
     slot = np.arange(buf_max)[None, None, :]
     sz = np.asarray(sizes, np.int32)[:, None, None]
     slot_pos = jnp.asarray(
@@ -342,6 +349,73 @@ def init_layered_buffer(n_layers: int, batch: int,
         pf_inserted=jnp.zeros((n_layers, batch), jnp.int32),
         pf_used=jnp.zeros((n_layers, batch), jnp.int32),
     )
+
+
+def _resize_one(entries, slot_pos, page_table, last_use, pf_flag, enabled):
+    """Single-lane layer re-sizing (vmapped over L*B).
+
+    ``enabled``: [buf] bool — the slot belongs to the layer's NEW budget.
+    Slots leaving the budget are evicted (their position unmapped from the
+    page table) and marked DISABLED; slots entering it open as EMPTY.
+    Slots enabled in both layouts are untouched — resident entries, their
+    recency clocks, and their prefetch flags survive the resize, so
+    decoded tokens cannot change (the pool stays authoritative either
+    way; only *residency* moved).
+    """
+    S = page_table.shape[0]
+    displaced = (~enabled) & (slot_pos >= 0)
+    pt = jnp.concatenate([page_table, jnp.full((1,), EMPTY)])
+    pt = pt.at[jnp.where(displaced, slot_pos, S)].set(EMPTY)
+    page_table = pt[:S]
+    slot_pos = jnp.where(~enabled, DISABLED,
+                         jnp.where(slot_pos == DISABLED, EMPTY, slot_pos))
+    last_use = jnp.where(enabled, last_use, 0)
+    pf_flag = pf_flag & enabled
+    return entries, slot_pos, page_table, last_use, pf_flag
+
+
+def resize_layers(state: BufferState, sizes: Sequence[int]) -> BufferState:
+    """Re-apportion a layered buffer's per-layer capacities IN PLACE.
+
+    state: layered ([L, B, buf_max, ...]); sizes: [L] new per-layer slot
+    budgets (each <= buf_max — the static allocation width is the hard
+    ceiling).  Layer ``l`` keeps its first ``sizes[l]`` slots enabled and
+    the rest DISABLED: entries displaced by a shrink are evicted (their
+    next demand read is an honest miss), entries in surviving slots are
+    never corrupted, and the cumulative ``pf_*`` counters are preserved
+    (a displaced prefetched entry simply counts as wasted speculation,
+    exactly like an LRU eviction would).
+
+    This is the engine's online LayerSizer path (serving/arbiter.py):
+    every ``resize_interval`` steps the measured per-layer miss rates
+    re-apportion the hot tier without reallocating the serve state.
+    """
+    L, B, buf_max = state.slot_pos.shape
+    sz = np.asarray([int(s) for s in sizes], np.int32)
+    assert sz.shape == (L,), (sz.shape, L)
+    assert sz.max(initial=0) <= buf_max and sz.min(initial=1) >= 0, \
+        (sizes, buf_max)
+    enabled = jnp.asarray(
+        np.broadcast_to(np.arange(buf_max)[None, :] < sz[:, None],
+                        (L, buf_max)))
+
+    def flat(t):
+        return t.reshape(L * B, *t.shape[2:])
+
+    en = jnp.repeat(enabled, B, axis=0)                    # [L*B, buf]
+    entries, slot_pos, page_table, last_use, pf_flag = jax.vmap(
+        _resize_one)(flat(state.entries), flat(state.slot_pos),
+                     flat(state.page_table), flat(state.last_use),
+                     flat(state.pf_flag), en)
+
+    def unflat(t):
+        return t.reshape(L, B, *t.shape[1:])
+
+    return BufferState(
+        entries=unflat(entries), slot_pos=unflat(slot_pos),
+        page_table=unflat(page_table), last_use=unflat(last_use),
+        clock=state.clock, pf_flag=unflat(pf_flag),
+        pf_inserted=state.pf_inserted, pf_used=state.pf_used)
 
 
 def reset_lane(state: BufferState, lane: int) -> BufferState:

@@ -19,7 +19,14 @@ answers "which device should this request's KV live on" under a pluggable
     ablation baseline of paper Fig 13);
   - ``least_loaded`` — smallest booked-bytes device first (beyond-paper:
     balances *capacity* rather than request count, useful under highly
-    skewed context lengths).
+    skewed context lengths);
+  - ``pressure_aware`` — least *link-pressured* device first (the PR 4
+    closed loop): the placer consumes a live per-device pressure feed
+    (``TrafficStats.device_demand_s()`` step deltas, supplied by the
+    engine or simulator through ``set_pressure_fn``) and lands new
+    requests on the device whose fabric link has the most headroom,
+    breaking pressure ties by booked bytes (the least-loaded key).
+    Without a feed it degrades exactly to ``least_loaded``.
 
 The paper stores one request's KV entirely within a single device; the
 placer decides *which* device, the caller owns the page/byte payloads.
@@ -28,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 
 # ---------------------------------------------------------------------------
@@ -86,10 +93,71 @@ class LeastLoadedPolicy(PlacementPolicy):
                                      placer.pages_used[d], d))
 
 
+class PressureAwarePolicy(PlacementPolicy):
+    """Least link-pressured device first (serving/arbiter.py feedback
+    loop): the primary key is the placer's live per-device pressure feed
+    (demand fabric seconds observed last step), so a new request lands on
+    the link with the most headroom even when byte loads are balanced.
+    Ties fall back to the least-loaded ordering (bytes, pages, index) —
+    with no feed attached every pressure is 0.0 and the policy IS
+    least_loaded.
+
+    The feed is a per-STEP measurement, so several requests admitted in
+    one scheduling gap would all see the same stale snapshot and herd
+    onto the same device.  The policy therefore keeps an in-flight
+    correction: each booking committed since the snapshot last changed
+    adds one average request's worth of pressure to its device, exactly
+    like the least-loaded key updates bytes per booking."""
+
+    name = "pressure_aware"
+    ema_beta = 0.7      # snapshot smoothing: one step's demand delta is
+                        # noisy (cold bursts, warm-up); the decision key
+                        # is an EMA over successive snapshots
+
+    def __init__(self):
+        self._snapshot = None          # (epoch, values) of the last reset
+        self._ema: List[float] = []
+        self._placed_since: List[int] = []
+
+    def _corrected(self, placer: "Placer") -> List[float]:
+        pressure = placer.device_pressure()
+        # a snapshot is stale until the feed is re-measured — tracked by
+        # the placer's pressure epoch (bumped by the serving layer each
+        # step) so a fresh reading that happens to EQUAL the previous
+        # one still resets the correction (steady-state traces repeat
+        # values exactly; accumulating would double-count load the new
+        # measurement already includes)
+        snapshot = (placer.pressure_epoch, pressure)
+        if snapshot != self._snapshot:
+            self._snapshot = snapshot
+            if len(self._ema) != placer.n_devices:
+                self._ema = list(pressure)
+            else:
+                b = self.ema_beta
+                self._ema = [b * e + (1 - b) * p
+                             for e, p in zip(self._ema, pressure)]
+            self._placed_since = [0] * placer.n_devices
+        active = sum(placer.counts)
+        per_req = sum(self._ema) / active if active else 0.0
+        return [p + per_req * n
+                for p, n in zip(self._ema, self._placed_since)]
+
+    def order(self, placer: "Placer") -> List[int]:
+        pressure = self._corrected(placer)
+        return sorted(range(placer.n_devices),
+                      key=lambda d: (pressure[d], placer.bytes_used[d],
+                                     placer.pages_used[d], d))
+
+    def on_commit(self, placer: "Placer", device: int) -> None:
+        if device < len(self._placed_since):
+            self._placed_since[device] += 1
+
+
 POLICIES = {
     "round_robin": RoundRobinPolicy,
     "first_fit": FirstFitPolicy,
     "least_loaded": LeastLoadedPolicy,
+    "pressure_aware": PressureAwarePolicy,
 }
 
 
@@ -127,7 +195,8 @@ class Placer:
 
     def __init__(self, n_devices: int, *, policy: str = "round_robin",
                  capacity_bytes: float = float("inf"),
-                 capacity_pages: Optional[int] = None):
+                 capacity_pages: Optional[int] = None,
+                 pressure_fn: Optional[Callable[[], Sequence[float]]] = None):
         assert n_devices >= 1
         self.n_devices = n_devices
         self.policy = make_policy(policy)
@@ -138,6 +207,36 @@ class Placer:
         self.pages_used: List[int] = [0] * n_devices
         self.counts: List[int] = [0] * n_devices      # active requests
         self._bookings: Dict[int, _Booking] = {}
+        self._pressure_fn = pressure_fn
+        self.pressure_epoch = 0
+
+    # -- live link-pressure feed (pressure_aware policy) -------------------
+    def set_pressure_fn(self,
+                        fn: Optional[Callable[[], Sequence[float]]]) -> None:
+        """Attach the live per-device pressure source (demand fabric
+        seconds per link, e.g. ``TrafficStats.device_demand_s()`` step
+        deltas).  The feed is read at ``place`` time, so placement always
+        sees the freshest pressure the serving layer measured."""
+        self._pressure_fn = fn
+
+    def note_pressure_update(self) -> None:
+        """Mark the feed as re-measured (the serving layer calls this
+        once per step).  The pressure_aware policy keys its in-flight
+        booking correction on this epoch, NOT on value equality — a
+        steady-state trace repeats pressure values exactly, and treating
+        a fresh-but-equal reading as stale would keep accumulating
+        synthetic load the new measurement already includes."""
+        self.pressure_epoch += 1
+
+    def device_pressure(self) -> List[float]:
+        """Per-device link pressure from the attached feed (0.0 per
+        device without one — pressure_aware then degrades to
+        least_loaded).  Shorter feeds are zero-padded; longer ones
+        truncated (the placer's device space is authoritative)."""
+        if self._pressure_fn is None:
+            return [0.0] * self.n_devices
+        raw = [max(float(p), 0.0) for p in self._pressure_fn()]
+        return (raw + [0.0] * self.n_devices)[:self.n_devices]
 
     # -- placement ---------------------------------------------------------
     def fits(self, device: int, n_bytes: float = 0.0, n_pages: int = 0

@@ -196,7 +196,7 @@ class SACSystem:
     def __init__(self, cfg: ModelConfig, *, backend: str = "cxl",
                  n_pool_devices: int = 2, device_bytes: int = 256 << 30,
                  interleave: bool = True, placement: Optional[str] = None,
-                 seq_capacity: int = 1 << 17):
+                 pressure_fn=None, seq_capacity: int = 1 << 17):
         self.cfg = cfg
         self.backend = backend
         self.fabric: FabricModel = FABRICS[backend]
@@ -212,13 +212,24 @@ class SACSystem:
             n_pool_devices,
             policy=placement or policy_for_interleave(interleave),
             capacity_bytes=float(device_bytes),
-            capacity_pages=pages_per_device)
+            capacity_pages=pages_per_device,
+            pressure_fn=pressure_fn)
         self.traffic = FabricAccountant(self.fabric,
                                         n_devices=n_pool_devices)
         self.directory = PageDirectory()
         self.requests: Dict[int, RequestPages] = {}
 
     # -- placement ---------------------------------------------------------
+    def set_pressure_fn(self, fn) -> None:
+        """Attach the live per-device link-pressure feed the
+        ``pressure_aware`` placement policy reads (core/placement.py)."""
+        self.placer.set_pressure_fn(fn)
+
+    def note_pressure_update(self) -> None:
+        """Tell the placer the pressure feed was re-measured (once per
+        engine step) so its in-flight correction resets."""
+        self.placer.note_pressure_update()
+
     def place(self, request_id: int, n_tokens: int) -> Optional[RequestPages]:
         """Allocate pool pages for a request on one device (paper stores a
         request's KV within a single device; the shared placer interleaves

@@ -17,7 +17,7 @@ test (tests/test_engine_buffer.py) grounds one against the other.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, Hashable, List, Optional
 
 from repro.core.transfer import FABRICS, FabricModel, PipelineModel
 
@@ -52,6 +52,13 @@ class TrafficStats:
         default_factory=list)       # issued seconds spent on prefetch, per
                                     # device (subset of device_issued_s) —
                                     # the arbiter's per-link pressure split
+    device_anomalies: int = 0       # out-of-range device ids seen at the
+                                    # accounting boundary (clamped once and
+                                    # counted instead of silently aliased)
+    request_pf: Dict[Hashable, List[float]] = dataclasses.field(
+        default_factory=dict)       # per-request [inserted, useful]
+                                    # prefetch attribution — the arbiter's
+                                    # precision-weighting signal
 
     def __post_init__(self):
         if not self.device_demand_bytes:
@@ -92,6 +99,24 @@ class TrafficStats:
         return (self.prefetch_useful / self.prefetched_entries
                 if self.prefetched_entries else 0.0)
 
+    def request_precision(self, key: Hashable, prior: float = 1.0,
+                          pseudo: float = 8.0) -> float:
+        """One request's measured prefetch precision (useful / inserted),
+        Laplace-smoothed toward an optimistic ``prior`` with ``pseudo``
+        virtual entries.  The smoothing matters: a fresh request's first
+        inserts have not had a chance to be demand-hit yet, and a raw
+        0/N estimate would starve it before the signal exists (a
+        feedback loop — starved requests never accumulate the inserts
+        that would redeem them).  Heavily-wasteful speculators still
+        converge to ~0."""
+        ins, use = self.request_pf.get(key, (0.0, 0.0))
+        return (use + pseudo * prior) / (ins + pseudo)
+
+    def drop_request(self, key: Hashable) -> None:
+        """Forget a finished request's prefetch attribution (the key —
+        an engine slot or a request id — is about to be reused)."""
+        self.request_pf.pop(key, None)
+
 
 class OverlapQueue:
     """Per-device double-buffered fetch queues (issued vs exposed split).
@@ -108,8 +133,14 @@ class OverlapQueue:
         self._pending = [0.0] * max(n_devices, 1)
 
     def issue(self, device: int, seconds: float) -> None:
+        if not 0 <= device < len(self._pending):
+            # an aliased id would charge the WRONG link's hide window;
+            # callers (FabricAccountant) validate at the accounting
+            # boundary, so reaching here is a programming error
+            raise IndexError(
+                f"device {device} out of range [0, {len(self._pending)})")
         if seconds > 0:
-            self._pending[device % len(self._pending)] += seconds
+            self._pending[device] += seconds
 
     @property
     def pending_s(self) -> float:
@@ -185,6 +216,21 @@ class FabricAccountant:
     def n_devices(self) -> int:
         return self.stats.n_devices
 
+    def _resolve_device(self, device: int) -> int:
+        """Validate a device id at the accounting boundary.
+
+        A silently aliased id (the pre-PR 4 ``dev % n`` convention) would
+        charge the WRONG link's budget and feed the arbiter/placer a
+        corrupted pressure signal.  Out-of-range ids are clamped ONCE
+        here — every downstream counter then indexes directly — and the
+        anomaly is counted in ``TrafficStats.device_anomalies`` so tests
+        and dashboards can see it happened.
+        """
+        if 0 <= device < self.n_devices:
+            return device
+        self.stats.device_anomalies += 1
+        return min(max(device, 0), self.n_devices - 1)
+
     # -- timed ops (engine / SACSystem) ------------------------------------
     def sparse_fetch(self, n_entries: int, entry_bytes: int, *,
                      device: int = 0, contention: float = 1.0) -> float:
@@ -192,14 +238,15 @@ class FabricAccountant:
         if n_entries <= 0:
             return 0.0
         assert self.fabric is not None, "timed ops need a fabric model"
+        device = self._resolve_device(device)
         t = self.fabric.sparse_fetch_time(n_entries, entry_bytes,
                                           contention=contention)
         n_bytes = n_entries * entry_bytes
         self.stats.bytes_fetched += n_bytes
         self.stats.entries_fetched += n_entries
-        self.stats.device_demand_bytes[device % self.n_devices] += n_bytes
+        self.stats.device_demand_bytes[device] += n_bytes
         self.stats.fabric_time_s += t
-        self.stats.device_issued_s[device % self.n_devices] += t
+        self.stats.device_issued_s[device] += t
         self._book_time(t, device)
         return t
 
@@ -208,11 +255,12 @@ class FabricAccountant:
         """Speculative/warm-up fetch of ``n_entries`` entries: same fabric
         cost and accounting as a demand fetch, additionally attributed to
         prefetch traffic so the wasted share is measurable."""
+        device = self._resolve_device(device)
         t = self.sparse_fetch(n_entries, entry_bytes, device=device,
                               contention=contention)
         if n_entries > 0:
             self.stats.prefetch_bytes += n_entries * entry_bytes
-            self.stats.device_prefetch_s[device % self.n_devices] += t
+            self.stats.device_prefetch_s[device] += t
         return t
 
     def bulk_fetch(self, n_bytes: float, *, device: int = 0,
@@ -221,11 +269,12 @@ class FabricAccountant:
         if n_bytes <= 0:
             return 0.0
         assert self.fabric is not None, "timed ops need a fabric model"
+        device = self._resolve_device(device)
         t = self.fabric.bulk_transfer_time(n_bytes, contention=contention)
         self.stats.bytes_fetched += n_bytes
-        self.stats.device_demand_bytes[device % self.n_devices] += n_bytes
+        self.stats.device_demand_bytes[device] += n_bytes
         self.stats.fabric_time_s += t
-        self.stats.device_issued_s[device % self.n_devices] += t
+        self.stats.device_issued_s[device] += t
         self._book_time(t, device)
         return t
 
@@ -239,10 +288,11 @@ class FabricAccountant:
         if n_bytes <= 0:
             return 0.0
         assert self.fabric is not None, "timed ops need a fabric model"
+        device = self._resolve_device(device)
         t = self.fabric.bulk_transfer_time(n_bytes, contention=contention)
         self.stats.bytes_written += n_bytes
         self.stats.fabric_time_s += t
-        self.stats.device_issued_s[device % self.n_devices] += t
+        self.stats.device_issued_s[device] += t
         self._book_time(t, device)
         return t
 
@@ -252,15 +302,23 @@ class FabricAccountant:
         self.stats.buffer_hits += hits
         self.stats.buffer_misses += misses
 
-    def record_prefetch(self, inserted: float, useful: float) -> None:
+    def record_prefetch(self, inserted: float, useful: float, *,
+                        key: Optional[Hashable] = None) -> None:
         """Record prefetch outcomes (measured in-graph by the HiSparse
-        ``pf_*`` counters, or analytic in the simulator)."""
+        ``pf_*`` counters, or analytic in the simulator).  ``key``
+        additionally attributes the outcome to one request (engine slot
+        or request id) — the per-request precision the arbiter's
+        precision-weighted grants consume."""
         self.stats.prefetched_entries += inserted
         self.stats.prefetch_useful += useful
+        if key is not None:
+            pf = self.stats.request_pf.setdefault(key, [0.0, 0.0])
+            pf[0] += inserted
+            pf[1] += useful
 
     # -- per-step demand (simulator) ---------------------------------------
     def add_step_demand(self, device: int, n_bytes: float) -> None:
-        self._step_demand[device % self.n_devices] += n_bytes
+        self._step_demand[self._resolve_device(device)] += n_bytes
 
     def drain_step(self) -> List[float]:
         """Fold the current step's demand into the stats and return it."""

@@ -40,8 +40,24 @@ def main():
                     choices=["uniform", "windowed"],
                     help="hot-tier slot apportioning across layers "
                          "(LayerSizer; default cfg.sac.layer_sizing)")
+    ap.add_argument("--placement", default=None,
+                    choices=["round_robin", "first_fit", "least_loaded",
+                             "pressure_aware"],
+                    help="pool placement policy (core/placement.py); "
+                         "pressure_aware lands new requests on the "
+                         "least-pressured fabric link")
+    ap.add_argument("--precision-weighted", action="store_true",
+                    help="split each device's arbiter grant budget by "
+                         "measured per-request prefetch precision "
+                         "(implies --arbiter)")
+    ap.add_argument("--resize-interval", type=int, default=0,
+                    help="decode steps between online LayerSizer "
+                         "re-apportionings of the hot tier from "
+                         "measured per-layer miss rates (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    import dataclasses
 
     from repro.configs import get_config
     from repro.serving.engine import Engine
@@ -50,11 +66,20 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.precision_weighted and not args.arbiter:
+        print("--precision-weighted implies --arbiter: enabling the "
+              "budget arbiter")
+        args.arbiter = True
     if args.arbiter and not args.prefetch:
         # the arbiter governs speculative prefetch; without the pipeline
         # it would be a silent no-op
         print("--arbiter implies --prefetch: enabling the fetch pipeline")
         args.prefetch = True
+    if args.precision_weighted or args.resize_interval:
+        cfg = dataclasses.replace(
+            cfg, sac=dataclasses.replace(
+                cfg.sac, precision_weighted=args.precision_weighted,
+                resize_interval=args.resize_interval))
     if cfg.enc_dec:
         raise SystemExit("serve driver targets decoder-only archs; "
                          "whisper decode is exercised in tests")
@@ -64,7 +89,8 @@ def main():
                  device_buffer=args.device_buffer,
                  prefetch=args.prefetch,
                  arbiter=args.arbiter or None,
-                 layer_sizing=args.layer_sizing)
+                 layer_sizing=args.layer_sizing,
+                 placement=args.placement)
     reqs = sharegpt_trace(args.requests, context_len=args.ctx,
                           output_len=args.out_len, seed=args.seed,
                           ctx_jitter=0.0, vocab=cfg.vocab)

@@ -804,10 +804,13 @@ class TransformerLM:
 
     # -- state builders ---------------------------------------------------------
     def _empty_state(self, batch: int, seq_len: int,
-                     device_buffer=0) -> Dict:
+                     device_buffer=0, buffer_width=None) -> Dict:
         """``device_buffer`` is the hot-tier size per layer: one int
         (uniform) or a per-layer sequence (serving/arbiter.py LayerSizer
-        apportioning, realized by hisparse DISABLED slot markers)."""
+        apportioning, realized by hisparse DISABLED slot markers).
+        ``buffer_width`` overrides the static allocation width (>= every
+        per-layer size) — the headroom online re-sizing
+        (hisparse.resize_layers) needs to grow layers later."""
         cfg = self.cfg
         buffered = (max(device_buffer) if isinstance(device_buffer,
                                                      (list, tuple))
@@ -825,7 +828,7 @@ class TransformerLM:
                 # per-request hit/miss counts in buf_hits/buf_misses.
                 state["hot_buf"] = hisparse.init_layered_buffer(
                     self.n_kv, batch, device_buffer, seq_len, self.kv_dim,
-                    self.kv_dtype)
+                    self.kv_dtype, buf_max=buffer_width)
                 state["buf_hits"] = jnp.zeros((batch,), jnp.int32)
                 state["buf_misses"] = jnp.zeros((batch,), jnp.int32)
                 # per-layer split of the same counters (LayerSizer signal)
@@ -844,17 +847,19 @@ class TransformerLM:
         return state
 
     def serve_state_shapes(self, batch: int, seq_len: int,
-                           device_buffer=0) -> Dict:
+                           device_buffer=0, buffer_width=None) -> Dict:
         """ShapeDtypeStruct pytree of the serve state (dry-run input specs).
 
         Traced abstractly (zero allocation) so dry-runs can lower against
         arbitrarily large states."""
         return jax.eval_shape(
-            lambda: self._empty_state(batch, seq_len, device_buffer))
+            lambda: self._empty_state(batch, seq_len, device_buffer,
+                                      buffer_width))
 
     def init_serve_state(self, batch: int, seq_len: int,
-                         device_buffer=0) -> Dict:
-        return self._empty_state(batch, seq_len, device_buffer)
+                         device_buffer=0, buffer_width=None) -> Dict:
+        return self._empty_state(batch, seq_len, device_buffer,
+                                 buffer_width)
 
     # -- shared pieces -----------------------------------------------------------
     def _embed_seq(self, params, tokens):

@@ -27,6 +27,15 @@ engine↔simulator stay comparable (tests/test_parity_suite.py).  Neither
 ever changes decoded tokens: arbitration caps *speculation* (warm
 inserts) and *buffer slots* (residency), never demand reads — the pool
 stays authoritative.
+
+PR 4 closes the remaining loops: grants split a device's budget by
+per-request measured prefetch precision (``precision_weighted``,
+``TrafficStats.request_pf``) with the floor-division remainder
+distributed largest-share-first instead of discarded; prefill warm-up
+bursts draw from the same link budget (``grant_warmup``); and the
+LayerSizer re-apportions ONLINE from measured miss rates
+(``max_slots`` hard-caps at the static allocation width,
+``hisparse.resize_layers`` realizes the new layout in place).
 """
 from __future__ import annotations
 
@@ -44,6 +53,58 @@ class ArbiterConfig:
     min_width: int = 0               # floor granted even when saturated
     link_budget_frac: float = 1.0    # fraction of the pipeline hide window
                                      # speculation may fill per device
+    precision_weighted: bool = False  # split each device's entry budget
+                                      # across requests in proportion to
+                                      # their measured prefetch precision
+                                      # instead of uniformly
+
+
+def _hand_out_units(budget: int, order: Sequence[int], out: List[int],
+                    cap: Sequence[int]) -> int:
+    """Hand out integer units one at a time in fixed ``order``, cycling,
+    until the budget or every per-index ``cap`` is exhausted.  Mutates
+    ``out``; returns the undistributable remainder.  Shared by the grant
+    remainder distribution (:func:`_apportion`) and the LayerSizer's
+    past-caps surplus spread — one algorithm, one set of edge cases."""
+    while budget > 0:
+        progressed = False
+        for i in order:
+            if budget <= 0:
+                break
+            if out[i] < cap[i]:
+                out[i] += 1
+                budget -= 1
+                progressed = True
+        if not progressed:
+            break
+    return budget
+
+
+def _apportion(total_w: int, cap: int, weights: Sequence[float]
+               ) -> List[int]:
+    """Split ``total_w`` integer width units across requests.
+
+    Each request's ideal share is proportional to its weight; shares are
+    floored, then the remainder is handed out one unit at a time —
+    largest fractional share first (ties to the larger weight, then the
+    lower index), cycling until the budget or the per-request ``cap`` is
+    exhausted.  Guarantees ``sum(out) <= total_w`` and every entry
+    ``<= cap`` — the floor-division remainder the PR 3 grant silently
+    discarded is spent instead of dropped.
+    """
+    n = len(weights)
+    tw = sum(weights)
+    if tw <= 0:
+        weights = [1.0] * n
+        tw = float(n)
+    ideal = [total_w * w / tw for w in weights]
+    out = [min(int(s), cap) for s in ideal]
+    left = min(total_w, n * cap) - sum(out)
+    order = sorted(range(n),
+                   key=lambda i: (-(ideal[i] - int(ideal[i])),
+                                  -weights[i], i))
+    _hand_out_units(left, order, out, [cap] * n)
+    return out
 
 
 class BudgetArbiter:
@@ -88,38 +149,101 @@ class BudgetArbiter:
         headroom = self.link_budget_s(compute_s) - max(demand_s, 0.0)
         return max(headroom, 0.0) / self.entry_s
 
+    def _device_demand(self, demand_s: Sequence[float], dev: int) -> float:
+        """Validated per-device demand lookup.  The pre-PR 4 ``dev %
+        len(demand_s)`` convention silently aliased an out-of-range id
+        onto the WRONG link's budget; the arbiter is control logic, so a
+        bad id is a programming error and raises."""
+        if not len(demand_s):
+            return 0.0
+        if not 0 <= dev < len(demand_s):
+            raise ValueError(
+                f"device {dev} out of range [0, {len(demand_s)}) — "
+                "placement and traffic accounting disagree on the "
+                "device space")
+        return demand_s[dev]
+
     def grant(self, compute_s: float, demand_s: Sequence[float],
-              device_requests: Mapping[int, Sequence[Hashable]]
+              device_requests: Mapping[int, Sequence[Hashable]],
+              precision: Optional[Mapping[Hashable, float]] = None
               ) -> Dict[Hashable, int]:
         """Allocate per-request speculative widths for one step.
 
         compute_s: the step's modeled compute window; demand_s: per-device
         demand seconds observed last step (``TrafficStats.device_demand_s``
         deltas, or the simulator's analytic miss seconds);
-        device_requests: device -> request keys decoding on that device.
+        device_requests: device -> request keys decoding on that device;
+        precision: request -> measured prefetch precision (the
+        ``TrafficStats.request_precision`` attribution) — consumed only
+        when ``cfg.precision_weighted`` is on, in which case a device's
+        entry budget is split in proportion to each request's precision
+        (precise speculators keep width, imprecise ones shrink) instead
+        of uniformly.
 
         Returns request -> granted width (entries per layer per step),
         clamped to ``[min(min_width, max_width), max_width]``; with
         ``min_width == 0`` the per-device sum respects the link budget:
-        ``sum(w_r) * n_layers * entry_s <= max(headroom, 0)``.
+        ``sum(w_r) * n_layers * entry_s <= max(headroom, 0)``.  The
+        device's whole width budget is spent (largest-share-first
+        remainder distribution) rather than floor-divided away.
         """
         grants: Dict[Hashable, int] = {}
-        floor = min(self.cfg.min_width, self.cfg.max_width)
+        floor = max(min(self.cfg.min_width, self.cfg.max_width), 0)
+        weighted = self.cfg.precision_weighted and precision is not None
         for dev, rids in device_requests.items():
             if not rids:
                 continue
-            d = (demand_s[dev % len(demand_s)] if len(demand_s) else 0.0)
+            d = self._device_demand(demand_s, dev)
             entries = self.device_entry_budget(compute_s, d)
-            per_req = int(entries // (len(rids) * self.n_layers))
-            w = max(min(per_req, self.cfg.max_width), max(floor, 0))
-            for rid in rids:
-                grants[rid] = w
+            total_w = int(entries // self.n_layers)
+            if weighted:
+                # epsilon keeps a zero-precision request eligible for
+                # remainder units instead of degenerate 0-weight shares
+                weights = [max(float(precision.get(r, 1.0)), 0.0) + 1e-3
+                           for r in rids]
+            else:
+                weights = [1.0] * len(rids)
+            widths = _apportion(total_w, self.cfg.max_width, weights)
+            for rid, w in zip(rids, widths):
+                grants[rid] = max(w, floor)
         return grants
+
+    def grant_warmup(self, compute_s: float, demand_s: Sequence[float],
+                     device: int, width: int) -> int:
+        """Cap one request's prefill warm-up burst by its link headroom.
+
+        Warm bursts ride behind the prefill compute window exactly like
+        speculation rides behind decode, so they draw from the same
+        per-device budget: ``width`` (the planned warm entries per layer)
+        shrinks to what fits ``device_entry_budget`` over ``n_layers``
+        layers, never below ``min(min_width, width)`` — a saturated link
+        still seeds a floor-sized warm set (pure traffic shaping: the
+        first decode step just misses more, it never decodes differently).
+        """
+        if width <= 0:
+            return 0
+        d = self._device_demand(demand_s, device)
+        cap = int(self.device_entry_budget(compute_s, d)
+                  // self.n_layers)
+        floor = min(max(self.cfg.min_width, 0), width)
+        return min(width, max(cap, floor))
 
 
 # ---------------------------------------------------------------------------
 # per-layer hot-tier sizing
 # ---------------------------------------------------------------------------
+
+
+def resize_allocation_width(sizes: Sequence[int],
+                            device_buffer: int) -> int:
+    """Static allocation width for an online-resizable layered buffer:
+    2x headroom over the widest initial layer (and over the uniform
+    per-layer share) so re-sizing can grow layers, capped at the total.
+    ONE formula shared by the engine's allocation and the simulator's
+    analytic twin — their LayerSizer ``max_slots`` hard caps must agree
+    or the analytic re-sized hit rates drift from the engine's."""
+    total = sum(sizes)
+    return min(total, 2 * max(max(sizes), device_buffer))
 
 
 class LayerSizer:
@@ -137,22 +261,39 @@ class LayerSizer:
 
     def __init__(self, n_layers: int, total_slots: int, *,
                  layer_windows: Optional[Sequence[int]] = None,
-                 topk: int = 0, min_slots: int = 1):
+                 topk: int = 0, min_slots: int = 1,
+                 max_slots: Optional[int] = None):
         self.n_layers = max(int(n_layers), 1)
         self.total_slots = max(int(total_slots), self.n_layers)
         wins = list(layer_windows or [])
         self.layer_windows = (wins + [0] * self.n_layers)[:self.n_layers]
         self.topk = max(int(topk), 1)
         self.min_slots = max(int(min_slots), 1)
+        # hard per-layer ceiling: the static allocation width of an
+        # already-built layered buffer (online re-sizing can never grow a
+        # layer past it).  Feasibility: the initial layout satisfies
+        # n * max(sizes) >= sum(sizes) == total, so a ceiling taken from
+        # that layout always fits the whole budget.
+        self.max_slots = None if max_slots is None else max(int(max_slots), 1)
+        if self.max_slots is not None:
+            assert self.total_slots <= self.n_layers * self.max_slots, \
+                (self.total_slots, self.n_layers, self.max_slots)
+
+    def _hard_cap(self) -> int:
+        return (self.max_slots if self.max_slots is not None
+                else self.total_slots)
 
     def caps(self) -> List[int]:
         """Per-layer ceilings: a windowed layer never benefits from more
         resident slots than distinct selectable positions.  The caps are
         honored while the budget fits under them; when ``total_slots``
         exceeds their sum (every layer windowed and over-provisioned),
-        ``sizes`` spreads the surplus past the caps — the total is the
-        engine↔simulator comparability contract and always wins."""
-        return [min(w, self.total_slots) if w > 0 else self.total_slots
+        ``sizes`` spreads the surplus past the window caps — the total is
+        the engine↔simulator comparability contract and always wins —
+        though never past ``max_slots`` (an allocation width is physical,
+        not advisory)."""
+        hard = self._hard_cap()
+        return [min(w, hard) if w > 0 else hard
                 for w in self.layer_windows]
 
     def weights(self, miss_rates: Optional[Sequence[float]] = None
@@ -199,9 +340,16 @@ class LayerSizer:
                         sizes[l] += 1
                         remaining -= 1
         if remaining > 0:
-            # every layer capped but budget left: keep the sum invariant
-            # (the total is the comparability contract) by spreading the
-            # surplus round-robin past the caps
-            for i in range(remaining):
-                sizes[i % n] += 1
+            # every layer at its window cap but budget left: keep the sum
+            # invariant (the total is the comparability contract) by
+            # spreading the surplus past the window caps — rotating in
+            # DESCENDING weight order (a fixed layer-0 start would hand
+            # the heaviest-missing layers nothing extra and bias early
+            # layers every call), and never past the hard allocation cap
+            hard = self._hard_cap()
+            order = sorted(range(n), key=lambda l: (-w[l], l))
+            remaining = _hand_out_units(remaining, order, sizes,
+                                        [hard] * n)
+            assert remaining == 0, \
+                "total_slots exceeds n_layers * max_slots"
         return sizes

@@ -51,8 +51,9 @@ from repro.core.traffic import TrafficStats
 from repro.core.transfer import PipelineModel
 from repro.models.model import build_model
 from repro.models.transformer import kv_layer_windows
-from repro.serving.arbiter import ArbiterConfig, BudgetArbiter, LayerSizer
-from repro.serving.prefetch import FetchPlanner
+from repro.serving.arbiter import (ArbiterConfig, BudgetArbiter, LayerSizer,
+                                   resize_allocation_width)
+from repro.serving.prefetch import FetchPlanner, cap_warmup
 from repro.serving.radix import RadixIndex
 from repro.serving.request import Request, summarize
 from repro.serving.simulator import profile_from_config
@@ -160,6 +161,27 @@ class Engine:
     budget across layers via the LayerSizer instead of uniformly.
     Neither changes decoded tokens (property-tested in
     tests/test_arbiter.py).
+
+    PR 4 closes the remaining control loops:
+
+      - ``placement`` (default ``cfg.sac.placement``) overrides the pool
+        placement policy; ``"pressure_aware"`` feeds the placer the
+        engine's live per-device demand seconds so new requests land on
+        the least-pressured fabric link;
+      - ``cfg.sac.precision_weighted`` splits each device's grant budget
+        across its requests by their measured prefetch precision (the
+        per-request ``TrafficStats.request_pf`` attribution) instead of
+        uniformly;
+      - ``cfg.sac.resize_interval`` re-apportions the hot tier online:
+        every that many steps the LayerSizer re-runs on the measured
+        per-layer miss rates and the hisparse DISABLED sentinels are
+        re-marked in place (``hisparse.resize_layers``);
+      - with the arbiter on, prefill warm-up bursts draw from the same
+        per-device link budget (``BudgetArbiter.grant_warmup`` caps the
+        warm-up plan's width).
+
+    All four change traffic and timing only — decoded tokens are
+    bit-identical with every knob on or off.
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int = 4,
@@ -170,6 +192,7 @@ class Engine:
                  overlap: Optional[bool] = None,
                  arbiter: Optional[bool] = None,
                  layer_sizing: Optional[str] = None,
+                 placement: Optional[str] = None,
                  topk_fn=None, seed: int = 0):
         self.cfg = cfg
         self.slots = slots
@@ -195,7 +218,14 @@ class Engine:
         self.model = build_model(cfg, mode=mode, topk_fn=topk_fn,
                                  opts=opts or None)
         self.params = self.model.init(jax.random.PRNGKey(seed))
-        self.sac = SACSystem(cfg, backend=backend)
+        self.placement = placement if placement is not None \
+            else cfg.sac.placement
+        self.sac = SACSystem(cfg, backend=backend,
+                             placement=self.placement)
+        # live link-pressure feed for pressure_aware placement: the
+        # placer reads last step's measured per-device demand seconds at
+        # place time (no-op under pressure-blind policies)
+        self.sac.set_pressure_fn(lambda: self._last_demand_s)
         self.radix = RadixIndex(page_size=cfg.sac.page_size)
         # the engine's stats share the SACSystem accountant's TrafficStats:
         # every charged fetch/write and recorded hit/miss lands here
@@ -228,20 +258,40 @@ class Engine:
                 ArbiterConfig(max_width=int(cfg.sac.prefetch_width),
                               min_width=int(cfg.sac.min_prefetch_width),
                               link_budget_frac=float(
-                                  cfg.sac.link_budget_frac)),
+                                  cfg.sac.link_budget_frac),
+                              precision_weighted=bool(
+                                  cfg.sac.precision_weighted)),
                 self.sac.fabric, self.sac.entry_bytes,
                 n_layers=max(self.model.n_kv, 1), pipeline=self.pipeline)
         # per-layer hot-tier sizing: apportion the uniform total
-        # (device_buffer * n_layers) by the LayerSizer's windowed prior
+        # (device_buffer * n_layers) by the LayerSizer's windowed prior.
+        # resize_interval > 0 re-apportions ONLINE from the measured
+        # per-layer miss rates: the static allocation then carries
+        # headroom (2x the widest initial layer, capped at the total) so
+        # layers can grow past their initial share, and the resize-time
+        # LayerSizer gets that width as its hard per-layer cap.
         self.layer_sizing = (cfg.sac.layer_sizing if layer_sizing is None
                              else layer_sizing)
+        self.resize_interval = (int(cfg.sac.resize_interval)
+                                if self.device_buffer else 0)
         self.buffer_sizes: Optional[List[int]] = None
-        if self.device_buffer and self.layer_sizing != "uniform":
+        self.buffer_width: Optional[int] = None
+        self._sizer: Optional[LayerSizer] = None
+        if self.device_buffer and (self.layer_sizing != "uniform"
+                                   or self.resize_interval):
             n_kv = max(self.model.n_kv, 1)
+            total = self.device_buffer * n_kv
+            wins = (kv_layer_windows(cfg)
+                    if self.layer_sizing != "uniform" else None)
             self.buffer_sizes = LayerSizer(
-                n_kv, self.device_buffer * n_kv,
-                layer_windows=kv_layer_windows(cfg),
+                n_kv, total, layer_windows=wins,
                 topk=cfg.sac.topk).sizes()
+            if self.resize_interval:
+                self.buffer_width = resize_allocation_width(
+                    self.buffer_sizes, self.device_buffer)
+                self._sizer = LayerSizer(
+                    n_kv, total, layer_windows=wins, topk=cfg.sac.topk,
+                    max_slots=self.buffer_width)
 
         self._decode = jax.jit(self.model.decode)
         self._prefill_one = jax.jit(
@@ -249,11 +299,14 @@ class Engine:
         self._warm = jax.jit(self._warm_apply)
         self.state = self.model.init_serve_state(
             slots, max_ctx,
-            device_buffer=self.buffer_sizes or self.device_buffer)
+            device_buffer=self.buffer_sizes or self.device_buffer,
+            buffer_width=self.buffer_width)
         if self.device_buffer:
             n_kv = max(self.model.n_kv, 1)
             self.stats.layer_hits = np.zeros(n_kv)
             self.stats.layer_misses = np.zeros(n_kv)
+            # resize-interval snapshot of the cumulative layer counters
+            self._layer_mark = (np.zeros(n_kv), np.zeros(n_kv))
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_tokens: List[List[int]] = [[] for _ in range(slots)]
         self.queue: List[Request] = []
@@ -264,6 +317,21 @@ class Engine:
         assert req.context_len + req.output_len <= self.max_ctx, \
             "request exceeds engine max_ctx"
         self.queue.append(req)
+
+    def _interval_miss_rates(self) -> Optional[List[float]]:
+        """Per-layer miss rates of the CURRENT resize interval: deltas
+        of the cumulative layer counters against the snapshot taken at
+        the previous resize.  Layers with no reads this interval fall
+        back to rate 0 (the sizer's epsilon keeps them eligible)."""
+        if self.stats.layer_hits is None:
+            return None
+        hits = self.stats.layer_hits.copy()
+        misses = self.stats.layer_misses.copy()
+        mark_h, mark_m = self._layer_mark
+        self._layer_mark = (hits, misses)
+        dh, dm = hits - mark_h, misses - mark_m
+        return [float(m) / max(float(h + m), 1.0)
+                for h, m in zip(dh, dm)]
 
     # -- modeled step time --------------------------------------------------------
     def step_compute_s(self, batch: int) -> float:
@@ -317,6 +385,16 @@ class Engine:
                 plan = self.planner.warmup_plan(
                     None if warm_idx is None else warm_idx[:, 0],
                     matched, len(prompt))
+                if plan is not None and self.arbiter is not None:
+                    # warm-up arbitration: the prefill warm burst draws
+                    # from the same per-device link budget as decode
+                    # speculation — its hide window is the prefill
+                    # compute this burst rides behind
+                    w_cap = self.arbiter.grant_warmup(
+                        self.profile.prefill_s(len(prompt)),
+                        self._last_demand_s, req.pool_device,
+                        int(plan.idx.shape[1]))
+                    plan = cap_warmup(plan, w_cap)
                 if plan is not None:
                     hot, n_ins = self._warm(
                         self.state["hot_buf"], self.state["kv_pool"],
@@ -324,6 +402,11 @@ class Engine:
                     self.state["hot_buf"] = hot
                     n_ins = int(n_ins)
                     if n_ins:
+                        # deliberately UNkeyed: warm seeds cannot have
+                        # been demand-hit yet, so keying them would book
+                        # (n_ins, 0) against the request and tank its
+                        # precision right at its first grants — the
+                        # cold-start starvation the weighting must avoid
                         self.sac.traffic.record_prefetch(n_ins, 0)
                         self.sac.prefetch_fetch_time(
                             n_ins, device=req.pool_device)
@@ -403,13 +486,24 @@ class Engine:
         t_comp = self.step_compute_s(len(occupied))
         if self.arbiter is not None:
             # cross-request budget arbitration: last step's measured
-            # per-device demand backlog shapes this step's speculation
+            # per-device demand backlog shapes this step's speculation;
+            # with precision weighting on, each slot's measured prefetch
+            # precision (per-request TrafficStats attribution) tilts its
+            # share of the device budget
             dev_slots: Dict[int, List[int]] = {}
+            precision = None
+            if self.arbiter.cfg.precision_weighted:
+                precision = {}
             for s in occupied:
-                dev = self.sac.device_of(self.slot_req[s].request_id)
+                req = self.slot_req[s]
+                dev = self.sac.device_of(req.request_id)
                 dev_slots.setdefault(dev, []).append(s)
+                if precision is not None:
+                    precision[s] = self.stats.traffic.request_precision(
+                        req.request_id)
             self.last_grants = self.arbiter.grant(
-                t_comp, self._last_demand_s, dev_slots)
+                t_comp, self._last_demand_s, dev_slots,
+                precision=precision)
             budgets = np.zeros((self.slots,), np.int32)
             for s, w in self.last_grants.items():
                 budgets[s] = w
@@ -451,9 +545,12 @@ class Engine:
                     if self.prefetch:
                         # measured speculation outcomes (in-graph pf_*
                         # counters): issued entries cross the fabric as
-                        # prefetch traffic; useful ones were demand hits
-                        self.sac.traffic.record_prefetch(int(pf_ins[s]),
-                                                         int(pf_use[s]))
+                        # prefetch traffic; useful ones were demand hits.
+                        # Keyed by request so the arbiter's precision
+                        # weighting sees per-request precision.
+                        self.sac.traffic.record_prefetch(
+                            int(pf_ins[s]), int(pf_use[s]),
+                            key=req.request_id)
                         if int(pf_ins[s]):
                             self.sac.prefetch_fetch_time(int(pf_ins[s]),
                                                          device=dev)
@@ -475,9 +572,28 @@ class Engine:
             exposed = self.stats.traffic.fabric_time_s - issued0
         # arbiter feedback: snapshot this step's per-device demand-only
         # issued seconds (total minus prefetch) as next step's pressure
+        # (also the pressure_aware placer's live feed)
         cur = self.stats.traffic.device_demand_s()
         self._last_demand_s = [c - m for c, m in zip(cur, self._demand_mark)]
         self._demand_mark = cur
+        self.sac.note_pressure_update()
+        # online LayerSizer re-sizing: every resize_interval steps the
+        # measured per-layer miss rates re-apportion the hot tier by
+        # re-marking the DISABLED sentinels in place — displaced entries
+        # are evicted, resident ones survive, tokens never change.  The
+        # sizer consumes the rates of THIS interval (deltas against the
+        # last resize's snapshot), not lifetime averages — a lifetime
+        # signal goes stale after the first resize or a demand shift and
+        # the loop would stop adapting.
+        if (self._sizer is not None and self.resize_interval
+                and self.stats.steps % self.resize_interval == 0):
+            rates = self._interval_miss_rates()
+            new_sizes = self._sizer.sizes(rates)
+            if new_sizes != list(self.buffer_sizes):
+                self.state = dict(self.state)
+                self.state["hot_buf"] = hisparse.resize_layers(
+                    self.state["hot_buf"], new_sizes)
+                self.buffer_sizes = new_sizes
         self.clock_s += t_comp + exposed
         if now is None:
             now = self.clock_s
@@ -494,6 +610,9 @@ class Engine:
                 req.finish_s = now
                 finished.append(req)
                 self.sac.release(req.request_id)
+                # the per-request prefetch attribution is an arbitration
+                # signal, not a report — drop it with the request
+                self.stats.traffic.drop_request(req.request_id)
                 self.slot_req[s] = None
                 self.slot_tokens[s] = []
                 # reset this slot's cache length so the next request starts

@@ -104,6 +104,28 @@ class FetchPlanner:
         return WarmupPlan(idx=jnp.asarray(idx), valid=jnp.asarray(valid))
 
 
+def cap_warmup(plan: Optional[WarmupPlan], width: int
+               ) -> Optional[WarmupPlan]:
+    """Cap a warm-up plan at ``width`` valid lanes per layer.
+
+    The warm-up arbitration path (``BudgetArbiter.grant_warmup``): lanes
+    are kept best-first (score-based seeds precede the radix tail in the
+    plan), so a budget cut drops the least certain seeds first — the
+    exact analogue of ``dsa.budget_mask`` on decode speculation.  Returns
+    None when nothing survives (pure traffic shaping; skipping the warm
+    burst entirely never changes decoded tokens).
+    """
+    if plan is None or width >= plan.idx.shape[1]:
+        return plan
+    if width <= 0:
+        return None
+    keep = jnp.cumsum(plan.valid.astype(jnp.int32), axis=1) <= width
+    valid = plan.valid & keep
+    if not bool(np.asarray(valid).any()):
+        return None
+    return WarmupPlan(idx=plan.idx, valid=valid)
+
+
 # ---------------------------------------------------------------------------
 # analytic counterpart (serving/simulator.py)
 # ---------------------------------------------------------------------------

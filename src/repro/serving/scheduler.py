@@ -44,6 +44,17 @@ class Scheduler:
         self.local_bytes = 0.0
         self.hbm_bytes = 0.0
 
+    def set_pressure_fn(self, fn) -> None:
+        """Attach the live per-device link-pressure feed consumed by the
+        ``pressure_aware`` placement policy (core/placement.py) — the
+        simulator wires its per-step analytic demand seconds in here, the
+        same signal the engine feeds its own placer."""
+        self.placer.set_pressure_fn(fn)
+
+    def note_pressure_update(self) -> None:
+        """Mark the pressure feed re-measured (once per simulated step)."""
+        self.placer.note_pressure_update()
+
     # -- queueing --------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)

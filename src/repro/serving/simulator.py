@@ -54,7 +54,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.configs.base import ModelConfig
 from repro.core.traffic import FabricAccountant
 from repro.core.transfer import PipelineModel
-from repro.serving.arbiter import ArbiterConfig, BudgetArbiter
+from repro.serving.arbiter import (ArbiterConfig, BudgetArbiter, LayerSizer,
+                                   resize_allocation_width)
 from repro.serving.prefetch import analytic_prefetch, analytic_warmup
 from repro.serving.request import Request, summarize
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -184,6 +185,24 @@ def hit_rate(buf: int, topk: int, ctx: int, *, miss_base: float = 0.10,
     return max(0.0, 1.0 - min(miss, 1.0))
 
 
+def analytic_resize(sizes: List[int], topk: int, ctx_ref: float, *,
+                    device_buffer: int) -> List[int]:
+    """Analytic twin of the engine's online LayerSizer re-sizing.
+
+    The engine re-apportions the hot tier every ``resize_interval``
+    steps from the measured per-layer miss rates of that interval;
+    analytically those converge to the miss rates of the *current* sizes
+    at the trace's context mix, so the steady state is one LayerSizer
+    evaluation at that fixed point.  The hard per-layer cap is the SAME
+    ``resize_allocation_width`` formula the engine allocates with.
+    """
+    total = sum(sizes)
+    width = resize_allocation_width(sizes, device_buffer)
+    rates = [1.0 - hit_rate(s, topk, int(ctx_ref)) for s in sizes]
+    return LayerSizer(len(sizes), total, topk=topk,
+                      max_slots=width).sizes(rates)
+
+
 # ---------------------------------------------------------------------------
 # the simulator
 # ---------------------------------------------------------------------------
@@ -216,6 +235,17 @@ class SimConfig:
                                        # per-layer hot-tier sizes (the
                                        # LayerSizer apportioning); None =
                                        # uniform device_buffer per layer
+    placement: Optional[str] = None    # scheduler placement policy
+                                       # override; "pressure_aware" feeds
+                                       # the placer the analytic per-step
+                                       # demand seconds (the same signal
+                                       # the engine measures)
+    precision_weighted: bool = False   # arbiter grants split per request
+                                       # by analytic prefetch precision
+    resize_interval: int = 0           # > 0 models online LayerSizer
+                                       # re-sizing: layer sizes evaluated
+                                       # at the analytic miss-rate fixed
+                                       # point instead of the given prior
     round1: bool = False               # cold cache: prefill + write first
     prefill_concurrency: int = 8
     max_sim_s: float = 1e5
@@ -266,6 +296,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
         concurrency=sim.concurrency,
         n_pool_devices=backend.n_pool_devices,
         interleave=backend.interleave,
+        placement=sim.placement,
         pool_device_bytes=backend.local_dram_bytes / backend.n_pool_devices
         if backend.name != "hbm" else float("inf"),
         local_dram_bytes=(backend.local_dram_bytes if backend.prefetch
@@ -298,6 +329,11 @@ def simulate(reqs: List[Request], model: ModelProfile,
         # request's steady hit rate is the mean of per-layer hit rates at
         # each layer's own capacity
         sizes = list(sim.layer_buffer_sizes)
+        if sim.resize_interval:
+            sizes = analytic_resize(sizes, model.topk,
+                                    sum(r.context_len for r in reqs)
+                                    / max(len(reqs), 1),
+                                    device_buffer=sim.device_buffer)
         base_hit = {r.request_id:
                     sum(hit_rate(s, model.topk, r.context_len)
                         for s in sizes) / max(len(sizes), 1)
@@ -327,10 +363,14 @@ def simulate(reqs: List[Request], model: ModelProfile,
         arb = BudgetArbiter(
             ArbiterConfig(max_width=sim.prefetch_width,
                           min_width=sim.min_prefetch_width,
-                          link_budget_frac=sim.link_budget_frac),
+                          link_budget_frac=sim.link_budget_frac,
+                          precision_weighted=sim.precision_weighted),
             entry_s=model.entry_bytes / backend.fetch_bw_Bps,
             n_layers=model.n_attn_layers, pipeline=pipeline)
     last_demand_s = [0.0] * backend.n_pool_devices
+    # pressure_aware placement reads the live analytic demand seconds —
+    # the same per-link signal the engine feeds its own placer
+    sched.set_pressure_fn(lambda: last_demand_s)
     grant_sum = grant_n = 0
 
     # prefill warm-up's cold-start miss reduction: a request's FIRST
@@ -343,6 +383,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
                                precision=sim.warm_precision)
     warm_inserts = (min(sim.warmup_entries, sim.device_buffer)
                     * model.n_attn_layers if sim.warmup_entries else 0)
+    cold_hits_seen: List[float] = []
 
     def admit_ready(now: float):
         for r in sched.try_admit(now):
@@ -415,10 +456,20 @@ def simulate(reqs: List[Request], model: ModelProfile,
             grants = None
             if arb is not None:
                 dev_reqs: Dict[int, List[int]] = {}
+                precision = None
+                if arb.cfg.precision_weighted:
+                    # analytic per-request precision: the cumulative
+                    # prefetch attribution the accountant tracked (the
+                    # same TrafficStats signal the engine feeds)
+                    precision = {}
                 for r in decoding.values():
                     dev_reqs.setdefault(r.pool_device,
                                         []).append(r.request_id)
-                grants = arb.grant(t_comp, last_demand_s, dev_reqs)
+                    if precision is not None:
+                        precision[r.request_id] = \
+                            acct.stats.request_precision(r.request_id)
+                grants = arb.grant(t_comp, last_demand_s, dev_reqs,
+                                   precision=precision)
             demand_only = [0.0] * backend.n_pool_devices
             for r in decoding.values():
                 rid = r.request_id
@@ -427,22 +478,40 @@ def simulate(reqs: List[Request], model: ModelProfile,
                 if grants is not None:
                     grant_sum += w
                     grant_n += 1
-                if rid in cold:
-                    # first decode step: cold tier, warm-up seeds only
+                was_cold = rid in cold
+                if was_cold:
+                    # first decode step: cold tier, warm-up seeds only.
+                    # With the arbiter on, the warm burst drew from the
+                    # same link budget (grant_warmup) at prefill time
                     cold.discard(rid)
-                    h = cold_hit
-                    pf_n = float(warm_inserts)
+                    w_warm = sim.warmup_entries
+                    if arb is not None and w_warm:
+                        w_warm = arb.grant_warmup(
+                            model.prefill_s(r.context_len),
+                            last_demand_s, r.pool_device,
+                            min(w_warm, sim.device_buffer))
+                    h = (cold_hit if w_warm == sim.warmup_entries
+                         else analytic_warmup(w_warm, model.topk,
+                                              sim.device_buffer,
+                                              precision=sim.warm_precision))
+                    cold_hits_seen.append(h)
+                    pf_n = float(min(w_warm, sim.device_buffer)
+                                 * model.n_attn_layers
+                                 if w_warm else 0.0)
                     pf_u = min(h * step_topk, pf_n)
                 else:
                     h, pf_n, pf_u = pf_at(rid, w)
                 miss_b = step_topk * (1 - h) * model.entry_bytes
                 pf_b = pf_n * model.entry_bytes
                 acct.add_step_demand(r.pool_device, miss_b + pf_b)
-                demand_only[r.pool_device % backend.n_pool_devices] \
-                    += miss_b
+                demand_only[r.pool_device] += miss_b
                 acct.record_hits(h * step_topk, (1 - h) * step_topk)
                 if pf_n:
-                    acct.record_prefetch(pf_n, pf_u)
+                    # warm-up (cold step) stays UNkeyed like the engine:
+                    # keying the burst would tank a fresh request's
+                    # precision before its first real speculation
+                    acct.record_prefetch(pf_n, pf_u,
+                                         key=None if was_cold else rid)
                     acct.stats.prefetch_bytes += pf_b
             demand = acct.drain_step()
             bw = backend.fetch_bw_Bps
@@ -451,6 +520,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
             # arbiter feedback: this step's demand-only (non-speculative)
             # seconds per device are next step's link-pressure signal
             last_demand_s = [d / bw for d in demand_only]
+            sched.note_pressure_update()
             t_fetch = (max(demand) / bw + backend.fetch_base_s
                        + model.n_attn_layers * backend.layer_latency_s)
             # issued vs exposed: only the tail of the step's fetch that
@@ -482,6 +552,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
         for r in finished:
             decoding.pop(r.request_id, None)
             sched.finish(r)
+            acct.stats.drop_request(r.request_id)
             n_done += 1
 
     out = summarize(reqs)
@@ -493,7 +564,8 @@ def simulate(reqs: List[Request], model: ModelProfile,
                prefetched_entries=acct.stats.prefetched_entries,
                prefetch_useful=acct.stats.prefetch_useful,
                sim_hit_rate=acct.stats.hit_rate,
-               cold_hit_rate=cold_hit)
+               cold_hit_rate=(sum(cold_hits_seen) / len(cold_hits_seen)
+                              if cold_hits_seen else cold_hit))
     if arb is not None:
         out["arbiter_width_mean"] = (grant_sum / grant_n if grant_n
                                      else 0.0)

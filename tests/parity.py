@@ -72,6 +72,54 @@ def junk_prefetch(width: int):
     return fn
 
 
+def lane_drift_topk(periods):
+    """Per-lane drift: slot ``b`` re-points every ``periods[b]`` steps —
+    small periods churn fast (heavy misses, heavy link demand), large
+    periods are near-static.  The heterogeneous-pressure workload the
+    pressure-aware placer and precision-weighted grants act on.
+    Selections live on EVEN positions only, so the odd-position junk of
+    ``mixed_junk_prefetch`` is provably never demand-read."""
+    per = [int(p) for p in periods]
+
+    def fn(scores, cache_len):
+        B = scores.shape[0]
+        j = jnp.arange(K, dtype=jnp.int32)[None, :]
+        t = cache_len[:, None]
+        p = jnp.asarray((per + [T] * B)[:B], jnp.int32)[:, None]
+        pos = 2 * ((j * 7 + 131 * ((t + j) // p)) % (CTX // 2))
+        return pos.astype(jnp.int32), jnp.ones((B, K), bool)
+
+    return fn
+
+
+def mixed_junk_prefetch(width: int, bad_lanes, topk_fn=None):
+    """Per-slot speculation quality: good lanes speculate next step's
+    true selection and NOTHING else (lanes beyond K invalid — a bigger
+    grant cannot make them insert junk), bad lanes speculate junk across
+    the full width.  Under a budget cut bad slots therefore waste their
+    whole grant while good slots keep pure signal — the asymmetry
+    precision-weighted grants exist to exploit."""
+    tk = topk_fn or drift_topk
+    bad = set(int(b) for b in bad_lanes)
+
+    def fn(scores, cache_len):
+        B = scores.shape[0]
+        idx, _ = tk(scores, cache_len + 1)
+        j = jnp.arange(width - K, dtype=jnp.int32)[None, :]
+        t = cache_len[:, None]
+        # odd positions: disjoint from the even-only demand stream
+        junk = (2 * ((j * 17 + t * 13 + 37) % (CTX // 2)) + 1) \
+            .astype(jnp.int32)
+        good_idx = jnp.concatenate([idx, junk], axis=1)
+        bad_idx = jnp.concatenate([junk, idx], axis=1)
+        lane = jnp.arange(width, dtype=jnp.int32)[None, :]
+        is_bad = jnp.asarray([b in bad for b in range(B)])[:, None]
+        valid = jnp.where(is_bad, jnp.ones((B, width), bool), lane < K)
+        return jnp.where(is_bad, bad_idx, good_idx), valid
+
+    return fn
+
+
 def drift_requests(cfg, n=1, ctx=CTX, out=OUT, seed=5):
     return sharegpt_trace(n, context_len=ctx, output_len=out, seed=seed,
                           ctx_jitter=0.0, vocab=cfg.vocab)
@@ -82,6 +130,8 @@ def build_engine(buf: int, *, arch: str = "qwen2-1.5b",
                  overlap: Optional[bool] = None,
                  arbiter: Optional[bool] = None,
                  sac_overrides: Optional[Dict] = None,
+                 placement: Optional[str] = None,
+                 topk_fn=drift_topk,
                  slots: int = 1, seed: int = 0) -> Engine:
     """A reduced engine wired to the controlled drift top-k stream."""
     cfg = get_config(arch).reduced()
@@ -90,9 +140,10 @@ def build_engine(buf: int, *, arch: str = "qwen2-1.5b",
             cfg, sac=dataclasses.replace(cfg.sac, **sac_overrides))
     fn = drift_prefetch if prefetch_fn == "drift" else prefetch_fn
     return Engine(cfg, slots=slots, max_ctx=160, device_buffer=buf,
-                  topk_fn=drift_topk, prefetch=prefetch,
+                  topk_fn=topk_fn, prefetch=prefetch,
                   prefetch_fn=fn if prefetch else None,
-                  overlap=overlap, arbiter=arbiter, seed=seed)
+                  overlap=overlap, arbiter=arbiter,
+                  placement=placement, seed=seed)
 
 
 # the saturation-trace constants: hot tier strictly below the context so
@@ -116,6 +167,53 @@ def build_saturation_engine(*, arbiter: bool, min_width: int = K,
     return build_engine(SAT_BUF, prefetch=True,
                         prefetch_fn=junk_prefetch(SAT_WIDTH),
                         sac_overrides=sac, arbiter=arbiter, seed=seed)
+
+
+def mixed_requests(cfg, specs, seed: int = 5):
+    """Requests with per-request (ctx, out) shapes, re-id'd in order —
+    the heterogeneous trace the closed-loop fixtures decode."""
+    reqs = []
+    for i, (ctx, out) in enumerate(specs):
+        r = sharegpt_trace(1, context_len=ctx, output_len=out,
+                          seed=seed + i, ctx_jitter=0.0,
+                          vocab=cfg.vocab)[0]
+        r.request_id = i
+        reqs.append(r)
+    return reqs
+
+
+# the closed-loop saturation trace (ISSUE 4 acceptance): slot 0 churns
+# its top-k every HEAVY_PERIOD steps (heavy link demand, few pool bytes)
+# and speculates junk-first (bad precision); the other slots drift
+# slowly and speculate signal only.  Requests are shaped so a
+# pressure-blind placer parks the late request on the heavy slot's
+# device while a pressure-aware placer sees the live demand imbalance
+# and routes it away.  CLOSED_FRAC puts the reduced model's entry
+# budget between the floor and the full width so grants actually bind.
+HEAVY_PERIOD = 2
+CLOSED_FRAC = 800.0
+CLOSED_SPECS = [(40, 80),    # r0: few bytes, heavy churn, decodes long
+                (70, 80),    # r1: many bytes, light churn, decodes long
+                (40, 8),     # r2: finishes early, freeing its slot
+                (40, 20),    # r3: round-robin sends it to the idle link
+                (40, 40)]    # r4: placed mid-trace — the decision probed
+
+
+def build_closed_loop_engine(*, placement=None, precision_weighted=False,
+                             seed: int = 0) -> Engine:
+    """Saturation engine for the closed-loop comparison: heterogeneous
+    per-slot drift + mixed speculation quality, arbiter always on."""
+    periods = [HEAVY_PERIOD, T, T]
+    tk = lane_drift_topk(periods)
+    sac = dict(prefetch_width=SAT_WIDTH, overlap_frac=0.2,
+               warmup_entries=0, warmup_radix=0, min_prefetch_width=4,
+               link_budget_frac=CLOSED_FRAC,
+               precision_weighted=precision_weighted)
+    return build_engine(SAT_BUF, prefetch=True, slots=3,
+                       prefetch_fn=mixed_junk_prefetch(SAT_WIDTH, {0},
+                                                       topk_fn=tk),
+                       sac_overrides=sac, arbiter=True,
+                       placement=placement, topk_fn=tk, seed=seed)
 
 
 def run_to_completion(eng: Engine, reqs, *, max_steps: int = 300,

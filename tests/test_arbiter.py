@@ -15,10 +15,14 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from hypothesis_compat import given, settings, st
-from parity import (K, SAT_BUF, SAT_SAC, SAT_WIDTH, build_engine,
+from parity import (CLOSED_SPECS, K, SAT_BUF, SAT_SAC, SAT_WIDTH, T,
+                    build_closed_loop_engine, build_engine,
                     build_saturation_engine, drift_requests,
-                    junk_prefetch, run_to_completion)
+                    junk_prefetch, lane_drift_topk, mixed_junk_prefetch,
+                    mixed_requests, run_to_completion)
 
 from repro.configs import get_config
 from repro.core.transfer import PipelineModel
@@ -66,6 +70,61 @@ def test_grant_splits_headroom_across_requests():
     assert all(w == 250 for w in four.values())
 
 
+def test_grant_spends_remainder_largest_share_first():
+    """ISSUE 4 bugfix: PR 3 floor-divided the device budget and silently
+    dropped up to n_rids*n_layers - 1 entries of headroom; the remainder
+    is now distributed one width unit at a time, largest share first."""
+    # hide window = 1e-3 s, entry_s 1e-4 -> 10 entries, 1 layer: 10 width
+    # units over 3 requests must come out (4, 3, 3), not (3, 3, 3)
+    arb = _arbiter(max_width=100, min_width=0, entry_s=1e-4, n_layers=1,
+                   overlap=1.0, depth=2, frac=1.0)
+    grants = arb.grant(1e-3, [0.0], {0: ["a", "b", "c"]})
+    assert sorted(grants.values(), reverse=True) == [4, 3, 3]
+    assert sum(grants.values()) == 10          # the full budget is spent
+
+
+def test_grant_precision_weighted_shifts_width():
+    """With precision weighting on, a device's width budget tilts toward
+    the precise speculator; without the flag precision input is ignored."""
+    prec = {"good": 0.9, "bad": 0.0}
+    uni = _arbiter(max_width=100, entry_s=1e-4, n_layers=1, overlap=1.0)
+    g_uni = uni.grant(1e-3, [0.0], {0: ["good", "bad"]}, precision=prec)
+    assert g_uni["good"] == g_uni["bad"] == 5
+    warb = BudgetArbiter(
+        ArbiterConfig(max_width=100, precision_weighted=True),
+        entry_s=1e-4, n_layers=1,
+        pipeline=PipelineModel(depth=2, overlap_frac=1.0))
+    g_w = warb.grant(1e-3, [0.0], {0: ["good", "bad"]}, precision=prec)
+    assert g_w["good"] > g_w["bad"]
+    assert g_w["good"] + g_w["bad"] <= 10      # budget still respected
+
+
+def test_grant_raises_on_out_of_range_device():
+    """ISSUE 4 bugfix: ``dev % len(demand_s)`` silently charged the
+    wrong link's budget; the arbiter now raises on a bad device id."""
+    arb = _arbiter()
+    with pytest.raises(ValueError):
+        arb.grant(1e-3, [0.0, 0.0], {2: ["a"]})
+    with pytest.raises(ValueError):
+        arb.grant(1e-3, [0.0], {-1: ["a"]})
+    # empty demand (no accounting yet) still grants optimistically
+    assert arb.grant(1e-3, [], {3: ["a"]})["a"] == 64
+
+
+def test_grant_warmup_caps_by_headroom():
+    """Warm-up bursts draw from the same link budget: ample headroom
+    passes the plan through, a saturated link cuts it to the floor."""
+    arb = _arbiter(max_width=64, min_width=4, entry_s=1e-4, n_layers=1,
+                   overlap=1.0)
+    assert arb.grant_warmup(1e-3, [0.0], 0, 8) == 8      # 10 fit, 8 asked
+    assert arb.grant_warmup(1e-3, [0.0], 0, 100) == 10   # capped at fit
+    assert arb.grant_warmup(1e-3, [10.0], 0, 100) == 4   # saturated: floor
+    assert arb.grant_warmup(1e-3, [10.0], 0, 2) == 2     # floor <= width
+    assert arb.grant_warmup(1e-3, [0.0], 0, 0) == 0
+    with pytest.raises(ValueError):
+        arb.grant_warmup(1e-3, [0.0], 5, 8)
+
+
 @settings(max_examples=80, deadline=None)
 @given(st.data())
 def test_property_grants_bounded_and_respect_link_budget(data):
@@ -99,6 +158,12 @@ def test_property_grants_bounded_and_respect_link_budget(data):
             spend = sum(grants[r] for r in rids) * n_layers * arb.entry_s
             headroom = max(arb.link_budget_s(compute_s) - demand[d], 0.0)
             assert spend <= headroom + 1e-9, (spend, headroom)
+            # no remainder dropped: the whole width budget is spent
+            # (up to the per-request caps)
+            total_w = int(arb.device_entry_budget(compute_s, demand[d])
+                          // n_layers)
+            assert sum(grants[r] for r in rids) \
+                == min(total_w, len(rids) * max_w)
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +245,31 @@ def test_layer_sizer_sum_invariant_when_all_capped():
     assert sum(sizer.sizes()) == 64
 
 
+def test_layer_sizer_surplus_rotates_by_weight():
+    """ISSUE 4 bugfix: the all-capped surplus used to round-robin from
+    layer 0 every call, biasing early layers regardless of pressure; it
+    now rotates in descending weight order, so the heaviest-missing
+    layer collects the odd unit."""
+    sizer = LayerSizer(2, 13, layer_windows=[4, 4], topk=16)
+    # caps [4, 4] hold 8; surplus 5 spreads 3:2 toward the heavy layer
+    assert sizer.sizes(miss_rates=[0.1, 0.9]) == [6, 7]
+    assert sizer.sizes(miss_rates=[0.9, 0.1]) == [7, 6]
+    assert sum(sizer.sizes(miss_rates=[0.5, 0.5])) == 13
+
+
+def test_layer_sizer_max_slots_is_a_hard_cap():
+    """``max_slots`` (the static allocation width) survives even the
+    past-window-caps surplus spread; the sum invariant still holds."""
+    sizer = LayerSizer(4, 4 * 16, layer_windows=[4, 4, 4, 4], topk=16,
+                       max_slots=32)
+    sizes = sizer.sizes()
+    assert sum(sizes) == 64 and max(sizes) <= 32
+    sizes = sizer.sizes(miss_rates=[1.0, 0.0, 0.0, 0.0])
+    assert sum(sizes) == 64 and max(sizes) <= 32
+    with pytest.raises(AssertionError):
+        LayerSizer(2, 64, max_slots=16)        # infeasible: 64 > 2*16
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.data())
 def test_property_layer_sizer_sums_and_bounds(data):
@@ -188,7 +278,9 @@ def test_property_layer_sizer_sums_and_bounds(data):
     wins = [data.draw(st.sampled_from([0, 0, 4, 16, 64]))
             for _ in range(n)]
     topk = data.draw(st.integers(1, 64))
-    sizer = LayerSizer(n, n * per, layer_windows=wins, topk=topk)
+    max_slots = data.draw(st.sampled_from([None, per, 2 * per]))
+    sizer = LayerSizer(n, n * per, layer_windows=wins, topk=topk,
+                       max_slots=max_slots)
     rates = None
     if data.draw(st.booleans()):
         rates = [data.draw(st.floats(0.0, 1.0)) for _ in range(n)]
@@ -196,6 +288,8 @@ def test_property_layer_sizer_sums_and_bounds(data):
     assert len(sizes) == n
     assert sum(sizes) == n * per
     assert all(s >= 1 for s in sizes)
+    if max_slots is not None:
+        assert all(s <= max_slots for s in sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -262,6 +356,106 @@ def test_property_arbiter_bit_identity_random_configs(data):
             eng.step()
         streams.append([t[:] for t in eng.slot_tokens])
     assert streams[0] == streams[1]
+
+
+# ---------------------------------------------------------------------------
+# the closed loop (ISSUE 4): placement, precision weighting, warm-up
+# ---------------------------------------------------------------------------
+
+
+def test_closed_loop_beats_pr3_uniform_grants_on_saturation_trace():
+    """ISSUE 4 acceptance: on the heterogeneous saturation trace,
+    pressure-aware placement + precision-weighted grants reduce exposed
+    fabric seconds vs PR 3's pressure-blind placement + uniform grants,
+    at no loss of buffer hit rate."""
+    runs = {}
+    for closed in (False, True):
+        eng = build_closed_loop_engine(
+            placement="pressure_aware" if closed else None,
+            precision_weighted=closed)
+        reqs = mixed_requests(eng.cfg, CLOSED_SPECS)
+        run_to_completion(eng, reqs)
+        runs[closed] = (eng, reqs)
+    (pr3, pr3_reqs), (closed, closed_reqs) = runs[False], runs[True]
+    assert closed.stats.exposed_fabric_s < pr3.stats.exposed_fabric_s
+    assert closed.stats.hit_rate >= pr3.stats.hit_rate - 0.02
+    # the late request was routed off the heavy-churn request's link
+    heavy_dev = pr3_reqs[0].pool_device
+    assert pr3_reqs[-1].pool_device == heavy_dev
+    assert closed_reqs[-1].pool_device != heavy_dev
+
+
+def test_precision_weighted_grants_starve_the_junk_speculator():
+    """Two co-located requests, one speculating signal, one junk: the
+    weighted split shifts width to the precise one — less issued junk,
+    HIGHER hit rate (the good slot keeps its churn coverage), better
+    precision.  Uniform grants split the same budget evenly and lose."""
+    runs = {}
+    for weighted in (False, True):
+        tk = lane_drift_topk([2, T])
+        sac = dict(prefetch_width=SAT_WIDTH, overlap_frac=0.2,
+                   warmup_entries=0, warmup_radix=0, min_prefetch_width=0,
+                   link_budget_frac=1600.0, precision_weighted=weighted)
+        eng = build_engine(SAT_BUF, prefetch=True, slots=2,
+                           prefetch_fn=mixed_junk_prefetch(
+                               SAT_WIDTH, {0}, topk_fn=tk),
+                           sac_overrides=sac, arbiter=True,
+                           placement="first_fit", topk_fn=tk)
+        run_to_completion(eng, mixed_requests(eng.cfg,
+                                              [(40, 60), (40, 60)]))
+        runs[weighted] = eng
+    uni, wtd = runs[False], runs[True]
+    assert wtd.stats.exposed_fabric_s < uni.stats.exposed_fabric_s
+    assert wtd.stats.hit_rate > uni.stats.hit_rate
+    assert wtd.stats.prefetch_precision > uni.stats.prefetch_precision
+    # the junk slot's grant collapsed, the signal slot kept its width
+    assert wtd.last_grants[0] < wtd.last_grants[1]
+    assert uni.last_grants[0] in (uni.last_grants[1],
+                                  uni.last_grants[1] + 1)
+
+
+def test_warmup_bursts_draw_from_the_link_budget():
+    """With the arbiter on and a zero link budget, prefill warm-up is
+    cut to nothing (it rides the same budget as speculation); with an
+    ample budget the full plan goes through — tokens identical either
+    way (warm-up is pure traffic shaping)."""
+    sac = dict(SAT_SAC, warmup_entries=8, warmup_radix=4,
+               min_prefetch_width=0)
+    pf = {}
+    for frac in (0.0, 1e6):
+        eng = build_engine(SAT_BUF, prefetch=True,
+                           prefetch_fn=junk_prefetch(SAT_WIDTH),
+                           sac_overrides=dict(sac, link_budget_frac=frac),
+                           arbiter=True)
+        for r in drift_requests(eng.cfg, out=6):
+            eng.submit(r)
+        eng.step()                      # fills the slot: warm-up happens
+        pf[frac] = (eng.stats.prefetched_entries,
+                    [t[:] for t in eng.slot_tokens])
+    assert pf[0.0][0] < pf[1e6][0]      # zero budget cut the warm burst
+    assert pf[0.0][1] == pf[1e6][1]     # decoded tokens unchanged
+
+
+def test_tokens_bit_identical_closed_loop_on_off():
+    """The whole closed loop — pressure-aware placement, precision
+    weighting, online resizing, warm-up arbitration — changes traffic
+    and timing, never decoded tokens."""
+    streams = {}
+    for closed in (False, True):
+        cfg_over = dict(SAT_SAC, min_prefetch_width=4)
+        if closed:
+            cfg_over.update(precision_weighted=True, resize_interval=3)
+        eng = build_engine(SAT_BUF, prefetch=True, slots=3,
+                           prefetch_fn=junk_prefetch(SAT_WIDTH),
+                           sac_overrides=cfg_over,
+                           arbiter=closed or None,
+                           placement="pressure_aware" if closed else None)
+        for r in drift_requests(eng.cfg, n=3, out=25):
+            eng.submit(r)
+        for _ in range(12):
+            eng.step()
+        streams[closed] = [t[:] for t in eng.slot_tokens]
+    assert streams[False] == streams[True]
 
 
 def test_engine_grants_track_link_budget_knob():

@@ -163,3 +163,86 @@ def test_hit_rate_grounding():
     real = hits / (hits + misses)
     modeled = model_hit(buf, k, 32768)
     assert abs(real - modeled) < 0.12, (real, modeled)
+
+
+# ---------------------------------------------------------------------------
+# online re-sizing (ISSUE 4: hisparse.resize_layers)
+# ---------------------------------------------------------------------------
+
+
+def _layered_consistent(state):
+    L, B = state.slot_pos.shape[:2]
+    for layer in range(L):
+        _consistent(hisparse.BufferState(*(t[layer] for t in state)))
+
+
+def test_resize_layers_grow_shrink_preserves_residents():
+    st = hisparse.init_layered_buffer(2, 1, [4, 2], 16, 3, buf_max=6)
+    idx = jnp.array([[0, 1, 2], [3, 4, 5]], jnp.int32)
+    vals = jnp.ones((2, 3, 3), jnp.bfloat16)
+    st, ins = hisparse.warm_lane(st, 0, idx, vals, jnp.ones((2, 3), bool))
+    assert int(ins) == 5                       # layer 1 capped at 2 slots
+    st2 = hisparse.resize_layers(st, [2, 5])
+    _layered_consistent(st2)
+    sp = np.asarray(st2.slot_pos)[:, 0]
+    pt = np.asarray(st2.page_table)[:, 0]
+    # layer 0 shrank: slots 0-1 keep their positions, 2+ disabled and
+    # their position unmapped
+    assert sp[0].tolist() == [0, 1, -2, -2, -2, -2]
+    assert pt[0][2] == -1
+    # layer 1 grew: residents kept, new slots open EMPTY
+    assert sp[1].tolist() == [3, 4, -1, -1, -1, -2]
+    assert pt[1][3] == 0 and pt[1][4] == 1
+    # entries in surviving slots are untouched
+    np.testing.assert_array_equal(
+        np.asarray(st2.entries[:, 0, :2], np.float32),
+        np.asarray(st.entries[:, 0, :2], np.float32))
+
+
+def test_resize_layers_roundtrip_restores_capacity_not_residency():
+    st = hisparse.init_layered_buffer(1, 2, [4], 8, 2)
+    idx = jnp.array([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+    vals = jnp.ones((2, 4, 2), jnp.bfloat16)
+    st, _, _ = hisparse.swap_in(
+        hisparse.BufferState(*(t[0] for t in st)), idx, vals,
+        jnp.ones((2, 4), bool))
+    st = hisparse.BufferState(*(t[None] for t in st))
+    shrunk = hisparse.resize_layers(st, [1])
+    back = hisparse.resize_layers(shrunk, [4])
+    _layered_consistent(back)
+    sp = np.asarray(back.slot_pos)[0]
+    # capacity restored, but the evicted residents are honestly gone
+    assert (sp >= -1).all()
+    assert (sp >= 0).sum() == 2                # one survivor per lane
+
+
+def test_resize_layers_read_through_stays_bit_identical():
+    """After an arbitrary resize, demand reads still return pool values
+    exactly — displaced entries just miss (traffic, not tokens)."""
+    B, S, d = 2, 12, 4
+    st = hisparse.init_layered_buffer(1, B, [6], S, d)
+    pool = _pool(B, S, d)
+    rng = np.random.default_rng(3)
+    flat = hisparse.BufferState(*(t[0] for t in st))
+    for step in range(8):
+        idx = jnp.asarray(rng.integers(0, S, (B, 4)), jnp.int32)
+        fetched = jax.vmap(lambda p, i: p[i])(pool, idx)
+        vals, flat, _, _ = hisparse.read_through(
+            flat, idx, fetched, jnp.ones((B, 4), bool))
+        np.testing.assert_array_equal(np.asarray(vals, np.float32),
+                                      np.asarray(fetched, np.float32))
+        if step == 3:
+            layered = hisparse.BufferState(*(t[None] for t in flat))
+            layered = hisparse.resize_layers(layered, [3])
+            _layered_consistent(layered)
+            flat = hisparse.BufferState(*(t[0] for t in layered))
+
+
+def test_init_layered_buffer_buf_max_headroom():
+    st = hisparse.init_layered_buffer(2, 1, [4, 2], 8, 3, buf_max=7)
+    assert st.entries.shape[2] == 7
+    sp = np.asarray(st.slot_pos)[:, 0]
+    assert (sp[0] == -1).sum() == 4 and (sp[0] == -2).sum() == 3
+    assert (sp[1] == -1).sum() == 2 and (sp[1] == -2).sum() == 5
+    with pytest.raises(AssertionError):
+        hisparse.init_layered_buffer(1, 1, [4], 8, 3, buf_max=2)

@@ -138,6 +138,97 @@ def test_sacsystem_and_scheduler_placement_agree(policy):
         _agree_one_seed(seed, policy)
 
 
+# ---- pressure-aware placement (ISSUE 4 closed loop) ----
+
+def test_pressure_aware_prefers_low_pressure_link():
+    pressure = [0.9, 0.1, 0.5]
+    p = Placer(3, policy="pressure_aware", pressure_fn=lambda: pressure)
+    assert p.place(0) == 1
+    # the in-flight correction books one average request's pressure on
+    # device 1; with a fresh snapshot device 1 wins again
+    pressure = [0.9, 0.1, 0.6]
+    assert p.place(1) == 1
+
+
+def test_pressure_aware_degrades_to_least_loaded_without_feed():
+    a = Placer(3, policy="pressure_aware")
+    b = Placer(3, policy="least_loaded")
+    for i, n_bytes in enumerate([100.0, 10.0, 10.0, 5.0, 1.0]):
+        assert a.place(i, n_bytes=n_bytes) == b.place(i, n_bytes=n_bytes)
+
+
+def test_pressure_aware_in_flight_correction_prevents_herding():
+    """Several placements against one stale snapshot must not all herd
+    onto the same device: each booking charges its device one average
+    request's pressure, so the next placement sees the previous one."""
+    p = Placer(2, policy="pressure_aware", pressure_fn=lambda: [0.2, 0.4])
+    assert p.place(0, n_bytes=1.0) == 0
+    # same stale snapshot, but d0 is now corrected by one average
+    # request (sum(pressure)/1 active = 0.6): 0.8 > 0.4 -> spill to d1
+    assert p.place(1, n_bytes=1.0) == 1
+    # corrected: d0 = 0.2 + 0.3, d1 = 0.4 + 0.3 -> back to d0
+    assert p.place(2, n_bytes=1.0) == 0
+
+
+def test_pressure_epoch_resets_correction_on_equal_readings():
+    """A fresh measurement that EQUALS the previous one is still fresh:
+    ``note_pressure_update`` (called once per engine/simulator step)
+    resets the in-flight correction, so steady-state traces that repeat
+    pressure values exactly do not accumulate synthetic load that the
+    new reading already includes."""
+    p = Placer(2, policy="pressure_aware", pressure_fn=lambda: [0.2, 0.4])
+    assert p.place(0, n_bytes=1.0) == 0
+    # without an epoch bump the stale-snapshot correction spills to d1
+    assert p.place(1, n_bytes=1.0) == 1
+    # re-measured (same values): correction resets, d0 wins again
+    p.note_pressure_update()
+    assert p.place(2, n_bytes=1.0) == 0
+
+
+def test_pressure_feed_reaches_sacsystem_and_scheduler():
+    cfg = get_config("qwen2-1.5b").reduced()
+    feed = [5.0, 0.0]
+    sac = SACSystem(cfg, n_pool_devices=2, placement="pressure_aware")
+    sac.set_pressure_fn(lambda: feed)
+    assert sac.place(0, 16).device == 1
+    sched = Scheduler(SchedulerConfig(n_pool_devices=2,
+                                      placement="pressure_aware",
+                                      bytes_per_token=1.0))
+    sched.set_pressure_fn(lambda: feed)
+    sched.submit(Request(0, 0.0, 16, 4))
+    assert sched.try_admit(0.0)[0].pool_device == 1
+
+
+def test_pressure_aware_never_violates_capacity():
+    """ISSUE 4 satellite: pressure ordering NEVER overrides the byte and
+    page budgets — a full device is skipped no matter how idle its link
+    looks (seeded random pressures, sizes, and releases)."""
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        n_dev = int(rng.integers(2, 5))
+        cap_b, cap_p = float(rng.integers(50, 200)), int(rng.integers(3, 9))
+        pressure = [0.0] * n_dev
+        p = Placer(n_dev, policy="pressure_aware", capacity_bytes=cap_b,
+                   capacity_pages=cap_p, pressure_fn=lambda: pressure)
+        live = []
+        for i in range(120):
+            pressure = list(rng.random(n_dev))
+            if live and rng.random() < 0.3:
+                p.release(live.pop(int(rng.integers(len(live)))))
+            nb = float(rng.integers(1, 60))
+            npg = int(rng.integers(0, 4))
+            dev = p.place(i, n_bytes=nb, n_pages=npg)
+            if dev is not None:
+                live.append(i)
+            else:
+                # refused only because NO device fits
+                assert not any(p.fits(d, nb, npg)
+                               for d in range(n_dev)), (trial, i)
+            for d in range(n_dev):
+                assert p.bytes_used[d] <= cap_b + 1e-9
+                assert p.pages_used[d] <= cap_p
+
+
 def test_round_robin_imbalance_bounded():
     """Admission-only round-robin keeps per-device load imbalance <= 1
     (the paper's §4.3.3 link-balancing property), for any device count

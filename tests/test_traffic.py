@@ -1,0 +1,121 @@
+"""Shared traffic substrate (core/traffic.py): device-id validation at
+the accounting boundary and per-request prefetch attribution.
+
+ISSUE 4 regression: the pre-PR 4 accountant aliased out-of-range device
+ids with ``dev % n_devices``, silently charging (and later reading) the
+WRONG link's budget — the arbiter and the pressure-aware placer would
+then act on a corrupted per-link signal.  The boundary now clamps once,
+counts the anomaly, and everything downstream indexes directly; the
+OverlapQueue below the boundary raises instead of aliasing.
+"""
+import pytest
+
+from repro.core.traffic import FabricAccountant, OverlapQueue, TrafficStats
+from repro.core.transfer import FABRICS, PipelineModel
+
+
+def _acct(n_devices=2, overlap=False):
+    acct = FabricAccountant(FABRICS["cxl"], n_devices=n_devices)
+    if overlap:
+        acct.enable_overlap(PipelineModel(depth=2, overlap_frac=0.5))
+    return acct
+
+
+# ---------------------------------------------------------------------------
+# device-id validation
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_range_device_is_clamped_and_counted():
+    acct = _acct(n_devices=2)
+    acct.sparse_fetch(4, 128, device=7)        # would alias to dev 1 via %
+    assert acct.stats.device_anomalies == 1
+    # clamped to the LAST device (nearest valid), not dev 7 % 2
+    assert acct.stats.device_issued_s[1] > 0
+    assert acct.stats.device_issued_s[0] == 0.0
+    acct.bulk_fetch(1024.0, device=-3)
+    acct.write_back(1024.0, device=5)
+    acct.add_step_demand(9, 100.0)
+    assert acct.stats.device_anomalies == 4
+    # negative ids clamp to device 0
+    assert acct.stats.device_demand_bytes[0] > 0
+
+
+def test_in_range_devices_never_count_anomalies():
+    acct = _acct(n_devices=3)
+    for d in range(3):
+        acct.sparse_fetch(2, 64, device=d)
+        acct.write_back(64.0, device=d)
+        acct.add_step_demand(d, 10.0)
+    assert acct.stats.device_anomalies == 0
+    assert all(t > 0 for t in acct.stats.device_issued_s)
+
+
+def test_prefetch_fetch_charges_the_clamped_device_consistently():
+    """The prefetch split must land on the SAME (clamped) device as the
+    issued seconds, or device_demand_s() would go negative on one link
+    and overcount another."""
+    acct = _acct(n_devices=2)
+    acct.prefetch_fetch(8, 256, device=11)
+    demand = acct.stats.device_demand_s()
+    assert all(d >= -1e-12 for d in demand)
+    assert acct.stats.device_prefetch_s[1] == acct.stats.device_issued_s[1]
+
+
+def test_overlap_queue_raises_below_the_boundary():
+    q = OverlapQueue(2, PipelineModel())
+    with pytest.raises(IndexError):
+        q.issue(2, 1.0)
+    with pytest.raises(IndexError):
+        q.issue(-1, 1.0)
+    q.issue(1, 1.0)
+    assert q.pending_s == 1.0
+
+
+def test_overlap_path_books_clamped_device():
+    """With overlap on, a clamped id must reach the queue as a VALID id
+    (the boundary clamps before ``_book_time``)."""
+    acct = _acct(n_devices=2, overlap=True)
+    acct.sparse_fetch(4, 128, device=99)
+    assert acct.stats.device_anomalies == 1
+    assert acct.overlap.pending_s > 0
+
+
+# ---------------------------------------------------------------------------
+# per-request prefetch attribution (precision-weighted grants)
+# ---------------------------------------------------------------------------
+
+
+def test_record_prefetch_attributes_per_request():
+    acct = _acct()
+    acct.record_prefetch(10, 2, key="a")
+    acct.record_prefetch(5, 5, key="b")
+    acct.record_prefetch(3, 1)                 # unkeyed: totals only
+    s = acct.stats
+    assert s.prefetched_entries == 18 and s.prefetch_useful == 8
+    assert s.request_pf["a"] == [10.0, 2.0]
+    assert s.request_pf["b"] == [5.0, 5.0]
+    assert set(s.request_pf) == {"a", "b"}
+
+
+def test_request_precision_smoothed_toward_prior():
+    s = TrafficStats()
+    # no data: the optimistic prior
+    assert s.request_precision("fresh") == 1.0
+    s.request_pf["junk"] = [400.0, 0.0]
+    assert s.request_precision("junk") < 0.05
+    s.request_pf["good"] = [20.0, 18.0]
+    assert s.request_precision("good") > 0.8
+    # a single unlucky insert must NOT collapse to zero (cold-start
+    # starvation guard): smoothing keeps it near the prior
+    s.request_pf["young"] = [1.0, 0.0]
+    assert s.request_precision("young") > 0.5
+
+
+def test_drop_request_forgets_attribution():
+    s = TrafficStats()
+    s.request_pf["a"] = [10.0, 2.0]
+    s.drop_request("a")
+    s.drop_request("a")                        # idempotent
+    assert "a" not in s.request_pf
+    assert s.request_precision("a") == 1.0
