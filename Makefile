@@ -2,9 +2,10 @@
 #
 #   make test        tier-1 suite (the ROADMAP verify command)
 #   make test-fast   substrate + engine-buffer slice (quick signal)
-#   make bench-smoke reduced buffer + prefetch + arbiter + placement
-#                    sweeps; writes BENCH_prefetch.json +
-#                    BENCH_arbiter.json + BENCH_placement.json (CI artifacts)
+#   make bench-smoke reduced buffer + prefetch + arbiter + placement +
+#                    locality sweeps; writes BENCH_prefetch.json +
+#                    BENCH_arbiter.json + BENCH_placement.json +
+#                    BENCH_locality.json (CI artifacts)
 #   make deps        install runtime + test dependencies
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -25,6 +26,7 @@ bench-smoke:
 	python -m benchmarks.prefetch_sweep --quick
 	python -m benchmarks.arbiter_sweep --quick
 	python -m benchmarks.placement_sweep --quick
+	python -m benchmarks.locality_sweep --quick
 
 deps:
 	pip install -r requirements.txt

@@ -1,0 +1,97 @@
+"""Prefix-locality ablation: radix_affinity vs pressure_aware on CXL.
+
+Beyond-paper sweep (PR 5, serving/radix.py + core/placement.py): on a
+shared-prefix workload (system prompts, few-shot templates — requests
+reuse a cached prompt prefix with probability ``REUSE_P``) the radix
+prefix cache only pays off when placement puts a reusing request on the
+device that HOLDS its cached prefix: reuse there skips the matched
+tokens' prefill recompute and their pool write (a device-local copy),
+while off-device the prefix would cross two fabric links and is
+recomputed instead.
+
+``pressure_aware`` balances link pressure but scatters prefix groups
+across devices (every reuse is a coin flip); ``radix_affinity`` weighs
+the locality benefit (saved prefill + write seconds) against the live
+pressure gap, capacity always winning.  Reported per cell: TTFT, prefill
+write bytes, reused prefix tokens, and hit rate — the acceptance claim
+is lower write bytes and TTFT at no hit-rate loss.
+
+Writes a ``BENCH_locality.json`` artifact (the `make bench-smoke` / CI
+contract): one row per (concurrency, policy) cell.
+"""
+import argparse
+import json
+
+from benchmarks.common import PAPER_MODEL, model_profile
+from repro.serving.request import shared_prefix_trace
+from repro.serving.simulator import SimConfig, default_backends, simulate
+
+CONCURRENCIES = (16, 32, 64)
+PREFIX = 32768      # shared system-prompt / few-shot template tokens
+SUFFIX = 8192       # private per-request tail
+OUT_LEN = 256
+REUSE_P = 0.75      # fraction of arrivals reusing a live prefix group
+BUFFER = 2048
+OVERLAP = 0.3
+
+
+def run(csv=None, quick=False, out_json="BENCH_locality.json"):
+    concs = CONCURRENCIES[:2] if quick else CONCURRENCIES
+    model = model_profile()
+    backend = default_backends()["cxl"]
+    print("\n== Locality sweep: pressure_aware vs radix_affinity (CXL, "
+          f"shared-prefix reuse_p={REUSE_P}) ==")
+    rows = []
+    for conc in concs:
+        n = conc * (3 if quick else 5)
+        cells = {}
+        for policy in ("pressure_aware", "radix_affinity"):
+            reqs = shared_prefix_trace(
+                n, prefix_len=PREFIX, suffix_len=SUFFIX,
+                output_len=OUT_LEN, reuse_p=REUSE_P, seed=1)
+            radix = policy == "radix_affinity"
+            r = simulate(reqs, model, backend,
+                         SimConfig(concurrency=conc, round1=True,
+                                   overlap_frac=OVERLAP,
+                                   device_buffer=BUFFER,
+                                   radix_affinity=radix,
+                                   placement=None if radix
+                                   else "pressure_aware"))
+            cells[policy] = r
+            rows.append(dict(
+                concurrency=conc, placement=policy,
+                ttft_mean_s=r["ttft_mean_s"],
+                bytes_written=r["bytes_written"],
+                radix_hit_tokens=r["radix_hit_tokens"],
+                throughput_tok_s=r["throughput_tok_s"],
+                exposed_fabric_s=r["exposed_fabric_s"],
+                hit_rate=r["sim_hit_rate"]))
+        pa, ra = cells["pressure_aware"], cells["radix_affinity"]
+        wr_cut = 1 - ra["bytes_written"] / max(pa["bytes_written"], 1e-9)
+        ttft_cut = 1 - ra["ttft_mean_s"] / max(pa["ttft_mean_s"], 1e-12)
+        print(f"conc={conc:>4}  ttft {pa['ttft_mean_s']:.2f}s -> "
+              f"{ra['ttft_mean_s']:.2f}s ({ttft_cut*100:+.1f}%)  "
+              f"written {pa['bytes_written']:.2e} -> "
+              f"{ra['bytes_written']:.2e} ({wr_cut*100:+.1f}%)  "
+              f"reused {ra['radix_hit_tokens']:.0f} tok  "
+              f"hit {pa['sim_hit_rate']:.3f}/{ra['sim_hit_rate']:.3f}")
+        if csv is not None:
+            csv.add(f"locality/conc{conc}", 0.0,
+                    f"ttft_cut={ttft_cut*100:+.1f}% "
+                    f"write_cut={wr_cut*100:+.1f}%")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"model": PAPER_MODEL, "backend": "cxl",
+                       "prefix_len": PREFIX, "suffix_len": SUFFIX,
+                       "reuse_p": REUSE_P, "device_buffer": BUFFER,
+                       "quick": quick, "rows": rows}, f, indent=2)
+        print(f"wrote {out_json} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_locality.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out_json=args.json)

@@ -70,6 +70,22 @@ class SACConfig:
     resize_interval: int = 0         # decode steps between online LayerSizer
                                      # re-apportionings of the hot tier from
                                      # measured per-layer miss rates (0=off)
+    resize_epsilon: float = 0.0      # resize hysteresis: skip the online
+                                     # re-apportioning when no layer's
+                                     # per-interval miss rate moved by more
+                                     # than this since the last sizer
+                                     # EVALUATION (skipped intervals keep
+                                     # the reference, so slow drift
+                                     # accumulates until it crosses the
+                                     # epsilon; 0 = re-evaluate every
+                                     # interval, the PR 4 behavior)
+
+    # --- PR 5: radix prefix cache lifecycle (serving/radix.py) ---
+    radix_headroom_frac: float = 0.05
+                                     # pool free-page fraction per device
+                                     # below which request finish evicts
+                                     # LRU cached prefixes (0 = only evict
+                                     # when placement actually fails)
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,15 @@ answers "which device should this request's KV live on" under a pluggable
     requests on the device whose fabric link has the most headroom,
     breaking pressure ties by booked bytes (the least-loaded key).
     Without a feed it degrades exactly to ``least_loaded``.
+  - ``radix_affinity`` — pressure-aware *plus* prefix locality (the
+    PR 5 closed loop): a request whose prompt prefix is cached on some
+    device (serving/radix.py) passes that device as an ``affinity``
+    hint together with the fabric/compute seconds reuse would save
+    (skipped re-prefill + skipped pool write of the matched pages).
+    The hint device wins whenever its corrected pressure is within the
+    saved seconds of the best link — locality-first tiering, but a
+    slammed link still repels the request.  Capacity ALWAYS wins: the
+    hint only reorders candidates, never overrides the byte/page fit.
 
 The paper stores one request's KV entirely within a single device; the
 placer decides *which* device, the caller owns the page/byte payloads.
@@ -54,6 +63,13 @@ class PlacementPolicy:
 
     def on_commit(self, placer: "Placer", device: int) -> None:
         """Called after a successful placement on ``device``."""
+
+    def on_departure(self, placer: "Placer", device: int,
+                     seconds: float) -> None:
+        """Called when a request finishes: its own measured demand share
+        (``seconds``) just left ``device``'s link.  Pressure-keyed
+        policies subtract it immediately instead of waiting for the EMA
+        to decay (no-op for pressure-blind policies)."""
 
 
 class RoundRobinPolicy(PlacementPolicy):
@@ -118,6 +134,12 @@ class PressureAwarePolicy(PlacementPolicy):
         self._snapshot = None          # (epoch, values) of the last reset
         self._ema: List[float] = []
         self._placed_since: List[int] = []
+        # EMA of departed requests' measured per-step shares: the
+        # in-flight correction's per-request estimate when the live
+        # signal cannot provide one (right after a synchronized finish
+        # wave the feed is near zero and sum(ema)/active collapses —
+        # without this floor an admission burst would herd)
+        self._dep_share = 0.0
 
     def _corrected(self, placer: "Placer") -> List[float]:
         pressure = placer.device_pressure()
@@ -139,6 +161,7 @@ class PressureAwarePolicy(PlacementPolicy):
             self._placed_since = [0] * placer.n_devices
         active = sum(placer.counts)
         per_req = sum(self._ema) / active if active else 0.0
+        per_req = max(per_req, self._dep_share)
         return [p + per_req * n
                 for p, n in zip(self._ema, self._placed_since)]
 
@@ -152,12 +175,63 @@ class PressureAwarePolicy(PlacementPolicy):
         if device < len(self._placed_since):
             self._placed_since[device] += 1
 
+    def on_departure(self, placer: "Placer", device: int,
+                     seconds: float) -> None:
+        """A finishing request's own demand share leaves its link NOW:
+        subtract it from the smoothed pressure instead of letting the
+        EMA decay it over the next several snapshots (during which new
+        requests would still see the departed load and avoid a link
+        that is actually free).  The share also updates the per-request
+        estimate the in-flight correction falls back on."""
+        if seconds <= 0:
+            return
+        b = self.ema_beta
+        self._dep_share = (b * self._dep_share + (1 - b) * seconds
+                           if self._dep_share else seconds)
+        if 0 <= device < len(self._ema):
+            self._ema[device] = max(0.0, self._ema[device] - seconds)
+
+
+class RadixAffinityPolicy(PressureAwarePolicy):
+    """Prefix locality weighed against live link pressure (paper §A.3 +
+    the "Unifying Sparse Attention with Hierarchical Memory"
+    locality-first resolution): order devices by corrected pressure as
+    ``pressure_aware`` does, but when the caller supplied an affinity
+    hint — the device holding the request's radix-cached prefix, plus
+    the seconds reuse there would save — promote that device to the
+    front IF its pressure is within the saved seconds of the best
+    candidate.  Reuse off-device is worthless (the pages cannot be read
+    without crossing two links), so the comparison is exactly
+    "locality benefit vs extra link exposure".  Capacity still always
+    wins: ``Placer.place`` books the first *fitting* device in order.
+    Without a hint (or without a pressure feed) the policy degrades to
+    its parent."""
+
+    name = "radix_affinity"
+
+    def order(self, placer: "Placer") -> List[int]:
+        pressure = self._corrected(placer)
+        ordered = sorted(range(placer.n_devices),
+                         key=lambda d: (pressure[d], placer.bytes_used[d],
+                                        placer.pages_used[d], d))
+        hint = placer.affinity_hint
+        if hint is None:
+            return ordered
+        dev, bonus_s = hint
+        if not 0 <= dev < placer.n_devices:
+            return ordered
+        if pressure[dev] <= pressure[ordered[0]] + max(bonus_s, 0.0):
+            ordered.remove(dev)
+            ordered.insert(0, dev)
+        return ordered
+
 
 POLICIES = {
     "round_robin": RoundRobinPolicy,
     "first_fit": FirstFitPolicy,
     "least_loaded": LeastLoadedPolicy,
     "pressure_aware": PressureAwarePolicy,
+    "radix_affinity": RadixAffinityPolicy,
 }
 
 
@@ -209,6 +283,9 @@ class Placer:
         self._bookings: Dict[int, _Booking] = {}
         self._pressure_fn = pressure_fn
         self.pressure_epoch = 0
+        # transient per-placement hint (radix_affinity): set by place()
+        # for the duration of the policy's order() call only
+        self.affinity_hint: Optional[tuple] = None
 
     # -- live link-pressure feed (pressure_aware policy) -------------------
     def set_pressure_fn(self,
@@ -245,12 +322,25 @@ class Placer:
                 and self.pages_used[device] + n_pages <= self.capacity_pages)
 
     def place(self, request_id: int, *, n_bytes: float = 0.0,
-              n_pages: int = 0) -> Optional[int]:
+              n_pages: int = 0, affinity: Optional[int] = None,
+              affinity_s: float = 0.0) -> Optional[int]:
         """Book ``request_id`` on the first policy-ordered device with
-        room; returns the device or None if every device is full."""
+        room; returns the device or None if every device is full.
+
+        ``affinity``/``affinity_s`` (radix_affinity policy): the device
+        holding the request's cached prefix and the seconds reuse there
+        would save.  Pressure-blind policies ignore the hint; no policy
+        may use it to override capacity — it only reorders candidates.
+        """
         assert request_id not in self._bookings, \
             f"request {request_id} already placed"
-        for dev in self.policy.order(self):
+        self.affinity_hint = ((affinity, affinity_s)
+                              if affinity is not None else None)
+        try:
+            order = self.policy.order(self)
+        finally:
+            self.affinity_hint = None
+        for dev in order:
             if self.fits(dev, n_bytes, n_pages):
                 self.bytes_used[dev] += n_bytes
                 self.pages_used[dev] += n_pages
@@ -259,6 +349,23 @@ class Placer:
                 self.policy.on_commit(self, dev)
                 return dev
         return None
+
+    def adjust(self, device: int, *, n_bytes: float = 0.0,
+               n_pages: int = 0) -> None:
+        """Raw occupancy adjustment for non-request residents — the
+        radix cache's retained prefix pages (core/sac.py) keep charging
+        the device's byte/page budgets after their request's booking is
+        gone, and are credited back when the index evicts them."""
+        assert 0 <= device < self.n_devices, device
+        self.bytes_used[device] = max(0.0, self.bytes_used[device] + n_bytes)
+        self.pages_used[device] = max(0, self.pages_used[device] + n_pages)
+
+    def note_departure(self, device: int, seconds: float) -> None:
+        """Report a finished request's own measured demand share so
+        pressure-keyed policies can subtract it from their smoothed
+        per-link signal immediately (serving layers call this alongside
+        their own pressure-feed correction at finish time)."""
+        self.policy.on_departure(self, device, seconds)
 
     def release(self, request_id: int) -> Optional[int]:
         """Undo a booking; returns the device it lived on (None if unknown)."""

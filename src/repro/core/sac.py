@@ -191,6 +191,16 @@ class SACSystem:
     (one implementation for engine, scheduler, and simulator); traffic is
     charged to the shared :class:`~repro.core.traffic.FabricAccountant`
     whose ``TrafficStats`` the engine exposes directly.
+
+    With a radix index attached (``attach_radix``, serving/radix.py) the
+    system also owns the cached-prefix page lifecycle: ``release`` can
+    retain a finished request's prefix pages under radix ownership
+    (still booked against the device's byte/page budgets via
+    ``Placer.adjust``), ``radix_evict`` returns evicted prefixes' pages
+    to the allocator, ``place`` evicts LRU prefixes when the pool is
+    exhausted, and every page ``release`` actually frees is purged from
+    the index — the allocator and the index can never disagree about a
+    page (the PR 5 stale-page property, tests/test_radix.py).
     """
 
     def __init__(self, cfg: ModelConfig, *, backend: str = "cxl",
@@ -218,6 +228,16 @@ class SACSystem:
                                         n_devices=n_pool_devices)
         self.directory = PageDirectory()
         self.requests: Dict[int, RequestPages] = {}
+        # radix prefix cache ownership: the index (attach_radix) plus the
+        # per-device set of page ids the CACHE owns — retained at request
+        # finish, returned to the allocator only when the index evicts or
+        # invalidates them.  Pages backing LIVE requests never enter this
+        # set (their booking still owns them).
+        self.radix = None
+        self._radix_pages = [set() for _ in range(n_pool_devices)]
+        self.radix_evicted_pages = 0     # cumulative cache pages returned
+                                         # to the allocator (place-time
+                                         # pressure + headroom evictions)
 
     # -- placement ---------------------------------------------------------
     def set_pressure_fn(self, fn) -> None:
@@ -230,15 +250,35 @@ class SACSystem:
         engine step) so its in-flight correction resets."""
         self.placer.note_pressure_update()
 
-    def place(self, request_id: int, n_tokens: int) -> Optional[RequestPages]:
+    def attach_radix(self, radix) -> None:
+        """Hand the system the radix prefix index whose page lifecycle it
+        owns (duck-typed ``RadixIndex``; the engine builds one, the
+        lifecycle tests drive the pair directly)."""
+        self.radix = radix
+
+    def place(self, request_id: int, n_tokens: int, *,
+              affinity: Optional[int] = None, affinity_s: float = 0.0
+              ) -> Optional[RequestPages]:
         """Allocate pool pages for a request on one device (paper stores a
         request's KV within a single device; the shared placer interleaves
-        requests across devices)."""
+        requests across devices).
+
+        ``affinity``/``affinity_s`` thread a radix-matched prefix's
+        device (and the seconds reuse there saves) to the placement
+        policy.  Under pool page pressure, unpinned LRU cached prefixes
+        are evicted until the request fits or nothing is evictable.
+        """
         n_pages = pages_for_tokens(n_tokens, self.page_tokens)
-        dev = self.placer.place(request_id, n_pages=n_pages,
-                                n_bytes=n_pages * self.page_bytes)
-        if dev is None:
-            return None
+        n_bytes = n_pages * self.page_bytes
+        while True:
+            dev = self.placer.place(request_id, n_pages=n_pages,
+                                    n_bytes=n_bytes, affinity=affinity,
+                                    affinity_s=affinity_s)
+            if dev is not None:
+                break
+            if self.radix is None or not self._evict_for_fit(
+                    n_bytes, n_pages):
+                return None      # genuinely full: nothing left to evict
         pages = self.allocator.alloc(dev, n_pages)
         assert pages is not None, \
             "placer and allocator page budgets diverged"
@@ -248,14 +288,153 @@ class SACSystem:
             self.directory.publish(request_id, pno, dev, page)
         return rp
 
-    def release(self, request_id: int):
+    def release(self, request_id: int, *, keep_pages: int = 0) -> int:
+        """Free a finished request's pool pages.
+
+        ``keep_pages`` > 0 retains the request's first that-many pages
+        (the radix-registered prefix) under cache ownership instead of
+        freeing them: the allocator keeps them allocated, the device's
+        byte/page budgets keep charging them (``Placer.adjust``), and
+        they return to the pool only through ``radix_evict``.  Every
+        page actually freed is purged from the attached index in the
+        same motion — the index can never advertise a freed page.
+        Returns the number of pages retained (0 on unknown requests).
+        """
         rp = self.requests.pop(request_id, None)
         if rp is None:
-            return
+            return 0
         self.placer.release(request_id)
-        self.allocator.release(rp.device, rp.pages)
+        keep = max(0, min(int(keep_pages), len(rp.pages)))
+        kept: list = []
+        if self.radix is not None:
+            # purge the freed tail FIRST: any node referencing one of
+            # those pages loses its whole payload (a partially-freed
+            # prefix is unreadable), which may un-register pages inside
+            # the keep range too — retention is node-granular, so only
+            # pages a surviving node still references are retained
+            if keep < len(rp.pages):
+                self.radix.invalidate_pages(rp.device, rp.pages[keep:])
+            kept = [p for p in rp.pages[:keep]
+                    if self.radix.owns(rp.device, p)]
+        kept_set = set(kept)
+        freed = [p for p in rp.pages if p not in kept_set]
+        if kept:
+            self.placer.adjust(rp.device, n_bytes=len(kept) * self.page_bytes,
+                               n_pages=len(kept))
+            self._radix_pages[rp.device].update(kept)
+        if freed:
+            self.allocator.release(rp.device, freed)
         for pno in range(len(rp.pages)):
             self.directory.unpublish(request_id, pno)
+        return len(kept)
+
+    # -- radix page lifecycle ----------------------------------------------
+    def _reclaim(self, evicted) -> int:
+        """Return evicted prefixes' CACHE-OWNED pages to the allocator.
+        Pages still backing a live request — possible when a caller
+        inserted without retaining — are dropped from the index but
+        stay allocated (the request's own release frees them)."""
+        n_freed = 0
+        for dev, pages in evicted:
+            if not 0 <= dev < self.n_devices:
+                continue
+            owned = [p for p in pages if p in self._radix_pages[dev]]
+            if not owned:
+                continue
+            self._radix_pages[dev].difference_update(owned)
+            self.allocator.release(dev, owned)
+            self.placer.adjust(dev, n_bytes=-len(owned) * self.page_bytes,
+                               n_pages=-len(owned))
+            n_freed += len(owned)
+        self.radix_evicted_pages += n_freed
+        return n_freed
+
+    def radix_evict(self, n_leaves: int = 1,
+                    device: Optional[int] = None) -> int:
+        """Evict up to ``n_leaves`` unpinned LRU cached prefixes
+        (optionally restricted to one device) and reclaim their
+        cache-owned pages.  Returns pages freed — note a 0 can also
+        mean the victims' pages were live-request-backed; loops that
+        need a 'nothing left to evict' signal must check the index
+        (``evict_lru`` returning empty), as ``_evict_for_fit`` and
+        ``evict_to_headroom`` do."""
+        if self.radix is None:
+            return 0
+        return self._reclaim(self.radix.evict_lru(n_leaves, device=device))
+
+    def _evictable_pages(self, device: int) -> int:
+        """Cache-owned pages on ``device`` whose backing node is
+        unpinned — what eviction can actually reclaim.  Pinned copies
+        (a live request is reusing them) and live-request-backed pages
+        must not count toward 'freeing the cache would fit it', or the
+        feasibility guard drains unpinned prefixes for nothing."""
+        held = self._radix_pages[device]
+        if not held or self.radix is None:
+            return 0
+        return sum(1 for (d, p), node in self.radix.cached_pages().items()
+                   if d == device and node.refs == 0 and p in held)
+
+    def _evict_for_fit(self, n_bytes: float, n_pages: int) -> bool:
+        """Placement-pressure eviction: free cached prefixes ONLY on a
+        device whose EVICTABLE cache pages would actually make the
+        request fit — a global LRU walk would drain healthy devices'
+        caches without unblocking anything.  Evicts until that device
+        fits the request (the caller retries placement); returns False
+        when no device can be helped."""
+        for dev in range(self.n_devices):
+            evictable = self._evictable_pages(dev)
+            if not evictable:
+                continue
+            if not (self.placer.pages_used[dev] - evictable + n_pages
+                    <= self.placer.capacity_pages
+                    and self.placer.bytes_used[dev]
+                    - evictable * self.page_bytes + n_bytes
+                    <= self.placer.capacity_bytes):
+                continue        # even a fully-drained cache won't fit it
+            reclaimed = 0
+            while (self.placer.pages_used[dev] + n_pages
+                   > self.placer.capacity_pages
+                   or self.placer.bytes_used[dev] + n_bytes
+                   > self.placer.capacity_bytes):
+                evicted = self.radix.evict_lru(4, device=dev)
+                if not evicted:
+                    break       # remaining copies are pinned
+                reclaimed += self._reclaim(evicted)
+            if reclaimed:
+                return True
+        return False
+
+    def radix_held_pages(self, device: Optional[int] = None) -> int:
+        """Pages currently owned by the prefix cache (one device or all)."""
+        if device is not None:
+            return len(self._radix_pages[device])
+        return sum(len(s) for s in self._radix_pages)
+
+    def evict_to_headroom(self, frac: float) -> int:
+        """Evict LRU cached prefixes until every device keeps at least
+        ``frac`` of its pages free (finish-time pool pressure relief) —
+        victims come from the PRESSURED device only.  Returns total
+        pages freed; stops when nothing there is evictable."""
+        if self.radix is None or frac <= 0:
+            return 0
+        total = 0
+        for dev in range(self.n_devices):
+            while (self.allocator.free_pages(dev)
+                   < frac * self.allocator.pages_per_device
+                   and self._radix_pages[dev]):
+                # batched victims: one tree walk reclaims several
+                # prefixes, instead of a full rescan per node
+                evicted = self.radix.evict_lru(4, device=dev)
+                if not evicted:
+                    break
+                total += self._reclaim(evicted)
+        return total
+
+    def note_departure(self, device: int, seconds: float) -> None:
+        """Forward a finished request's measured demand share to the
+        placer's pressure-keyed policies (core/placement.py)."""
+        if 0 <= device < self.n_devices:
+            self.placer.note_departure(device, seconds)
 
     # -- fabric accounting (delegates to the shared accountant) ------------
     @property
@@ -267,10 +446,10 @@ class SACSystem:
         return self.traffic.stats.bytes_written
 
     def sparse_fetch_time(self, n_entries: int, *, device: int = 0,
-                          contention: float = 1.0) -> float:
+                          contention: float = 1.0, key=None) -> float:
         return self.traffic.sparse_fetch(n_entries, self.entry_bytes,
                                          device=device,
-                                         contention=contention)
+                                         contention=contention, key=key)
 
     def prefetch_fetch_time(self, n_entries: int, *, device: int = 0,
                             contention: float = 1.0) -> float:
@@ -287,10 +466,10 @@ class SACSystem:
                                        contention=contention)
 
     def write_back_time(self, n_tokens: int, *, device: int = 0,
-                        contention: float = 1.0) -> float:
+                        contention: float = 1.0, key=None) -> float:
         n_bytes = n_tokens * self.entry_bytes * max(self.cfg.n_attn_layers, 1)
         return self.traffic.write_back(n_bytes, device=device,
-                                       contention=contention)
+                                       contention=contention, key=key)
 
     def device_of(self, request_id: int) -> int:
         rp = self.requests.get(request_id)

@@ -59,6 +59,13 @@ class TrafficStats:
         default_factory=dict)       # per-request [inserted, useful]
                                     # prefetch attribution — the arbiter's
                                     # precision-weighting signal
+    request_demand_s: Dict[Hashable, float] = dataclasses.field(
+        default_factory=dict)       # per-request issued DEMAND seconds
+                                    # (misses + writes, never prefetch) —
+                                    # lets the pressure feed subtract a
+                                    # finishing request's own share from
+                                    # its link immediately instead of
+                                    # waiting for the EMA to decay it
 
     def __post_init__(self):
         if not self.device_demand_bytes:
@@ -113,9 +120,11 @@ class TrafficStats:
         return (use + pseudo * prior) / (ins + pseudo)
 
     def drop_request(self, key: Hashable) -> None:
-        """Forget a finished request's prefetch attribution (the key —
-        an engine slot or a request id — is about to be reused)."""
+        """Forget a finished request's prefetch and demand attribution
+        (the key — an engine slot or a request id — is about to be
+        reused)."""
         self.request_pf.pop(key, None)
+        self.request_demand_s.pop(key, None)
 
 
 class OverlapQueue:
@@ -231,10 +240,24 @@ class FabricAccountant:
         self.stats.device_anomalies += 1
         return min(max(device, 0), self.n_devices - 1)
 
+    def _attribute_demand(self, key: Optional[Hashable], t: float) -> None:
+        """Book issued DEMAND seconds against one request (never called
+        on the prefetch path — speculation is not the request's demand
+        share and must not be subtracted from its link at departure)."""
+        if key is not None and t > 0:
+            self.stats.request_demand_s[key] = \
+                self.stats.request_demand_s.get(key, 0.0) + t
+
     # -- timed ops (engine / SACSystem) ------------------------------------
     def sparse_fetch(self, n_entries: int, entry_bytes: int, *,
-                     device: int = 0, contention: float = 1.0) -> float:
-        """Fine-grained fetch of ``n_entries`` discrete entries."""
+                     device: int = 0, contention: float = 1.0,
+                     key: Optional[Hashable] = None) -> float:
+        """Fine-grained fetch of ``n_entries`` discrete entries.
+
+        ``key`` attributes the issued seconds to one request
+        (``TrafficStats.request_demand_s``) — the per-request demand
+        share the pressure feed subtracts when that request departs.
+        """
         if n_entries <= 0:
             return 0.0
         assert self.fabric is not None, "timed ops need a fabric model"
@@ -247,6 +270,7 @@ class FabricAccountant:
         self.stats.device_demand_bytes[device] += n_bytes
         self.stats.fabric_time_s += t
         self.stats.device_issued_s[device] += t
+        self._attribute_demand(key, t)
         self._book_time(t, device)
         return t
 
@@ -264,7 +288,8 @@ class FabricAccountant:
         return t
 
     def bulk_fetch(self, n_bytes: float, *, device: int = 0,
-                   contention: float = 1.0) -> float:
+                   contention: float = 1.0,
+                   key: Optional[Hashable] = None) -> float:
         """Streaming fetch of a contiguous region (full-prefetch path)."""
         if n_bytes <= 0:
             return 0.0
@@ -275,11 +300,13 @@ class FabricAccountant:
         self.stats.device_demand_bytes[device] += n_bytes
         self.stats.fabric_time_s += t
         self.stats.device_issued_s[device] += t
+        self._attribute_demand(key, t)
         self._book_time(t, device)
         return t
 
     def write_back(self, n_bytes: float, *, device: int = 0,
-                   contention: float = 1.0) -> float:
+                   contention: float = 1.0,
+                   key: Optional[Hashable] = None) -> float:
         """Pool write (prefill bulk write / decode write-back).
 
         ``device`` matters for the arbiter's per-link demand signal: a
@@ -293,6 +320,7 @@ class FabricAccountant:
         self.stats.bytes_written += n_bytes
         self.stats.fabric_time_s += t
         self.stats.device_issued_s[device] += t
+        self._attribute_demand(key, t)
         self._book_time(t, device)
         return t
 

@@ -42,10 +42,21 @@ def main():
                          "(LayerSizer; default cfg.sac.layer_sizing)")
     ap.add_argument("--placement", default=None,
                     choices=["round_robin", "first_fit", "least_loaded",
-                             "pressure_aware"],
+                             "pressure_aware", "radix_affinity"],
                     help="pool placement policy (core/placement.py); "
                          "pressure_aware lands new requests on the "
-                         "least-pressured fabric link")
+                         "least-pressured fabric link, radix_affinity "
+                         "additionally weighs prefix locality (a cached "
+                         "prompt prefix's device) against that pressure")
+    ap.add_argument("--no-radix", action="store_true",
+                    help="disable the radix prefix cache entirely "
+                         "(serving/radix.py; the A/B baseline for "
+                         "prefix-locality wins)")
+    ap.add_argument("--resize-epsilon", type=float, default=None,
+                    help="resize hysteresis: skip the online LayerSizer "
+                         "re-apportioning when no layer's per-interval "
+                         "miss rate moved more than this (default "
+                         "cfg.sac.resize_epsilon)")
     ap.add_argument("--precision-weighted", action="store_true",
                     help="split each device's arbiter grant budget by "
                          "measured per-request prefetch precision "
@@ -54,6 +65,14 @@ def main():
                     help="decode steps between online LayerSizer "
                          "re-apportionings of the hot tier from "
                          "measured per-layer miss rates (0 = off)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="shared-prefix workload: requests share their "
+                         "first N prompt tokens with probability "
+                         "--reuse-p (the radix prefix cache's regime; "
+                         "0 = independent ShareGPT-style prompts)")
+    ap.add_argument("--reuse-p", type=float, default=0.7,
+                    help="prefix-group reuse probability for "
+                         "--shared-prefix traces")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -61,7 +80,7 @@ def main():
 
     from repro.configs import get_config
     from repro.serving.engine import Engine
-    from repro.serving.request import sharegpt_trace
+    from repro.serving.request import shared_prefix_trace, sharegpt_trace
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -75,11 +94,14 @@ def main():
         # it would be a silent no-op
         print("--arbiter implies --prefetch: enabling the fetch pipeline")
         args.prefetch = True
-    if args.precision_weighted or args.resize_interval:
+    if (args.precision_weighted or args.resize_interval
+            or args.resize_epsilon is not None):
+        overrides = dict(precision_weighted=args.precision_weighted,
+                         resize_interval=args.resize_interval)
+        if args.resize_epsilon is not None:
+            overrides["resize_epsilon"] = args.resize_epsilon
         cfg = dataclasses.replace(
-            cfg, sac=dataclasses.replace(
-                cfg.sac, precision_weighted=args.precision_weighted,
-                resize_interval=args.resize_interval))
+            cfg, sac=dataclasses.replace(cfg.sac, **overrides))
     if cfg.enc_dec:
         raise SystemExit("serve driver targets decoder-only archs; "
                          "whisper decode is exercised in tests")
@@ -90,10 +112,20 @@ def main():
                  prefetch=args.prefetch,
                  arbiter=args.arbiter or None,
                  layer_sizing=args.layer_sizing,
-                 placement=args.placement)
-    reqs = sharegpt_trace(args.requests, context_len=args.ctx,
-                          output_len=args.out_len, seed=args.seed,
-                          ctx_jitter=0.0, vocab=cfg.vocab)
+                 placement=args.placement,
+                 radix=not args.no_radix)
+    if args.shared_prefix:
+        if args.shared_prefix >= args.ctx:
+            raise SystemExit("--shared-prefix must be below --ctx")
+        reqs = shared_prefix_trace(
+            args.requests, prefix_len=args.shared_prefix,
+            suffix_len=args.ctx - args.shared_prefix,
+            output_len=args.out_len, reuse_p=args.reuse_p,
+            seed=args.seed, vocab=cfg.vocab)
+    else:
+        reqs = sharegpt_trace(args.requests, context_len=args.ctx,
+                              output_len=args.out_len, seed=args.seed,
+                              ctx_jitter=0.0, vocab=cfg.vocab)
     out = eng.run(reqs)
     out["buffer_hit_rate"] = eng.stats.hit_rate
     print(json.dumps({k: (round(v, 5) if isinstance(v, float) else v)

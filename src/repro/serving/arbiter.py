@@ -40,9 +40,81 @@ LayerSizer re-apportions ONLINE from measured miss rates
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Hashable, List, Mapping, Optional, Sequence
+from typing import Dict, Hashable, Iterable, List, Mapping, Optional, \
+    Sequence
 
+from repro.core.traffic import TrafficStats
 from repro.core.transfer import FabricModel, PipelineModel
+
+
+class DemandTracker:
+    """Per-step demand deltas, per LINK and per REQUEST, with departure
+    subtraction — the conditioning stage of the arbiter's (and the
+    pressure-aware placer's) feedback signal.
+
+    The raw counters (``TrafficStats.device_demand_s`` and the PR 5
+    ``request_demand_s``) are cumulative; the control loops want *this
+    step's* demand.  Before PR 5 the engine kept only the per-device
+    deltas, so when a request finished, its share lingered in the link's
+    signal until the policy EMA decayed it — several steps of placement
+    and grants against load that had already left.  The tracker keeps
+    the per-request split too, so ``depart`` can subtract a finishing
+    request's own last-step share from its link immediately.
+
+    Two feeding modes, one ``depart``:
+
+      - :meth:`observe` (engine): snapshot cumulative stats each step;
+      - :meth:`set_step` (simulator): the analytic per-step seconds are
+        computed directly, no cumulative counters needed.
+    """
+
+    def __init__(self, n_devices: int):
+        self.n_devices = max(int(n_devices), 1)
+        self.last_demand_s: List[float] = [0.0] * self.n_devices
+        self._dev_mark: List[float] = [0.0] * self.n_devices
+        self._req_mark: Dict[Hashable, float] = {}
+        self._req_last: Dict[Hashable, float] = {}
+
+    def observe(self, stats: TrafficStats, keys: Iterable[Hashable]
+                ) -> List[float]:
+        """Engine mode: fold this step's cumulative counters into fresh
+        per-device and per-request deltas.  ``keys`` are the requests
+        live this step (their attribution is snapshotted; others keep
+        their last known share for a late ``depart``)."""
+        cur = stats.device_demand_s()
+        cur = (list(cur) + [0.0] * self.n_devices)[:self.n_devices]
+        self.last_demand_s = [c - m for c, m in zip(cur, self._dev_mark)]
+        self._dev_mark = cur
+        for k in keys:
+            cum = stats.request_demand_s.get(k, 0.0)
+            self._req_last[k] = cum - self._req_mark.get(k, 0.0)
+            self._req_mark[k] = cum
+        return list(self.last_demand_s)
+
+    def set_step(self, demand_s: Sequence[float],
+                 request_shares: Optional[Mapping[Hashable, float]] = None
+                 ) -> List[float]:
+        """Simulator mode: this step's per-device demand seconds (and
+        optionally each request's own share of them) were computed
+        analytically — install them directly."""
+        d = [max(float(x), 0.0) for x in demand_s]
+        self.last_demand_s = (d + [0.0] * self.n_devices)[:self.n_devices]
+        if request_shares is not None:
+            for k, s in request_shares.items():
+                self._req_last[k] = float(s)
+        return list(self.last_demand_s)
+
+    def depart(self, key: Hashable, device: int) -> float:
+        """A request finished: drop its attribution and subtract its own
+        last-step demand share from its link's live signal.  Returns the
+        share subtracted (0 for unknown keys/devices)."""
+        share = self._req_last.pop(key, 0.0)
+        self._req_mark.pop(key, None)
+        if not 0 <= device < self.n_devices or share <= 0:
+            return 0.0
+        self.last_demand_s[device] = max(
+            0.0, self.last_demand_s[device] - share)
+        return share
 
 
 @dataclasses.dataclass(frozen=True)

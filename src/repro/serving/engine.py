@@ -51,7 +51,8 @@ from repro.core.traffic import TrafficStats
 from repro.core.transfer import PipelineModel
 from repro.models.model import build_model
 from repro.models.transformer import kv_layer_windows
-from repro.serving.arbiter import (ArbiterConfig, BudgetArbiter, LayerSizer,
+from repro.serving.arbiter import (ArbiterConfig, BudgetArbiter,
+                                   DemandTracker, LayerSizer,
                                    resize_allocation_width)
 from repro.serving.prefetch import FetchPlanner, cap_warmup
 from repro.serving.radix import RadixIndex
@@ -66,7 +67,17 @@ class EngineStats:
 
     steps: int = 0
     tokens: int = 0
-    radix_hit_tokens: int = 0
+    radix_hit_tokens: int = 0       # PAGE-GRANULAR tokens whose prefill
+                                    # compute + pool write were skipped
+                                    # because the prefix was cached on
+                                    # the request's own pool device
+    radix_hit_requests: int = 0     # requests with a same-device hit
+    radix_evicted_pages: int = 0    # cached-prefix pages returned to the
+                                    # pool under page pressure
+    resizes: int = 0                # online LayerSizer re-apportionings
+                                    # actually applied
+    resize_skips: int = 0           # intervals skipped by the hysteresis
+                                    # epsilon (rates barely moved)
     traffic: TrafficStats = dataclasses.field(default_factory=TrafficStats)
     # measured per-layer hot-tier outcomes ([L] arrays, accumulated per
     # step) — the LayerSizer's miss-rate signal (serving/arbiter.py)
@@ -182,6 +193,18 @@ class Engine:
 
     All four change traffic and timing only — decoded tokens are
     bit-identical with every knob on or off.
+
+    PR 5 makes the radix prefix cache request-lifetime-correct and
+    closes the prefix-locality loop: the index holds the request's
+    ACTUAL pool pages (pinned for the request's lifetime, retained
+    under cache ownership at finish, evicted back to the allocator
+    under pool page pressure, purged the moment ``sac.release`` frees
+    them); ``placement="radix_affinity"`` weighs a matched prefix's
+    device against live link pressure; and a same-device hit skips the
+    matched pages' pool write and shortens the modeled prefill
+    (``radix_hit_tokens`` changes timing and traffic — never tokens:
+    prefill always recomputes the full prompt in-graph).  ``radix=False``
+    disables the cache entirely (the A/B baseline).
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int = 4,
@@ -193,6 +216,7 @@ class Engine:
                  arbiter: Optional[bool] = None,
                  layer_sizing: Optional[str] = None,
                  placement: Optional[str] = None,
+                 radix: bool = True,
                  topk_fn=None, seed: int = 0):
         self.cfg = cfg
         self.slots = slots
@@ -222,11 +246,20 @@ class Engine:
             else cfg.sac.placement
         self.sac = SACSystem(cfg, backend=backend,
                              placement=self.placement)
-        # live link-pressure feed for pressure_aware placement: the
-        # placer reads last step's measured per-device demand seconds at
-        # place time (no-op under pressure-blind policies)
+        # live link-pressure feed for pressure_aware / radix_affinity
+        # placement: the placer reads last step's measured per-device
+        # demand seconds at place time (no-op under pressure-blind
+        # policies)
         self.sac.set_pressure_fn(lambda: self._last_demand_s)
-        self.radix = RadixIndex(page_size=cfg.sac.page_size)
+        # radix prefix cache: the SACSystem owns its page lifecycle
+        # (retention at finish, eviction under pressure, purge on free)
+        self.radix = (RadixIndex(page_size=cfg.sac.page_size)
+                      if radix else None)
+        self.sac.attach_radix(self.radix)
+        # per-slot radix bookkeeping: (pinned token paths — the matched
+        # BACKING prefix and the request's own aligned path — and the
+        # pages the index registered from this request's allocation)
+        self._slot_radix: List[tuple] = [([], 0) for _ in range(slots)]
         # the engine's stats share the SACSystem accountant's TrafficStats:
         # every charged fetch/write and recorded hit/miss lands here
         self.stats = EngineStats(traffic=self.sac.traffic.stats)
@@ -251,8 +284,10 @@ class Engine:
         self.last_grants: Dict[int, int] = {}
         self._grant_sum = 0
         self._grant_n = 0
-        self._demand_mark = [0.0] * self.sac.n_devices
-        self._last_demand_s = [0.0] * self.sac.n_devices
+        # per-link AND per-request demand-step deltas (serving/arbiter.py
+        # DemandTracker): the pressure feed subtracts a finishing
+        # request's own share from its link immediately at departure
+        self._demand = DemandTracker(self.sac.n_devices)
         if self.arbiter_on:
             self.arbiter = BudgetArbiter.from_fabric(
                 ArbiterConfig(max_width=int(cfg.sac.prefetch_width),
@@ -310,6 +345,17 @@ class Engine:
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.slot_tokens: List[List[int]] = [[] for _ in range(slots)]
         self.queue: List[Request] = []
+        # resize hysteresis: rates at the last sizer EVALUATION (skips
+        # keep the reference, so slow drift accumulates against it) —
+        # when no layer moved more than cfg.sac.resize_epsilon since,
+        # the sizer run (and its sentinel churn) is skipped
+        self._resize_rates_ref: Optional[List[float]] = None
+
+    @property
+    def _last_demand_s(self) -> List[float]:
+        """Last step's per-device demand seconds (departures already
+        subtracted) — the arbiter's and the placer's pressure signal."""
+        return self._demand.last_demand_s
 
     # -- submission --------------------------------------------------------------
     def submit(self, req: Request):
@@ -350,35 +396,104 @@ class Engine:
         return hisparse.warm_lane(hot, lane, idx, vals, valid)
 
     # -- slot refill -------------------------------------------------------------
+    def _locality_bonus_s(self, prompt_len: int, matched: int) -> float:
+        """Seconds a same-device radix hit saves: the matched tokens'
+        modeled prefill compute plus their skipped pool write — the
+        ``affinity_s`` weight the radix_affinity placement policy holds
+        against live link pressure."""
+        if matched <= 0:
+            return 0.0
+        saved_write = (matched * self.sac.entry_bytes
+                       * max(self.cfg.n_attn_layers, 1))
+        return (self.profile.prefill_s(prompt_len)
+                - self.profile.prefill_s(prompt_len - matched)
+                + self.sac.fabric.bulk_transfer_time(saved_write))
+
     def _fill_slots(self):
         for s in range(self.slots):
             if self.slot_req[s] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
-            req.dispatch_s = self.clock_s
             prompt = req.prompt_tokens[: req.context_len]
-            # radix prefix lookup (page-aligned reuse accounting)
-            matched, _ = self.radix.match_prefix(prompt.tolist())
+            toks = prompt.tolist()
+            # radix prefix lookup — PAGE-granular reuse (crediting the
+            # raw token walk would count prefix tokens no cached page
+            # backs).  The BACKING node's path is pinned immediately so
+            # the pool-pressure eviction inside place() cannot free the
+            # pages we are about to reuse.
+            m = self.radix.match(toks) if self.radix is not None else None
+            pins: List[list] = []
+            if m is not None and m.hit:
+                pins.append(list(m.pin_tokens))
+                self.radix.pin(pins[-1])
+            bonus_s = (self._locality_bonus_s(len(prompt), m.paged_tokens)
+                       if pins else 0.0)
+            rp = self.sac.place(req.request_id, len(prompt) + req.output_len,
+                                affinity=m.device if pins else None,
+                                affinity_s=bonus_s)
+            if rp is None:
+                # pool exhausted even after radix eviction.  The pre-PR 5
+                # fallback charged device 0 for a booking that never
+                # happened (its link then carried a phantom request);
+                # instead requeue at the head (FCFS) and retry once a
+                # finishing request frees pages — unless nothing is in
+                # flight, in which case capacity will never appear.
+                for p in pins:
+                    self.radix.release(p)
+                self.queue.insert(0, req)
+                if not any(r is not None for r in self.slot_req):
+                    raise RuntimeError(
+                        f"request {req.request_id} "
+                        f"({len(prompt) + req.output_len} tokens) can "
+                        "never be placed: every pool device lacks "
+                        "capacity even with the radix cache evicted")
+                break
+            req.dispatch_s = self.clock_s
+            req.pool_device = rp.device
+            # reuse is only real on the device holding the cached pages
+            # (off-device, the prefix would cross two fabric links —
+            # no better than recomputing); radix_affinity placement is
+            # what makes this coincide under low pressure
+            matched = (m.paged_tokens
+                       if pins and rp.device == m.device else 0)
+            if pins and not matched:
+                self.radix.release(pins.pop())
             self.stats.radix_hit_tokens += matched
-            rp = self.sac.place(req.request_id, len(prompt) + req.output_len)
-            req.pool_device = rp.device if rp else 0
+            if matched:
+                self.stats.radix_hit_requests += 1
             issued0 = self.stats.traffic.fabric_time_s
-            # prefill this slot (batch of 1), splice into the shared state
+            # prefill this slot (batch of 1), splice into the shared
+            # state — ALWAYS over the full prompt: the radix hit changes
+            # modeled timing and fabric traffic, never decoded tokens
             st, _ = self._prefill_one(self.params, prompt[None, :])
             st = dict(st)
             warm_idx = st.pop("warm_idx", None)
             self._splice_state(s, st, len(prompt))
-            # charge the pool write (prefill write path) against the
-            # request's own pool link — the arbiter's demand signal must
-            # see prefill pressure on the device it actually loads
-            self.sac.write_back_time(len(prompt), device=req.pool_device)
+            # charge the pool write for the NON-matched tokens only (the
+            # matched pages' KV is copied device-locally from the cached
+            # prefix, never crossing the fabric), against the request's
+            # own pool link — the arbiter's demand signal must see
+            # prefill pressure on the device it actually loads
+            self.sac.write_back_time(len(prompt) - matched,
+                                     device=req.pool_device,
+                                     key=req.request_id)
             page_tokens = (len(prompt) // self.cfg.sac.page_size) \
                 * self.cfg.sac.page_size
-            if page_tokens:
-                self.radix.insert(prompt[:page_tokens].tolist(),
-                                  req.pool_device,
-                                  list(range(page_tokens
-                                             // self.cfg.sac.page_size)))
+            keep = 0
+            if self.radix is not None and page_tokens:
+                own = toks[:page_tokens]
+                # register the request's ACTUAL pool pages (the pre-PR 5
+                # index advertised fabricated range(n) ids) — an
+                # identical cached prefix keeps the first copy
+                keep = self.radix.insert(
+                    own, rp.device,
+                    rp.pages[:page_tokens // self.cfg.sac.page_size])
+                # pin the request's own aligned path for its lifetime;
+                # the matched BACKING path stays pinned too (the reused
+                # pages must survive while the request decodes)
+                self.radix.pin(own)
+                pins.append(own)
+            self._slot_radix[s] = (pins, keep)
             # prefill-time warm-up: seed the recycled (cold) lane from the
             # radix-reused prefix tail + top-scoring prompt entries
             if self.planner is not None:
@@ -388,10 +503,10 @@ class Engine:
                 if plan is not None and self.arbiter is not None:
                     # warm-up arbitration: the prefill warm burst draws
                     # from the same per-device link budget as decode
-                    # speculation — its hide window is the prefill
-                    # compute this burst rides behind
+                    # speculation — its hide window is the (radix-
+                    # shortened) prefill compute this burst rides behind
                     w_cap = self.arbiter.grant_warmup(
-                        self.profile.prefill_s(len(prompt)),
+                        self.profile.prefill_s(len(prompt) - matched),
                         self._last_demand_s, req.pool_device,
                         int(plan.idx.shape[1]))
                     plan = cap_warmup(plan, w_cap)
@@ -410,9 +525,11 @@ class Engine:
                         self.sac.traffic.record_prefetch(n_ins, 0)
                         self.sac.prefetch_fetch_time(
                             n_ins, device=req.pool_device)
-            # virtual clock: prefill compute; fill-time fabric traffic
-            # (pool write + warm-up) hides behind it when overlap is on
-            t_prefill = self.profile.prefill_s(len(prompt))
+            # virtual clock: prefill compute — a genuine radix hit skips
+            # the matched prefix's recompute, so the modeled prefill (and
+            # with it TTFT) shortens; fill-time fabric traffic (pool
+            # write + warm-up) hides behind it when overlap is on
+            t_prefill = self.profile.prefill_s(len(prompt) - matched)
             if self.overlap_on:
                 exposed = self.sac.traffic.drain_overlap(t_prefill)
             else:
@@ -541,7 +658,10 @@ class Engine:
                                                  int(misses[s]))
                     n_miss = int(misses[s])
                     if n_miss:
-                        self.sac.sparse_fetch_time(n_miss, device=dev)
+                        # keyed: the request's own demand share, so the
+                        # pressure feed can subtract it at departure
+                        self.sac.sparse_fetch_time(n_miss, device=dev,
+                                                   key=req.request_id)
                     if self.prefetch:
                         # measured speculation outcomes (in-graph pf_*
                         # counters): issued entries cross the fabric as
@@ -563,7 +683,8 @@ class Engine:
                     req = self.slot_req[s]
                     n = min(k * n_layers, int(prev_len[s]) * n_layers or 1)
                     self.sac.sparse_fetch_time(
-                        n, device=self.sac.device_of(req.request_id))
+                        n, device=self.sac.device_of(req.request_id),
+                        key=req.request_id)
         # issued vs exposed: drain the per-device queues against this
         # step's compute window (exposed == issued when overlap is off)
         if self.overlap_on:
@@ -572,10 +693,11 @@ class Engine:
             exposed = self.stats.traffic.fabric_time_s - issued0
         # arbiter feedback: snapshot this step's per-device demand-only
         # issued seconds (total minus prefetch) as next step's pressure
-        # (also the pressure_aware placer's live feed)
-        cur = self.stats.traffic.device_demand_s()
-        self._last_demand_s = [c - m for c, m in zip(cur, self._demand_mark)]
-        self._demand_mark = cur
+        # (also the pressure_aware placer's live feed) — tracked per
+        # REQUEST too, so a departure below subtracts its own share
+        self._demand.observe(
+            self.stats.traffic,
+            [self.slot_req[s].request_id for s in occupied])
         self.sac.note_pressure_update()
         # online LayerSizer re-sizing: every resize_interval steps the
         # measured per-layer miss rates re-apportion the hot tier by
@@ -588,12 +710,28 @@ class Engine:
         if (self._sizer is not None and self.resize_interval
                 and self.stats.steps % self.resize_interval == 0):
             rates = self._interval_miss_rates()
-            new_sizes = self._sizer.sizes(rates)
-            if new_sizes != list(self.buffer_sizes):
-                self.state = dict(self.state)
-                self.state["hot_buf"] = hisparse.resize_layers(
-                    self.state["hot_buf"], new_sizes)
-                self.buffer_sizes = new_sizes
+            # hysteresis (cfg.sac.resize_epsilon): when no layer's
+            # per-interval miss rate moved by more than epsilon since
+            # the last sizer evaluation, skip the run entirely — a
+            # stable workload stops churning DISABLED sentinels every
+            # interval, while slow drift accumulates against the kept
+            # reference until it crosses the epsilon
+            eps = float(self.cfg.sac.resize_epsilon)
+            if (eps > 0.0 and rates is not None
+                    and self._resize_rates_ref is not None
+                    and len(rates) == len(self._resize_rates_ref)
+                    and max(abs(r - p) for r, p in
+                            zip(rates, self._resize_rates_ref)) < eps):
+                self.stats.resize_skips += 1
+            else:
+                new_sizes = self._sizer.sizes(rates)
+                self._resize_rates_ref = rates
+                if new_sizes != list(self.buffer_sizes):
+                    self.stats.resizes += 1
+                    self.state = dict(self.state)
+                    self.state["hot_buf"] = hisparse.resize_layers(
+                        self.state["hot_buf"], new_sizes)
+                    self.buffer_sizes = new_sizes
         self.clock_s += t_comp + exposed
         if now is None:
             now = self.clock_s
@@ -609,7 +747,29 @@ class Engine:
             if req.generated >= req.output_len:
                 req.finish_s = now
                 finished.append(req)
-                self.sac.release(req.request_id)
+                dev = self.sac.device_of(req.request_id)
+                # radix lifecycle at departure: unpin the request's
+                # prefix path, retain the pages the index registered
+                # (ownership moves request -> cache), free the rest —
+                # sac.release purges anything it frees from the index,
+                # so a stale (device, pages) can never be matched
+                pins, keep = self._slot_radix[s]
+                if self.radix is not None:
+                    for p in pins:
+                        self.radix.release(p)
+                self._slot_radix[s] = ([], 0)
+                kept = self.sac.release(req.request_id, keep_pages=keep)
+                if kept and self.cfg.sac.radix_headroom_frac > 0:
+                    # pool page pressure: push the LRU tail of the cache
+                    # back to the allocator before admissions need it
+                    self.sac.evict_to_headroom(
+                        self.cfg.sac.radix_headroom_frac)
+                # pressure feedback: subtract the departing request's
+                # own measured demand share from its link immediately
+                # (per-request attribution) instead of letting the
+                # placement EMA decay it over the next snapshots
+                share = self._demand.depart(req.request_id, dev)
+                self.sac.note_departure(dev, share)
                 # the per-request prefetch attribution is an arbitration
                 # signal, not a report — drop it with the request
                 self.stats.traffic.drop_request(req.request_id)
@@ -619,6 +779,10 @@ class Engine:
                 # fresh (pool pages are overwritten by the next prefill)
                 self.state["cache_len"] = \
                     self.state["cache_len"].at[s].set(0)
+        # cumulative, from the SACSystem: includes the evictions place()
+        # performed under admission pressure, which a finish-time-only
+        # tally would miss
+        self.stats.radix_evicted_pages = self.sac.radix_evicted_pages
         return finished
 
     def run(self, requests: List[Request], *, max_steps: int = 10_000
@@ -635,6 +799,8 @@ class Engine:
         out.update(engine_steps=self.stats.steps,
                    engine_tokens=self.stats.tokens,
                    radix_hit_tokens=self.stats.radix_hit_tokens,
+                   radix_hit_requests=self.stats.radix_hit_requests,
+                   bytes_written=self.stats.traffic.bytes_written,
                    fabric_time_s=self.stats.fabric_time_s,
                    issued_fabric_s=self.stats.issued_fabric_s,
                    exposed_fabric_s=self.stats.exposed_fabric_s,

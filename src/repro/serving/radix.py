@@ -2,18 +2,45 @@
 integration within HiSparse; KV fully offloaded to the pool backend).
 
 Token sequences are interned in a radix tree whose edges carry token-id
-chunks; every node maps a page-aligned prefix to pool pages.  Lookup
-returns the longest cached prefix (page granular) so prefill can skip
-recomputation (Round-2 "cache hit" scenario = full hit).  Eviction is
-LRU by leaf with reference counting — pages pinned by in-flight requests
-are never evicted.
+chunks; every *paged* node maps a page-aligned prefix to the pool pages
+(real :class:`~repro.core.metadata.PoolAllocator` ids) that back it.
+Lookup returns the longest cached prefix so prefill can skip
+recomputation of the matched tokens and the fabric write of the matched
+pages (Round-2 "cache hit" scenario = full hit) — reuse is only valid on
+the device the pages live on, which is what the ``radix_affinity``
+placement policy (core/placement.py) trades against link pressure.
+
+Lifecycle contract (the PR 5 correctness property, tests/test_radix.py):
+
+  - ``insert`` registers a request's **actual** pool pages and reports
+    whether it took them (an identical prefix already cached keeps the
+    first copy; the caller then must NOT hand those pages over);
+  - ``pin``/``release`` refcount a matched path for a request's
+    lifetime; **eviction never drops a pinned prefix**, and an edge
+    split inherits the refcount so pin/release walks stay balanced
+    across structural changes;
+  - ``evict_lru`` drops unpinned LRU leaves and *returns* the freed
+    (device, pages) so the owner (``SACSystem``) can return them to the
+    allocator — and it re-merges/cleans the page-less split nodes left
+    behind, so the node count stays bounded by the live paths;
+  - ``invalidate_pages`` purges every node whose backing pages the pool
+    just freed — the index never returns a (device, pages) tuple the
+    ``PoolAllocator`` considers free, under ANY interleaving of
+    admit/finish/evict (hypothesis-tested).
+
+A node's ``pages`` list is cumulative: it covers the node's FULL prefix
+from the root (each request writes its own copy of the whole prefix, so
+one allocation backs one node — page ids are never shared between
+nodes).  ``match`` therefore reports the deepest paged node's (device,
+pages) as the reusable unit, with the match length rounded DOWN to page
+granularity — a raw edge walk can overshoot into page-less split nodes,
+and crediting those tokens would count reuse no page actually backs.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -35,6 +62,28 @@ class _Node:
         return d
 
 
+@dataclasses.dataclass(frozen=True)
+class MatchResult:
+    """One prefix lookup: raw walk length vs the page-backed reuse."""
+
+    tokens: int                 # raw matched tokens (token-granular walk,
+                                # may end mid-edge)
+    paged_tokens: int           # page-granular reusable prefix length
+    device: int                 # device of the backing node (-1: none)
+    pages: List[int]            # backing pages covering the matched
+                                # prefix (a leading slice of the backing
+                                # node's cumulative page list)
+    pin_tokens: Tuple[int, ...] = ()
+                                # the BACKING node's full token prefix —
+                                # what a caller must pin to keep the
+                                # reused pages alive (the backing node
+                                # may sit deeper than the match point)
+
+    @property
+    def hit(self) -> bool:
+        return self.paged_tokens > 0
+
+
 class RadixIndex:
     """page_size-granular radix tree: prefix tokens -> (device, pages)."""
 
@@ -43,17 +92,16 @@ class RadixIndex:
         self.root = _Node(0)
         self._ids = itertools.count(1)
         self._clock = itertools.count(1)
+        # (device, page) -> the one node whose pages list contains it
+        # (page ids come from per-request allocations, so no sharing)
+        self._page_owner: Dict[Tuple[int, int], _Node] = {}
 
     # -- lookup ---------------------------------------------------------------
-    def match_prefix(self, tokens: Sequence[int]
-                     ) -> Tuple[int, List[Tuple[int, List[int]]]]:
-        """Longest cached page-aligned prefix.
-
-        Returns (n_tokens_matched, [(device, pages), ...] along the path).
-        """
+    def _walk(self, tokens: Sequence[int]) -> Tuple[int, List[_Node]]:
+        """Longest whole-edge walk; returns (tokens matched, path nodes)."""
         node = self.root
         i = 0
-        out: List[Tuple[int, List[int]]] = []
+        path: List[_Node] = []
         toks = tuple(tokens)
         while True:
             nxt = node.children.get(toks[i]) if i < len(toks) else None
@@ -65,16 +113,105 @@ class RadixIndex:
             i += el
             node = nxt
             node.last_use = next(self._clock)
-            if node.pages:
-                out.append((node.device, node.pages))
-        return i, out
+            path.append(node)
+        return i, path
+
+    def _prefix_tokens(self, node: _Node) -> Tuple[int, ...]:
+        parts = []
+        while node is not None and node is not self.root:
+            parts.append(node.edge)
+            node = node.parent
+        return tuple(t for edge in reversed(parts) for t in edge)
+
+    @staticmethod
+    def _best_paged(sub_root: _Node) -> Optional[_Node]:
+        """Hottest paged node in a subtree (every node below the match
+        point shares the matched prefix, so any of their cumulative page
+        lists backs it — prefer the most recently used copy)."""
+        best = None
+        stack = [sub_root]
+        while stack:
+            n = stack.pop()
+            if n.pages and (best is None or n.last_use > best.last_use):
+                best = n
+            stack.extend(n.children.values())
+        return best
+
+    def match(self, tokens: Sequence[int]) -> MatchResult:
+        """Longest cached prefix with its page backing.
+
+        The walk is TOKEN-granular: it descends whole matching edges and
+        then extends into the next edge as far as tokens agree (a shared
+        prefix that diverges mid-edge — the common case before any split
+        exists — still matches).  The page backing comes from the
+        hottest paged node at or below the match point: every node in
+        that subtree shares the matched prefix, and its cumulative page
+        list's leading slice covers it.  ``paged_tokens`` rounds the
+        match DOWN to page granularity — reuse is page-granular, and the
+        pre-PR 5 accounting credited split-node tokens no page backs.
+        ``pin_tokens`` is the backing node's own prefix: pinning it (not
+        just the matched tokens) is what keeps the reused pages alive,
+        since the backing copy may sit deeper than the match point.
+        """
+        node = self.root
+        i = 0
+        toks = tuple(tokens)
+        sub_root = self.root
+        while True:
+            nxt = node.children.get(toks[i]) if i < len(toks) else None
+            if nxt is None:
+                sub_root = node
+                break
+            el = len(nxt.edge)
+            common = 0
+            while (common < el and i + common < len(toks)
+                   and nxt.edge[common] == toks[i + common]):
+                common += 1
+            i += common
+            if common < el:
+                # diverged (or query exhausted) mid-edge: everything
+                # under nxt still shares the first i tokens
+                sub_root = nxt
+                break
+            node = nxt
+            node.last_use = next(self._clock)
+        if sub_root is self.root:
+            return MatchResult(i, 0, -1, [])
+        backing = self._best_paged(sub_root)
+        if backing is None:
+            return MatchResult(i, 0, -1, [])
+        paged = (i // self.page_size) * self.page_size
+        paged = min(paged, len(backing.pages) * self.page_size)
+        if paged <= 0:
+            return MatchResult(i, 0, -1, [])
+        backing.last_use = next(self._clock)
+        return MatchResult(i, paged, backing.device,
+                           list(backing.pages[:paged // self.page_size]),
+                           self._prefix_tokens(backing))
+
+    def match_prefix(self, tokens: Sequence[int]
+                     ) -> Tuple[int, List[Tuple[int, List[int]]]]:
+        """Legacy tuple API: (raw tokens matched, [(device, pages), ...]
+        along the path).  Prefer :meth:`match` — it reports the
+        page-granular reuse the serving layers must account."""
+        i, path = self._walk(tokens)
+        return i, [(n.device, list(n.pages)) for n in path if n.pages]
 
     # -- insert ---------------------------------------------------------------
     def insert(self, tokens: Sequence[int], device: int, pages: List[int]
-               ) -> None:
-        """Register ``tokens`` (page-aligned length) as cached with pages."""
+               ) -> int:
+        """Register ``tokens`` (page-aligned length) as cached by ``pages``.
+
+        Returns the number of pages the index actually took: ``0`` when
+        an identical prefix is already cached (the first copy wins — the
+        caller keeps ownership of ``pages``), else ``len(pages)`` (the
+        caller must keep those pages allocated until the index gives
+        them back through ``evict_lru`` or ``invalidate_pages``).
+        """
         toks = tuple(tokens)
         assert len(toks) % self.page_size == 0, "insert page-aligned prefixes"
+        if not toks:
+            return 0
         node = self.root
         i = 0
         while i < len(toks):
@@ -95,20 +232,31 @@ class RadixIndex:
                 node = nxt
                 i += el
                 continue
-            # split edge at `common`
-            mid = _Node(next(self._ids), edge=nxt.edge[:common], parent=node)
+            # split edge at `common`; the mid node inherits the refcount
+            # so a pin taken before the split still releases balanced
+            # (pin/release walk EVERY node on the path)
+            mid = _Node(next(self._ids), edge=nxt.edge[:common], parent=node,
+                        refs=nxt.refs, last_use=nxt.last_use)
             node.children[toks[i]] = mid
             nxt.edge = nxt.edge[common:]
             nxt.parent = mid
             mid.children[nxt.edge[0]] = nxt
-            # move pages proportionally? pages stay with the deeper node
+            # pages stay with the deeper node (they cover its full prefix)
             node = mid
             i += common
+        node.last_use = next(self._clock)
+        if node.pages:
+            return 0        # identical prefix already cached: keep it
         node.pages = list(pages)
         node.device = device
-        node.last_use = next(self._clock)
+        for p in pages:
+            assert (device, p) not in self._page_owner, \
+                f"page {(device, p)} already backs node " \
+                f"{self._page_owner[(device, p)].node_id}"
+            self._page_owner[(device, p)] = node
+        return len(pages)
 
-    # -- pin / release ------------------------------------------------------------
+    # -- pin / release --------------------------------------------------------
     def pin(self, tokens: Sequence[int]) -> None:
         self._walk_refs(tokens, +1)
 
@@ -127,29 +275,137 @@ class RadixIndex:
             i += len(nxt.edge)
             node = nxt
 
-    # -- eviction -------------------------------------------------------------------
-    def evict_lru(self, n_leaves: int = 1) -> List[Tuple[int, List[int]]]:
-        """Drop up to n unpinned LRU leaves; returns freed (device, pages)."""
-        freed: List[Tuple[int, List[int]]] = []
-        for _ in range(n_leaves):
-            leaves = [n for n in self._all_nodes()
-                      if not n.children and n.refs == 0 and n is not self.root]
-            if not leaves:
-                break
-            victim = min(leaves, key=lambda n: n.last_use)
-            if victim.pages:
-                freed.append((victim.device, victim.pages))
-            parent = victim.parent
-            if parent is not None:
-                parent.children.pop(victim.edge[0], None)
+    # -- eviction / invalidation ----------------------------------------------
+    def _drop_payload(self, node: _Node) -> Optional[Tuple[int, List[int]]]:
+        """Forget a node's page backing (owner-map consistent)."""
+        if not node.pages:
+            return None
+        freed = (node.device, node.pages)
+        for p in node.pages:
+            self._page_owner.pop((node.device, p), None)
+        node.pages = []
+        node.device = -1
         return freed
 
+    def _cleanup(self, node: Optional[_Node]) -> None:
+        """Re-merge / remove the structural debris a removal leaves:
+        walking up from ``node``, drop page-less childless unpinned
+        nodes, and fold a page-less unpinned single-child node into its
+        child (edge concat) — the split-node leak of the pre-PR 5
+        ``evict_lru``, which kept every dead mid node forever."""
+        while node is not None and node is not self.root:
+            parent = node.parent
+            if not node.pages and node.refs == 0:
+                if not node.children:
+                    parent.children.pop(node.edge[0], None)
+                elif len(node.children) == 1:
+                    (child,) = node.children.values()
+                    child.edge = node.edge + child.edge
+                    child.parent = parent
+                    parent.children[child.edge[0]] = child
+            node = parent
+
+    def evict_lru(self, n_leaves: int = 1, *, device: Optional[int] = None
+                  ) -> List[Tuple[int, List[int]]]:
+        """Drop up to n unpinned LRU leaves; returns freed (device, pages).
+
+        A pinned prefix (any node with refs > 0 on its path) is never
+        dropped — pins protect ancestors by construction, since a pin
+        walk increments every node down the path.
+
+        ``device`` restricts victims to unpinned PAGED nodes on that
+        device — leaf or internal, since a device's cached copies can
+        all sit on interior nodes (pool-pressure relief must not drain
+        healthy devices' caches; a global LRU walk would evict the
+        cluster's coldest prefixes first no matter whose budget is
+        blocked).  Without it, any unpinned leaf — including page-less
+        debris — qualifies, which is what collapses the tree on drain.
+        """
+        freed: List[Tuple[int, List[int]]] = []
+        evicted = 0
+        while evicted < n_leaves:
+            # ONE tree walk per batch (not per victim): collect every
+            # candidate, sort LRU-first, evict up to the budget.
+            # Evicting one candidate never invalidates another — cleanup
+            # only removes/merges page-less refs-0 nodes, which are
+            # never candidates themselves.
+            if device is None:
+                cands = [n for n in self._all_nodes()
+                         if not n.children and n.refs == 0
+                         and n is not self.root]
+            else:
+                cands = [n for n in self._all_nodes()
+                         if n.pages and n.device == device
+                         and n.refs == 0 and n is not self.root]
+            if not cands:
+                break
+            cands.sort(key=lambda n: n.last_use)
+            for victim in cands[:n_leaves - evicted]:
+                got = self._drop_payload(victim)
+                if got is not None:
+                    freed.append(got)
+                if not victim.children:
+                    parent = victim.parent
+                    if parent is not None:
+                        parent.children.pop(victim.edge[0], None)
+                    self._cleanup(parent)
+                else:
+                    self._cleanup(victim)
+                evicted += 1
+            if device is None and evicted < n_leaves:
+                continue    # leaf eviction exposes new leaves: re-walk
+            break
+        return freed
+
+    def invalidate_pages(self, device: int, pages: Iterable[int]
+                         ) -> int:
+        """Purge every node backed by any of these (freed) pool pages.
+
+        Called by the pool owner the moment it frees pages a request
+        left behind, so the index can never hand out a (device, pages)
+        tuple the allocator considers free.  The node's payload is
+        dropped (its whole pages list is invalid once one page is gone);
+        the structure is cleaned like eviction.  Returns nodes purged.
+        """
+        victims = []
+        seen = set()
+        for p in pages:
+            node = self._page_owner.get((device, p))
+            if node is not None and id(node) not in seen:
+                seen.add(id(node))
+                victims.append(node)
+        for node in victims:
+            self._drop_payload(node)
+            if not node.children and node.refs == 0:
+                if node.parent is not None:
+                    node.parent.children.pop(node.edge[0], None)
+                self._cleanup(node.parent)
+            else:
+                self._cleanup(node)
+        return len(victims)
+
+    # -- introspection --------------------------------------------------------
     def _all_nodes(self):
         stack = [self.root]
         while stack:
             n = stack.pop()
             yield n
             stack.extend(n.children.values())
+
+    def owns(self, device: int, page: int) -> bool:
+        """True iff some node's payload currently references this page."""
+        return (device, page) in self._page_owner
+
+    def n_nodes(self) -> int:
+        """Node count excluding the root (boundedness invariant)."""
+        return sum(1 for _ in self._all_nodes()) - 1
+
+    def n_paged_nodes(self) -> int:
+        return sum(1 for n in self._all_nodes() if n.pages)
+
+    def cached_pages(self) -> Dict[Tuple[int, int], "_Node"]:
+        """Live (device, page) -> node map (the owner index)."""
+        return dict(self._page_owner)
 
     def n_cached_tokens(self) -> int:
         return sum(len(n.pages) * self.page_size for n in self._all_nodes())

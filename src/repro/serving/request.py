@@ -15,6 +15,12 @@ class Request:
     context_len: int
     output_len: int
     prompt_tokens: Optional[np.ndarray] = None   # only for the real engine
+    # -- shared-prefix workload annotation (radix prefix cache) --
+    # requests in the same group share their first prefix_len prompt
+    # tokens; the simulator's analytic radix twin keys its cache on the
+    # group id, the engine sees the real shared tokens
+    prefix_group: Optional[int] = None
+    prefix_len: int = 0
     # -- filled by the runtime --
     dispatch_s: float = -1.0
     first_token_s: float = -1.0
@@ -57,6 +63,44 @@ def sharegpt_trace(n_requests: int, *, context_len: int, output_len: int,
         prompt = (rng.integers(0, vocab, size=ctx).astype(np.int32)
                   if vocab else None)
         reqs.append(Request(i, t, max(ctx, 16), out, prompt))
+    return reqs
+
+
+def shared_prefix_trace(n_requests: int, *, prefix_len: int,
+                        suffix_len: int, output_len: int,
+                        reuse_p: float = 0.7, seed: int = 0,
+                        arrival_rate: float = float("inf"),
+                        vocab: int = 0) -> List[Request]:
+    """Shared-prefix workload (the radix prefix cache's regime: system
+    prompts, few-shot templates, multi-turn history).
+
+    Each request reuses an existing prefix group with probability
+    ``reuse_p`` (uniform over live groups) or founds a new one; its
+    prompt is the group's ``prefix_len`` shared tokens plus a private
+    ``suffix_len``-token tail.  With ``vocab`` set, real token arrays
+    are generated so the ENGINE's radix tree sees literal sharing; the
+    simulator's analytic twin keys on ``prefix_group`` alone."""
+    rng = np.random.default_rng(seed)
+    prefixes: List[Optional[np.ndarray]] = []
+    reqs = []
+    t = 0.0
+    for i in range(n_requests):
+        if np.isfinite(arrival_rate):
+            t += rng.exponential(1.0 / arrival_rate)
+        if prefixes and rng.random() < reuse_p:
+            g = int(rng.integers(len(prefixes)))
+        else:
+            g = len(prefixes)
+            prefixes.append(
+                rng.integers(0, vocab, size=prefix_len).astype(np.int32)
+                if vocab else None)
+        prompt = None
+        if vocab:
+            tail = rng.integers(0, vocab, size=suffix_len).astype(np.int32)
+            prompt = np.concatenate([prefixes[g], tail])
+        reqs.append(Request(i, t, prefix_len + suffix_len,
+                            max(1, int(output_len)), prompt,
+                            prefix_group=g, prefix_len=prefix_len))
     return reqs
 
 

@@ -43,6 +43,8 @@ class Scheduler:
             capacity_bytes=cfg.pool_device_bytes)
         self.local_bytes = 0.0
         self.hbm_bytes = 0.0
+        self._affinity_fn = None
+        self._admit_fn = None
 
     def set_pressure_fn(self, fn) -> None:
         """Attach the live per-device link-pressure feed consumed by the
@@ -54,6 +56,31 @@ class Scheduler:
     def note_pressure_update(self) -> None:
         """Mark the pressure feed re-measured (once per simulated step)."""
         self.placer.note_pressure_update()
+
+    def set_affinity_fn(self, fn) -> None:
+        """Attach the radix-affinity resolver consumed at admission:
+        ``fn(req) -> Optional[(device, saved_seconds)]`` — the device
+        holding the request's cached prefix and the prefill/write
+        seconds reuse there would save (the ``radix_affinity`` placement
+        input, core/placement.py).  The simulator wires its analytic
+        prefix cache in here; the engine threads its real RadixIndex
+        match through ``SACSystem.place`` directly."""
+        self._affinity_fn = fn
+
+    def set_admit_fn(self, fn) -> None:
+        """Callback invoked right after EACH successful placement inside
+        ``try_admit`` (before the next request is placed).  The
+        simulator's analytic radix twin registers a new prefix group
+        here, so requests later in the same admission wave can already
+        hit it — matching the engine, whose slot fills interleave
+        insert with placement."""
+        self._admit_fn = fn
+
+    def note_departure(self, device: int, seconds: float) -> None:
+        """Forward a finished request's measured demand share to the
+        placer's pressure-keyed policies (core/placement.py)."""
+        if 0 <= device < self.cfg.n_pool_devices:
+            self.placer.note_departure(device, seconds)
 
     # -- queueing --------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -72,7 +99,11 @@ class Scheduler:
                 break                      # RDMA local-memory wall (P2)
             if self.hbm_bytes + need > self.cfg.hbm_kv_bytes:
                 break                      # HBM capacity wall (fig 12)
-            dev = self.placer.place(req.request_id, n_bytes=need)
+            hint = (self._affinity_fn(req) if self._affinity_fn is not None
+                    else None)
+            aff_dev, aff_s = hint if hint is not None else (None, 0.0)
+            dev = self.placer.place(req.request_id, n_bytes=need,
+                                    affinity=aff_dev, affinity_s=aff_s)
             if dev is None:
                 break                      # pool exhausted
             self.queue.popleft()
@@ -82,10 +113,18 @@ class Scheduler:
             self.hbm_bytes += need
             self.active[req.request_id] = req
             admitted.append(req)
+            if self._admit_fn is not None:
+                self._admit_fn(req)
         return admitted
 
     def finish(self, req: Request) -> None:
-        self.active.pop(req.request_id, None)
+        """Idempotent: a double finish (or a finish of a never-admitted
+        request) must not decrement the byte accounting below truth or
+        double-release the placer — guard on the active-table pop (the
+        pre-PR 5 version unconditionally subtracted, so one duplicate
+        finish corrupted ``local_bytes``/``hbm_bytes`` forever)."""
+        if self.active.pop(req.request_id, None) is None:
+            return
         need = self._kv_bytes(req)
         self.placer.release(req.request_id)
         self.local_bytes -= need

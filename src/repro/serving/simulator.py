@@ -54,7 +54,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.configs.base import ModelConfig
 from repro.core.traffic import FabricAccountant
 from repro.core.transfer import PipelineModel
-from repro.serving.arbiter import (ArbiterConfig, BudgetArbiter, LayerSizer,
+from repro.serving.arbiter import (ArbiterConfig, BudgetArbiter,
+                                   DemandTracker, LayerSizer,
                                    resize_allocation_width)
 from repro.serving.prefetch import analytic_prefetch, analytic_warmup
 from repro.serving.request import Request, summarize
@@ -240,6 +241,22 @@ class SimConfig:
                                        # the placer the analytic per-step
                                        # demand seconds (the same signal
                                        # the engine measures)
+    page_size: int = 16                # pool page tokens (SACConfig.
+                                       # page_size twin): radix reuse
+                                       # credit is floored to whole pages
+                                       # exactly like the engine's
+    radix_affinity: bool = False       # analytic radix prefix cache: a
+                                       # request whose prefix_group is
+                                       # already cached gets that device
+                                       # as a placement affinity hint
+                                       # (policy "radix_affinity" unless
+                                       # `placement` overrides) and, when
+                                       # it lands there, skips the matched
+                                       # tokens' prefill compute + pool
+                                       # write — the twin of the engine's
+                                       # RadixIndex loop (capacity/
+                                       # eviction effects stay with the
+                                       # engine's real allocator)
     precision_weighted: bool = False   # arbiter grants split per request
                                        # by analytic prefetch precision
     resize_interval: int = 0           # > 0 models online LayerSizer
@@ -296,7 +313,8 @@ def simulate(reqs: List[Request], model: ModelProfile,
         concurrency=sim.concurrency,
         n_pool_devices=backend.n_pool_devices,
         interleave=backend.interleave,
-        placement=sim.placement,
+        placement=sim.placement or ("radix_affinity" if sim.radix_affinity
+                                    else None),
         pool_device_bytes=backend.local_dram_bytes / backend.n_pool_devices
         if backend.name != "hbm" else float("inf"),
         local_dram_bytes=(backend.local_dram_bytes if backend.prefetch
@@ -367,11 +385,66 @@ def simulate(reqs: List[Request], model: ModelProfile,
                           precision_weighted=sim.precision_weighted),
             entry_s=model.entry_bytes / backend.fetch_bw_Bps,
             n_layers=model.n_attn_layers, pipeline=pipeline)
-    last_demand_s = [0.0] * backend.n_pool_devices
-    # pressure_aware placement reads the live analytic demand seconds —
-    # the same per-link signal the engine feeds its own placer
-    sched.set_pressure_fn(lambda: last_demand_s)
+    # per-link AND per-request analytic demand (the engine's
+    # DemandTracker twin): a finishing request's own share leaves its
+    # link's pressure signal immediately, not via EMA decay
+    tracker = DemandTracker(backend.n_pool_devices)
+    # pressure_aware / radix_affinity placement reads the live analytic
+    # demand seconds — the same per-link signal the engine feeds its
+    # own placer
+    sched.set_pressure_fn(lambda: tracker.last_demand_s)
     grant_sum = grant_n = 0
+
+    # analytic radix prefix cache (SimConfig.radix_affinity): group id ->
+    # (device of the first cached copy, cached prefix tokens).  First
+    # writer wins, like the engine's RadixIndex.insert; reuse is only
+    # real when placement lands the request on the cached device —
+    # exactly the locality-vs-pressure decision the radix_affinity
+    # policy arbitrates.  ``matched`` carries each admitted request's
+    # reused tokens into the prefill model (skipped compute + write).
+    radix_cache: Dict[int, Tuple[int, int]] = {}
+    matched: Dict[int, int] = {}
+    write_bw = backend.fetch_bw_Bps * backend.n_pool_devices
+    page = max(int(sim.page_size), 1)
+
+    def _paged(tokens: int) -> int:
+        """Reuse is page-granular, exactly as the engine credits it —
+        a raw prefix_len would diverge for unaligned prefixes."""
+        return (tokens // page) * page
+
+    def _affinity(r: Request):
+        if not sim.radix_affinity or r.prefix_group is None:
+            return None
+        cached = radix_cache.get(r.prefix_group)
+        if cached is None:
+            return None
+        dev, plen = cached
+        plen = _paged(min(plen, r.prefix_len))
+        if plen <= 0:
+            return None
+        bonus = (model.prefill_s(r.context_len)
+                 - model.prefill_s(r.context_len - plen)
+                 + plen * model.kv_bytes_per_token() / write_bw)
+        return dev, bonus
+
+    def _note_radix(r: Request) -> None:
+        """Post-placement accounting (the Scheduler admit hook — runs
+        after EACH placement, so same-wave requests see earlier ones):
+        record the reuse (same-device hits only) and register the first
+        cached copy of a new group."""
+        if r.prefix_group is None:
+            return
+        cached = radix_cache.get(r.prefix_group)
+        if cached is not None and cached[0] == r.pool_device:
+            hit = _paged(min(cached[1], r.prefix_len))
+            if hit > 0:
+                matched[r.request_id] = hit
+        elif cached is None:
+            radix_cache[r.prefix_group] = (r.pool_device, r.prefix_len)
+
+    if sim.radix_affinity:
+        sched.set_affinity_fn(_affinity)
+        sched.set_admit_fn(_note_radix)
 
     # prefill warm-up's cold-start miss reduction: a request's FIRST
     # decode step runs against a cold hot tier, lifted to the modeled
@@ -407,11 +480,15 @@ def simulate(reqs: List[Request], model: ModelProfile,
             for i in range(len(prefill_busy_until)):
                 if prefill_busy_until[i] <= t and prefill_q:
                     r = prefill_q.popleft()
-                    dur = model.prefill_s(r.context_len)
+                    # a radix hit skips the matched prefix's recompute
+                    # AND its pool write (the cached copy is device-
+                    # local) — the engine's _fill_slots twin
+                    eff_ctx = r.context_len - matched.get(r.request_id, 0)
+                    dur = model.prefill_s(eff_ctx)
                     # pool write (layer-wise bulk) on the backend fabric
-                    wb = r.context_len * model.kv_bytes_per_token()
-                    dur += wb / (backend.fetch_bw_Bps
-                                 * backend.n_pool_devices)
+                    wb = eff_ctx * model.kv_bytes_per_token()
+                    acct.stats.bytes_written += wb
+                    dur += wb / write_bw
                     prefill_busy_until[i] = t + dur
                     r.first_token_s = t + dur      # TTFT = prefill completion
                     r.generated = 1
@@ -468,9 +545,10 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     if precision is not None:
                         precision[r.request_id] = \
                             acct.stats.request_precision(r.request_id)
-                grants = arb.grant(t_comp, last_demand_s, dev_reqs,
+                grants = arb.grant(t_comp, tracker.last_demand_s, dev_reqs,
                                    precision=precision)
             demand_only = [0.0] * backend.n_pool_devices
+            req_miss_b: Dict[int, float] = {}
             for r in decoding.values():
                 rid = r.request_id
                 w = (grants[rid] if grants is not None
@@ -486,9 +564,13 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     cold.discard(rid)
                     w_warm = sim.warmup_entries
                     if arb is not None and w_warm:
+                        # hide window = the (radix-shortened) prefill
+                        # this warm burst rode behind, as in the engine
                         w_warm = arb.grant_warmup(
-                            model.prefill_s(r.context_len),
-                            last_demand_s, r.pool_device,
+                            model.prefill_s(
+                                r.context_len
+                                - matched.get(r.request_id, 0)),
+                            tracker.last_demand_s, r.pool_device,
                             min(w_warm, sim.device_buffer))
                     h = (cold_hit if w_warm == sim.warmup_entries
                          else analytic_warmup(w_warm, model.topk,
@@ -505,6 +587,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
                 pf_b = pf_n * model.entry_bytes
                 acct.add_step_demand(r.pool_device, miss_b + pf_b)
                 demand_only[r.pool_device] += miss_b
+                req_miss_b[rid] = miss_b
                 acct.record_hits(h * step_topk, (1 - h) * step_topk)
                 if pf_n:
                     # warm-up (cold step) stays UNkeyed like the engine:
@@ -513,15 +596,17 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     acct.record_prefetch(pf_n, pf_u,
                                          key=None if was_cold else rid)
                     acct.stats.prefetch_bytes += pf_b
-            demand = acct.drain_step()
+            step_demand = acct.drain_step()
             bw = backend.fetch_bw_Bps
             if backend.prefetch and (prefetch.busy() or rearrange.busy()):
                 bw *= (1 - backend.pcie_contention)   # PCIe bus contention
             # arbiter feedback: this step's demand-only (non-speculative)
-            # seconds per device are next step's link-pressure signal
-            last_demand_s = [d / bw for d in demand_only]
+            # seconds per device are next step's link-pressure signal,
+            # split per request so a departure subtracts its own share
+            tracker.set_step([d / bw for d in demand_only],
+                             {rid: b / bw for rid, b in req_miss_b.items()})
             sched.note_pressure_update()
-            t_fetch = (max(demand) / bw + backend.fetch_base_s
+            t_fetch = (max(step_demand) / bw + backend.fetch_base_s
                        + model.n_attn_layers * backend.layer_latency_s)
             # issued vs exposed: only the tail of the step's fetch that
             # does not fit the double-buffered hide window stalls decode
@@ -552,6 +637,10 @@ def simulate(reqs: List[Request], model: ModelProfile,
         for r in finished:
             decoding.pop(r.request_id, None)
             sched.finish(r)
+            # per-request demand attribution: the departing request's
+            # own share leaves its link's pressure signal immediately
+            share = tracker.depart(r.request_id, r.pool_device)
+            sched.note_departure(r.pool_device, share)
             acct.stats.drop_request(r.request_id)
             n_done += 1
 
@@ -560,6 +649,8 @@ def simulate(reqs: List[Request], model: ModelProfile,
                issued_fabric_s=acct.stats.issued_fabric_s,
                exposed_fabric_s=acct.stats.exposed_fabric_s,
                bytes_fetched=acct.stats.bytes_fetched,
+               bytes_written=acct.stats.bytes_written,
+               radix_hit_tokens=float(sum(matched.values())),
                prefetch_bytes=acct.stats.prefetch_bytes,
                prefetched_entries=acct.stats.prefetched_entries,
                prefetch_useful=acct.stats.prefetch_useful,

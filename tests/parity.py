@@ -169,6 +169,26 @@ def build_saturation_engine(*, arbiter: bool, min_width: int = K,
                         sac_overrides=sac, arbiter=arbiter, seed=seed)
 
 
+def shared_prefix_requests(cfg, n=6, prefix=24, suffix=8, out=6,
+                           reuse_p=1.0, seed=3):
+    """Shared-prefix engine trace (real tokens, literal sharing) — the
+    radix prefix cache's workload (ISSUE 5)."""
+    from repro.serving.request import shared_prefix_trace
+    return shared_prefix_trace(n, prefix_len=prefix, suffix_len=suffix,
+                               output_len=out, reuse_p=reuse_p, seed=seed,
+                               vocab=cfg.vocab)
+
+
+def build_radix_engine(*, radix: bool = True, slots: int = 1,
+                       arch: str = "qwen2-1.5b", seed: int = 0) -> Engine:
+    """Engine wired for the prefix-locality loop: radix_affinity
+    placement when the cache is on, plain default when it is off (the
+    A/B baseline the locality acceptance tests compare against)."""
+    cfg = get_config(arch).reduced()
+    return Engine(cfg, slots=slots, max_ctx=96, seed=seed, radix=radix,
+                  placement="radix_affinity" if radix else None)
+
+
 def mixed_requests(cfg, specs, seed: int = 5):
     """Requests with per-request (ctx, out) shapes, re-id'd in order —
     the heterogeneous trace the closed-loop fixtures decode."""

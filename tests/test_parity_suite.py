@@ -225,3 +225,63 @@ def test_sim_closed_loop_flags_run_to_completion():
     assert out["issued_fabric_s"] >= out["exposed_fabric_s"] >= 0.0
     assert out["prefetched_entries"] >= out["prefetch_useful"] >= 0
     assert 0 < out["arbiter_width_mean"] <= 256
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix trace: the radix loop's engine↔simulator agreement
+# ---------------------------------------------------------------------------
+
+
+def test_shared_prefix_radix_parity_engine_vs_sim():
+    """ISSUE 5 acceptance: on the same shared-prefix trace the engine's
+    real RadixIndex loop and the simulator's analytic twin agree on the
+    reused tokens exactly, and each side's prefill write-byte saving
+    equals its own per-token write cost times those tokens.  Both sides
+    cut TTFT; neither changes its hit-rate accounting."""
+    from parity import build_radix_engine, shared_prefix_requests
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    # a deliberately UNALIGNED shared prefix: both layers must floor the
+    # credit to whole pages (26 -> 24 at page_size 4), or they diverge
+    PREFIX, SUFFIX, OUT, N = 26, 8, 6, 6
+    PAGED = (PREFIX // cfg.sac.page_size) * cfg.sac.page_size
+
+    def trace():
+        return shared_prefix_requests(cfg, n=N, prefix=PREFIX,
+                                      suffix=SUFFIX, out=OUT)
+
+    eng_out = {}
+    for radix in (True, False):
+        eng_out[radix] = build_radix_engine(radix=radix).run(trace())
+    model = profile_from_config(cfg)
+    backend = default_backends()["cxl"]
+    sim_out = {}
+    for radix in (True, False):
+        sim_out[radix] = simulate(
+            trace(), model, backend,
+            SimConfig(concurrency=N, round1=True, device_buffer=32,
+                      page_size=cfg.sac.page_size, radix_affinity=radix))
+
+    hits_eng = eng_out[True]["radix_hit_tokens"]
+    hits_sim = sim_out[True]["radix_hit_tokens"]
+    # every request after the first reuses the shared prefix, floored
+    # to page granularity — both layers must count exactly that
+    assert hits_eng == hits_sim == (N - 1) * PAGED
+    assert eng_out[False]["radix_hit_tokens"] == 0
+    assert sim_out[False]["radix_hit_tokens"] == 0
+
+    # write-byte savings equal reused tokens x own per-token write cost
+    eng_per_tok = (cfg.kv_bytes_per_token_layer + 2 * cfg.sac.d_idx) \
+        * max(cfg.n_attn_layers, 1)
+    saved_eng = (eng_out[False]["bytes_written"]
+                 - eng_out[True]["bytes_written"])
+    assert saved_eng == pytest.approx(hits_eng * eng_per_tok)
+    saved_sim = (sim_out[False]["bytes_written"]
+                 - sim_out[True]["bytes_written"])
+    assert saved_sim == pytest.approx(hits_sim * model.kv_bytes_per_token())
+
+    # timing moves the same direction on both layers, hit-rate does not
+    assert eng_out[True]["ttft_mean_s"] < eng_out[False]["ttft_mean_s"]
+    assert sim_out[True]["ttft_mean_s"] < sim_out[False]["ttft_mean_s"]
+    assert sim_out[True]["sim_hit_rate"] == \
+        pytest.approx(sim_out[False]["sim_hit_rate"], abs=1e-9)

@@ -241,6 +241,93 @@ def test_round_robin_imbalance_bounded():
             assert p.max_imbalance() <= 1, (n_dev, i, p.device_loads())
 
 
+# ---- radix-affinity placement (ISSUE 5 prefix-locality loop) ----
+
+def test_radix_affinity_prefers_cached_device_within_bonus():
+    pressure = [0.5, 0.2]
+    p = Placer(2, policy="radix_affinity", pressure_fn=lambda: pressure)
+    # device 0 holds the prefix; its extra pressure (0.3) is under the
+    # locality bonus -> locality wins
+    assert p.place(0, affinity=0, affinity_s=0.4) == 0
+    p.note_pressure_update()
+    # bonus below the pressure gap -> the slammed link repels the request
+    assert p.place(1, affinity=0, affinity_s=0.1) == 1
+    p.note_pressure_update()
+    # no hint: plain pressure order
+    assert p.place(2) == 1
+
+
+def test_radix_affinity_capacity_always_wins():
+    p = Placer(2, policy="radix_affinity", capacity_pages=2,
+               pressure_fn=lambda: [0.0, 0.0])
+    assert p.place(0, n_pages=2, affinity=0, affinity_s=9.9) == 0
+    # affinity device full: the hint may NOT override the page budget
+    assert p.place(1, n_pages=2, affinity=0, affinity_s=9.9) == 1
+    assert p.place(2, n_pages=2, affinity=0, affinity_s=9.9) is None
+
+
+def test_radix_affinity_degrades_without_feed_or_hint():
+    a = Placer(3, policy="radix_affinity")
+    b = Placer(3, policy="least_loaded")
+    for i, nb in enumerate([100.0, 10.0, 10.0, 5.0, 1.0]):
+        assert a.place(i, n_bytes=nb) == b.place(i, n_bytes=nb)
+
+
+def test_affinity_hint_ignored_by_pressure_blind_policies():
+    p = Placer(3, policy="round_robin")
+    assert p.place(0, affinity=2, affinity_s=9.0) == 0
+    assert p.place(1, affinity=2, affinity_s=9.0) == 1
+    assert p.affinity_hint is None       # transient, always cleared
+
+
+def test_note_departure_subtracts_share_immediately():
+    """ISSUE 5 per-request attribution: when a request departs, its own
+    demand share leaves the link's smoothed pressure at once — the next
+    placement must see the corrected ordering, not the EMA tail."""
+    pressure = [1.0, 0.4]
+    p = Placer(2, policy="pressure_aware", pressure_fn=lambda: pressure)
+    assert p.place(0, n_bytes=1.0) == 1
+    p.note_pressure_update()
+    # the request holding 0.9 of device 0's pressure departs
+    p.release(0)
+    p.note_departure(0, 0.9)
+    # EMA for d0 collapsed to ~0.1 < d1's 0.4: d0 wins WITHOUT waiting
+    # for fresh (decayed) snapshots
+    assert p.place(1, n_bytes=1.0) == 0
+
+
+def test_note_departure_noop_for_pressure_blind_policies():
+    p = Placer(2, policy="round_robin")
+    p.note_departure(0, 5.0)             # must not raise or change state
+    assert p.place(0) == 0
+
+
+# ---- Scheduler.finish idempotence (ISSUE 5 satellite) ----
+
+def test_scheduler_finish_is_idempotent():
+    """Double finish (or finishing a never-admitted request) must not
+    drive the byte accounting below truth or double-release the placer."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    sched = Scheduler(SchedulerConfig(n_pool_devices=2, bytes_per_token=1.0,
+                                      local_dram_bytes=1e6,
+                                      hbm_kv_bytes=1e6))
+    a, b = Request(0, 0.0, 100, 10), Request(1, 0.0, 50, 10)
+    for r in (a, b):
+        sched.submit(r)
+    assert len(sched.try_admit(0.0)) == 2
+    booked = sum(sched.device_bytes)
+    sched.finish(a)
+    sched.finish(a)                       # duplicate: must be a no-op
+    never = Request(99, 0.0, 70, 5)
+    sched.finish(never)                   # never admitted: no-op
+    assert sched.local_bytes == booked - 110.0
+    assert sched.hbm_bytes == booked - 110.0
+    assert sum(sched.device_bytes) == booked - 110.0
+    sched.finish(b)
+    assert sched.local_bytes == 0.0 and sched.hbm_bytes == 0.0
+    assert all(db == 0.0 for db in sched.device_bytes)
+
+
 def test_round_robin_imbalance_bounded_with_releases():
     """With arbitrary releases, imbalance stays bounded by the number of
     in-flight removals + 1 — it never drifts unboundedly."""

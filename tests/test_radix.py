@@ -1,0 +1,538 @@
+"""Radix prefix cache lifecycle (PR 5, serving/radix.py + core/sac.py).
+
+The correctness property this suite guards: **the index never returns a
+(device, pages) tuple the PoolAllocator considers free**, under any
+interleaving of admit / finish(retain) / evict — the pre-PR 5 engine
+inserted fabricated page ids, never purged freed pages, and never called
+pin/release/evict (unbounded growth, dead refcounting).
+
+Sections:
+  - RadixIndex unit semantics: token-granular match with page-granular
+    credit, insert-dedupe and real-page registration, split-inherited
+    refcounts, eviction cleanup (no leaked split nodes), invalidation;
+  - SACSystem page lifecycle: retention at release, eviction returning
+    pages to the allocator, placement-pressure eviction, accounting
+    consistency (placer == allocator == index views);
+  - the hypothesis interleaving property (stale pages, bounded nodes);
+  - engine regressions: requeue on pool exhaustion (satellite 1),
+    page-granular hit credit (satellite 2), radix on/off bit-identity,
+    and the locality win (fewer write bytes, shorter TTFT, same tokens).
+"""
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.sac import SACSystem
+from repro.serving.radix import RadixIndex
+from repro.serving.request import Request, shared_prefix_trace
+
+
+# ---------------------------------------------------------------------------
+# RadixIndex unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_match_is_token_granular_but_credit_is_page_granular():
+    """A prefix diverging MID-EDGE still matches (no split needed), but
+    the credited reuse rounds down to whole pages."""
+    r = RadixIndex(page_size=4)
+    r.insert([1, 2, 3, 4, 5, 6, 7, 8], device=1, pages=[10, 11])
+    # 6 shared tokens, diverging inside the edge: paged credit = 4
+    m = r.match([1, 2, 3, 4, 5, 6, 99, 99])
+    assert m.tokens == 6
+    assert m.paged_tokens == 4
+    assert m.device == 1 and m.pages == [10]
+    # the backing node sits deeper than the match: pin ITS path
+    assert m.pin_tokens == (1, 2, 3, 4, 5, 6, 7, 8)
+    # full match returns the whole page list
+    m2 = r.match([1, 2, 3, 4, 5, 6, 7, 8])
+    assert m2.paged_tokens == 8 and m2.pages == [10, 11]
+
+
+def test_match_through_pageless_split_uses_descendant_backing():
+    """After a split, the mid node carries no pages; a query ending at
+    the mid must still be credited from a paged descendant's leading
+    page slice."""
+    r = RadixIndex(page_size=4)
+    r.insert([1, 2, 3, 4, 5, 6, 7, 8], device=0, pages=[0, 1])
+    r.insert([1, 2, 3, 4, 9, 9, 9, 9], device=1, pages=[7, 8])
+    m = r.match([1, 2, 3, 4])             # exactly the split point
+    assert m.paged_tokens == 4
+    assert (m.device, m.pages) in [(0, [0]), (1, [7])]
+    # the raw tuple API never credits the page-less mid as paged reuse
+    n, paged = r.match_prefix([1, 2, 3, 4])
+    assert n == 4 and paged == []
+
+
+def test_insert_registers_real_pages_and_dedupes():
+    r = RadixIndex(page_size=2)
+    assert r.insert([5, 6, 7, 8], device=0, pages=[100, 101]) == 2
+    assert r.owns(0, 100) and r.owns(0, 101)
+    # identical prefix: first copy wins, caller keeps its pages
+    assert r.insert([5, 6, 7, 8], device=1, pages=[200, 201]) == 0
+    assert not r.owns(1, 200)
+    m = r.match([5, 6, 7, 8])
+    assert m.device == 0 and m.pages == [100, 101]
+
+
+def test_pin_blocks_eviction_and_split_inherits_refs():
+    r = RadixIndex(page_size=2)
+    r.insert([1, 2, 3, 4], device=0, pages=[0, 1])
+    r.pin([1, 2, 3, 4])
+    assert r.evict_lru(4) == []          # pinned: nothing evictable
+    # a split UNDER the pin must keep the pinned path protected
+    r.insert([1, 2, 9, 9], device=0, pages=[5, 6])
+    mid = r.root.children[1]
+    assert mid.refs == 1                 # inherited at split
+    assert all(f == (0, [5, 6]) for f in r.evict_lru(8))  # only unpinned
+    r.release([1, 2, 3, 4])
+    freed = r.evict_lru(4)
+    assert freed and freed[0] == (0, [0, 1])
+    assert r.n_nodes() == 0              # tree collapsed, no debris
+
+
+def test_evict_cleans_childless_pageless_split_nodes():
+    """Satellite: the pre-PR 5 evict_lru left the page-less mid node
+    behind after its last leaf was evicted — node count must collapse."""
+    r = RadixIndex(page_size=2)
+    r.insert([1, 2, 3, 4], device=0, pages=[0, 1])
+    r.insert([1, 2, 8, 8], device=0, pages=[2, 3])   # splits at depth 2
+    assert r.n_nodes() == 3
+    freed = r.evict_lru(2)
+    assert sorted(p for _, pg in freed for p in pg) == [0, 1, 2, 3]
+    assert r.n_nodes() == 0, "split mid node leaked"
+
+
+def test_evict_remerges_single_child_mid():
+    """Evicting ONE branch of a split leaves a page-less unary mid —
+    it must fold into its surviving child (radix property restored)."""
+    r = RadixIndex(page_size=2)
+    r.insert([1, 2, 3, 4], device=0, pages=[0, 1])
+    r.insert([1, 2, 8, 8], device=0, pages=[2, 3])
+    # make the [1,2,8,8] branch LRU and evict exactly one leaf
+    r.match([1, 2, 3, 4])
+    assert r.evict_lru(1) == [(0, [2, 3])]
+    assert r.n_nodes() == 1              # mid + survivor merged
+    m = r.match([1, 2, 3, 4])
+    assert m.paged_tokens == 4 and m.pages == [0, 1]
+
+
+def test_invalidate_pages_purges_and_cleans():
+    r = RadixIndex(page_size=2)
+    r.insert([1, 2, 3, 4], device=0, pages=[0, 1])
+    r.insert([1, 2, 3, 4, 5, 6], device=0, pages=[4, 5, 6])
+    assert r.invalidate_pages(0, [5]) == 1      # one page kills the node
+    assert not r.owns(0, 4) and not r.owns(0, 6)
+    assert r.match([1, 2, 3, 4, 5, 6]).paged_tokens == 4  # parent survives
+    assert r.invalidate_pages(0, [0]) == 1
+    assert r.match([1, 2, 3, 4]).paged_tokens == 0
+    assert r.n_nodes() == 0
+    assert r.invalidate_pages(0, [0, 1, 99]) == 0  # idempotent / unknown
+
+
+# ---------------------------------------------------------------------------
+# SACSystem page lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _system(n_dev=2, pages_per_dev=24):
+    cfg = get_config("qwen2-1.5b").reduced()
+    probe = SACSystem(cfg, n_pool_devices=1)       # page_bytes only
+    sac = SACSystem(cfg, n_pool_devices=n_dev,
+                    device_bytes=pages_per_dev * probe.page_bytes,
+                    placement="first_fit")
+    radix = RadixIndex(page_size=cfg.sac.page_size)
+    sac.attach_radix(radix)
+    return sac, radix, cfg
+
+
+def _page_free(sac, dev, page):
+    return (page >= sac.allocator._next[dev]
+            or page in sac.allocator._returned[dev])
+
+
+def _assert_consistent(sac, radix):
+    """The three views agree: no index page is allocator-free; the
+    placer's page occupancy equals live bookings + cache-held pages."""
+    for (dev, page) in radix.cached_pages():
+        assert not _page_free(sac, dev, page), (dev, page)
+    for d in range(sac.n_devices):
+        live = sum(len(rp.pages) for rp in sac.requests.values()
+                   if rp.device == d)
+        held = sac.radix_held_pages(d)
+        assert sac.placer.pages_used[d] == live + held, \
+            (d, sac.placer.pages_used[d], live, held)
+        in_alloc = (sac.allocator.pages_per_device
+                    - sac.allocator.free_pages(d))
+        assert in_alloc == live + held, (d, in_alloc, live, held)
+
+
+def _admit(sac, radix, rid, tokens, out_tokens=0):
+    """The engine's _fill_slots lifecycle, jax-free: match+pin, place,
+    insert real pages, pin own path.  Returns (pins, keep) or None."""
+    ps = radix.page_size
+    m = radix.match(tokens)
+    pins = []
+    if m.hit:
+        pins.append(list(m.pin_tokens))
+        radix.pin(pins[-1])
+    rp = sac.place(rid, len(tokens) + out_tokens,
+                   affinity=m.device if m.hit else None)
+    if rp is None:
+        for p in pins:
+            radix.release(p)
+        return None
+    aligned = len(tokens) // ps * ps
+    keep = 0
+    if aligned:
+        own = list(tokens[:aligned])
+        keep = radix.insert(own, rp.device, rp.pages[:aligned // ps])
+        radix.pin(own)
+        pins.append(own)
+    return pins, keep
+
+
+def _finish(sac, radix, rid, pins, keep, headroom=0.0):
+    for p in pins:
+        radix.release(p)
+    sac.release(rid, keep_pages=keep)
+    if headroom:
+        sac.evict_to_headroom(headroom)
+
+
+def test_release_retention_and_evict_roundtrip():
+    sac, radix, cfg = _system(n_dev=1, pages_per_dev=64)
+    ps = cfg.sac.page_size
+    toks = list(range(4 * ps))
+    pins, keep = _admit(sac, radix, 0, toks)
+    assert keep == 4
+    _assert_consistent(sac, radix)
+    _finish(sac, radix, 0, pins, keep)
+    # retained: pages stay allocated, owned by the cache
+    assert sac.radix_held_pages(0) == 4
+    assert radix.match(toks).paged_tokens == 4 * ps
+    _assert_consistent(sac, radix)
+    # eviction hands them back to the allocator and forgets the prefix
+    assert sac.radix_evict(1) == 4
+    assert sac.radix_held_pages(0) == 0
+    assert radix.match(toks).paged_tokens == 0
+    _assert_consistent(sac, radix)
+
+
+def test_place_evicts_cached_prefixes_under_pool_pressure():
+    sac, radix, cfg = _system(n_dev=1, pages_per_dev=8)
+    ps = cfg.sac.page_size
+    a = list(range(100, 100 + 4 * ps))
+    pins, keep = _admit(sac, radix, 0, a)
+    _finish(sac, radix, 0, pins, keep)       # 4 pages cache-held
+    assert sac.radix_held_pages(0) == 4
+    # a 6-page request only fits if the cache gives pages back
+    got = _admit(sac, radix, 1, list(range(6 * ps)))
+    assert got is not None
+    assert sac.radix_held_pages(0) == 0
+    assert radix.match(a).paged_tokens == 0  # prefix gone, not stale
+    _assert_consistent(sac, radix)
+
+
+def test_pinned_prefix_survives_pool_pressure_eviction():
+    sac, radix, cfg = _system(n_dev=1, pages_per_dev=8)
+    ps = cfg.sac.page_size
+    a = list(range(100, 100 + 4 * ps))
+    pins_a, keep_a = _admit(sac, radix, 0, a)        # live + pinned
+    # a second request that would need the pinned pages must fail
+    # (placement refuses rather than evicting a pinned prefix)
+    assert _admit(sac, radix, 1, list(range(6 * ps))) is None
+    assert radix.match(a).paged_tokens == 4 * ps
+    _assert_consistent(sac, radix)
+    _finish(sac, radix, 0, pins_a, keep_a)
+    assert _admit(sac, radix, 1, list(range(6 * ps))) is not None
+    _assert_consistent(sac, radix)
+
+
+def test_place_eviction_targets_the_blocked_device_only():
+    """Pool-pressure eviction must not drain healthy devices' caches: a
+    request that only device 0's cache pages can unblock evicts there,
+    even when device 1 holds the globally-coldest prefix."""
+    sac, radix, cfg = _system(n_dev=2, pages_per_dev=8)
+    ps = cfg.sac.page_size
+    a = list(range(100, 100 + 6 * ps))          # -> device 0 (first_fit)
+    pins, keep = _admit(sac, radix, 0, a)
+    _finish(sac, radix, 0, pins, keep)          # 6 pages cached on d0
+    b = list(range(200, 200 + 2 * ps))          # fits d0 beside the cache?
+    pins, keep = _admit(sac, radix, 1, b)       # 6+2=8: d0 exactly full
+    _finish(sac, radix, 1, pins, keep)          # now d0: 8 cached
+    # make d0's prefix the HOTTER one (d1's copy would be LRU)
+    sac2_prefix = list(range(300, 300 + 3 * ps))
+    pins, keep = _admit(sac, radix, 2, sac2_prefix)   # -> d1 (d0 full)
+    _finish(sac, radix, 2, pins, keep)          # 3 pages cached on d1
+    radix.match(a)                              # d0 copies most recent
+    radix.match(b)
+    held_d1 = sac.radix_held_pages(1)
+    # a 4-page request: d1 has 5 free pages -> placed there WITHOUT
+    # touching anyone's cache; then a 6-page request can only fit on d0
+    # by evicting d0's cache — d1's (colder!) cache must survive
+    got = _admit(sac, radix, 3, list(range(400, 400 + 4 * ps)))
+    assert got is not None
+    big = _admit(sac, radix, 4, list(range(500, 500 + 6 * ps)))
+    assert big is not None
+    assert sac.radix_held_pages(1) == held_d1, \
+        "healthy device's cache was drained"
+    _assert_consistent(sac, radix)
+
+
+def test_place_eviction_survives_live_backed_lru_victim():
+    """A victim whose pages are live-request-backed (inserted, never
+    retained) frees nothing — eviction must keep going to the next
+    victim instead of reporting the pool as full."""
+    sac, radix, cfg = _system(n_dev=1, pages_per_dev=12)
+    ps = cfg.sac.page_size
+    # cached prefix (cache-owned, 4 pages), touched recently
+    a = list(range(100, 100 + 4 * ps))
+    pins, keep = _admit(sac, radix, 0, a)
+    _finish(sac, radix, 0, pins, keep)
+    # live request whose node is UNPINNED and LRU (insert w/o pin)
+    b = list(range(200, 200 + 4 * ps))
+    rp = sac.place(1, len(b))
+    b_keep = radix.insert(b, rp.device, rp.pages[:4])
+    assert b_keep == 4
+    radix.match(a)                               # cache copy is hotter
+    # a 5-page request: 4 (cache) + 4 (live b) + 5 = 13 > 12 -> must
+    # evict.  LRU victim is b's node (live-backed, frees 0 pages) — the
+    # loop must continue to a's cache pages rather than give up.
+    got = _admit(sac, radix, 2, list(range(300, 300 + 5 * ps)))
+    assert got is not None
+    assert sac.radix_held_pages(0) == 0          # cache reclaimed
+    _assert_consistent(sac, radix)
+    # b's pages stayed allocated to the live request
+    assert len(sac.requests[1].pages) == 4
+
+
+def test_place_eviction_feasibility_excludes_pinned_pages():
+    """If draining the UNPINNED cache still cannot fit the request, the
+    unpinned prefixes must survive — counting pinned (unevictable)
+    pages in the feasibility guard would drain them for nothing."""
+    sac, radix, cfg = _system(n_dev=1, pages_per_dev=16)
+    ps = cfg.sac.page_size
+    a = list(range(100, 100 + 4 * ps))
+    pins, keep = _admit(sac, radix, 0, a)
+    _finish(sac, radix, 0, pins, keep)          # A: 4 cached pages
+    # live request reusing A: pins A's backing path for its lifetime
+    live = _admit(sac, radix, 1, a + list(range(900, 900 + 4 * ps)))
+    assert live is not None                     # 8 pages, A now pinned
+    b = list(range(200, 200 + 4 * ps))
+    pins, keep = _admit(sac, radix, 2, b)
+    _finish(sac, radix, 2, pins, keep)          # B: 4 cached, unpinned
+    held = sac.radix_held_pages(0)              # 8 (A + B)
+    # 5-page request: even with B's 4 evictable pages gone, 12 + 5 > 16
+    # — infeasible, so B must NOT be sacrificed
+    assert _admit(sac, radix, 3, list(range(300, 300 + 5 * ps))) is None
+    assert sac.radix_held_pages(0) == held, \
+        "unpinned cache drained for an unplaceable request"
+    assert radix.match(b).paged_tokens == 4 * ps
+    _assert_consistent(sac, radix)
+
+
+def test_headroom_eviction_is_per_device():
+    sac, radix, cfg = _system(n_dev=2, pages_per_dev=8)
+    ps = cfg.sac.page_size
+    pins, keep = _admit(sac, radix, 0, list(range(100, 100 + 6 * ps)))
+    _finish(sac, radix, 0, pins, keep)           # d0: 6/8 cached
+    pins, keep = _admit(sac, radix, 1, list(range(200, 200 + 2 * ps)))
+    _finish(sac, radix, 1, pins, keep)           # d0: 8/8 cached
+    pins, keep = _admit(sac, radix, 2, list(range(300, 300 + 2 * ps)))
+    _finish(sac, radix, 2, pins, keep)           # d1: 2/8 cached (cold-er)
+    freed = sac.evict_to_headroom(0.25)          # d0 needs 2 free pages
+    assert freed >= 2
+    assert sac.allocator.free_pages(0) >= 2
+    assert sac.radix_held_pages(1) == 2, \
+        "headroom relief drained the unpressured device"
+    _assert_consistent(sac, radix)
+
+
+def test_release_without_retention_purges_index():
+    """keep_pages=0 frees everything the request registered — the index
+    must drop the nodes in the same motion (the pre-PR 5 stale-page
+    bug: freed pool memory advertised as cached)."""
+    sac, radix, cfg = _system(n_dev=1, pages_per_dev=32)
+    ps = cfg.sac.page_size
+    toks = list(range(3 * ps))
+    pins, keep = _admit(sac, radix, 0, toks)
+    assert keep == 3
+    _finish(sac, radix, 0, pins, 0)          # caller retains nothing
+    assert radix.match(toks).paged_tokens == 0
+    assert sac.radix_held_pages() == 0
+    _assert_consistent(sac, radix)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_property_no_stale_pages_under_any_interleaving(data):
+    """ISSUE 5 acceptance: after ANY interleaving of admit / finish
+    (with arbitrary retention) / evict / headroom-evict, match_prefix
+    never returns pages the allocator considers free, the three
+    accounting views agree, and the node count stays bounded."""
+    sac, radix, cfg = _system(n_dev=data.draw(st.integers(1, 3)),
+                              pages_per_dev=data.draw(
+                                  st.sampled_from([8, 16, 48])))
+    ps = cfg.sac.page_size
+    live = {}
+    nxt = 0
+    n_inserts = 0
+    for _ in range(30):
+        op = data.draw(st.sampled_from(
+            ["admit", "admit", "finish", "evict", "headroom"]))
+        if op == "admit":
+            # draw from a tiny token alphabet so prefixes collide often
+            n_tok = data.draw(st.integers(1, 6)) * ps \
+                + data.draw(st.integers(0, ps - 1))
+            toks = [data.draw(st.integers(0, 2)) for _ in range(n_tok)]
+            got = _admit(sac, radix, nxt, toks)
+            if got is not None:
+                live[nxt] = got
+                n_inserts += 1
+            nxt += 1
+        elif op == "finish" and live:
+            rid = data.draw(st.sampled_from(sorted(live)))
+            pins, keep = live.pop(rid)
+            # arbitrary retention, INCLUDING wrong values: the system
+            # must stay consistent even for keep counts that do not
+            # match what the index registered
+            k = data.draw(st.sampled_from([0, keep, keep + 2]))
+            _finish(sac, radix, rid, pins, k,
+                    headroom=data.draw(st.sampled_from([0.0, 0.25])))
+        elif op == "evict":
+            sac.radix_evict(data.draw(st.integers(1, 3)))
+        elif op == "headroom":
+            sac.evict_to_headroom(0.5)
+        _assert_consistent(sac, radix)
+        assert radix.n_nodes() <= 2 * max(n_inserts, 1) + len(live)
+    for rid in sorted(live):
+        pins, keep = live.pop(rid)
+        _finish(sac, radix, rid, pins, keep)
+        _assert_consistent(sac, radix)
+    # drain the cache: the tree must collapse completely (no leaked
+    # split nodes, no un-freeable pages)
+    while sac.radix_evict(4):
+        _assert_consistent(sac, radix)
+    radix.evict_lru(64)
+    assert radix.n_nodes() == 0
+    assert sac.radix_held_pages() == 0
+
+
+# ---------------------------------------------------------------------------
+# engine regressions (real jitted path, reduced configs)
+# ---------------------------------------------------------------------------
+
+
+def _engine(cfg, **kw):
+    from repro.serving.engine import Engine
+    return Engine(cfg, **kw)
+
+
+def _shared_trace(cfg, n=5, prefix=24, suffix=8, out=6, seed=3, reuse=1.0):
+    return shared_prefix_trace(n, prefix_len=prefix, suffix_len=suffix,
+                               output_len=out, reuse_p=reuse, seed=seed,
+                               vocab=cfg.vocab)
+
+
+def test_engine_requeues_when_pool_exhausted():
+    """Satellite 1: sac.place returning None must NOT fall back to
+    charging device 0 — the request waits (FCFS head) until a finishing
+    request frees pages, and every request still completes."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = _engine(cfg, slots=2, max_ctx=96)
+    # shrink the pool to ~one request's footprint so slot 2 must wait
+    need = (40 + 6 + cfg.sac.page_size - 1) // cfg.sac.page_size
+    eng.sac.placer.capacity_pages = need
+    eng.sac.allocator.pages_per_device = need
+    reqs = _shared_trace(cfg, n=3, prefix=24, suffix=16, out=6)
+    out = eng.run(reqs)
+    assert out["n_done"] == 3
+    # no phantom booking ever landed on a link that refused the request
+    assert eng.stats.traffic.device_anomalies == 0
+    # only cache-held prefix pages remain booked, no request bookings
+    for d in range(eng.sac.n_devices):
+        assert eng.sac.placer.pages_used[d] == eng.sac.radix_held_pages(d)
+
+
+def test_engine_fails_loudly_when_request_can_never_fit():
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = _engine(cfg, slots=1, max_ctx=96)
+    eng.sac.placer.capacity_pages = 1
+    eng.sac.allocator.pages_per_device = 1
+    for r in _shared_trace(cfg, n=1, prefix=24, suffix=16, out=6):
+        eng.submit(r)
+    with pytest.raises(RuntimeError, match="never be placed"):
+        eng.step()
+
+
+def test_engine_hit_credit_is_page_granular():
+    """Satellite 2: identical prompts whose shared prefix is not
+    page-aligned must be credited in whole pages only."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    ps = cfg.sac.page_size
+    eng = _engine(cfg, slots=1, max_ctx=96, placement="radix_affinity")
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, cfg.vocab, size=30).astype(np.int32)
+    reqs = []
+    for i in range(2):
+        tail = rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+        prompt = np.concatenate([base, tail])   # 30 shared, 33 total
+        reqs.append(Request(i, 0.0, len(prompt), 4, prompt))
+    eng.run(reqs)
+    expected = (30 // ps) * ps                  # 28 at page_size 4
+    assert eng.stats.radix_hit_tokens == expected
+    assert eng.stats.radix_hit_tokens % ps == 0
+
+
+def test_engine_tokens_bit_identical_radix_on_off():
+    """The locality loop changes traffic and timing, never tokens."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    streams = []
+    for radix in (True, False):
+        eng = _engine(cfg, slots=2, max_ctx=96, seed=2, radix=radix,
+                      placement="radix_affinity" if radix else None)
+        for r in _shared_trace(cfg, n=2, prefix=24, suffix=8, out=40):
+            eng.submit(r)
+        for _ in range(12):
+            eng.step()
+        streams.append([t[:] for t in eng.slot_tokens])
+    assert streams[0] == streams[1]
+
+
+def test_engine_radix_reduces_write_bytes_and_ttft():
+    """ISSUE 5 acceptance (engine side): on a shared-prefix trace the
+    radix loop cuts prefill write bytes and TTFT at identical decoded
+    tokens and identical hit-rate accounting."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    outs = {}
+    for radix in (True, False):
+        eng = _engine(cfg, slots=1, max_ctx=96, seed=0, radix=radix,
+                      placement="radix_affinity" if radix else None)
+        outs[radix] = eng.run(_shared_trace(cfg, n=5))
+        outs[radix]["hit_rate"] = eng.stats.hit_rate
+    on, off = outs[True], outs[False]
+    assert on["engine_tokens"] == off["engine_tokens"]
+    assert on["radix_hit_tokens"] > 0 and off["radix_hit_tokens"] == 0
+    assert on["bytes_written"] < off["bytes_written"]
+    assert on["ttft_mean_s"] < off["ttft_mean_s"]
+    assert abs(on["hit_rate"] - off["hit_rate"]) < 0.02
+
+
+def test_engine_radix_lifecycle_invariants_after_drain():
+    """After a full run: no pins leak, every cached page is cache-held,
+    and the placer still accounts the held pages."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = _engine(cfg, slots=2, max_ctx=96, placement="radix_affinity")
+    out = eng.run(_shared_trace(cfg, n=6, reuse=0.6))
+    assert out["n_done"] == 6
+    assert all(n.refs == 0 for n in eng.radix._all_nodes())
+    held = {(d, p) for d in range(eng.sac.n_devices)
+            for p in eng.sac._radix_pages[d]}
+    assert set(eng.radix.cached_pages()) == held
+    for d in range(eng.sac.n_devices):
+        assert eng.sac.placer.pages_used[d] == eng.sac.radix_held_pages(d)
+        for p in eng.sac._radix_pages[d]:
+            assert not _page_free(eng.sac, d, p)

@@ -115,7 +115,47 @@ def test_request_precision_smoothed_toward_prior():
 def test_drop_request_forgets_attribution():
     s = TrafficStats()
     s.request_pf["a"] = [10.0, 2.0]
+    s.request_demand_s["a"] = 0.5
     s.drop_request("a")
     s.drop_request("a")                        # idempotent
     assert "a" not in s.request_pf
+    assert "a" not in s.request_demand_s
     assert s.request_precision("a") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# per-request demand attribution (ISSUE 5: departure-aware pressure)
+# ---------------------------------------------------------------------------
+
+
+def test_demand_ops_attribute_per_request():
+    """Keyed demand ops split the issued seconds per request, and the
+    per-request shares sum to the per-device totals."""
+    acct = _acct(n_devices=2)
+    acct.sparse_fetch(8, 128, device=0, key="a")
+    acct.sparse_fetch(4, 128, device=0, key="b")
+    acct.write_back(4096.0, device=1, key="b")
+    acct.bulk_fetch(2048.0, device=1, key="c")
+    s = acct.stats
+    assert set(s.request_demand_s) == {"a", "b", "c"}
+    assert all(v > 0 for v in s.request_demand_s.values())
+    total = sum(s.request_demand_s.values())
+    assert abs(total - sum(s.device_demand_s())) < 1e-12
+
+
+def test_prefetch_never_charges_request_demand():
+    """Speculation is not the request's demand share: subtracting it at
+    departure would over-credit the link (the arbiter already shapes
+    prefetch separately via device_prefetch_s)."""
+    acct = _acct(n_devices=2)
+    acct.prefetch_fetch(16, 256, device=0)
+    assert acct.stats.request_demand_s == {}
+    acct.sparse_fetch(2, 256, device=0, key="r")
+    assert set(acct.stats.request_demand_s) == {"r"}
+
+
+def test_unkeyed_ops_attribute_nothing():
+    acct = _acct(n_devices=1)
+    acct.sparse_fetch(8, 128)
+    acct.write_back(4096.0)
+    assert acct.stats.request_demand_s == {}
