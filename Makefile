@@ -5,7 +5,10 @@
 #   make bench-smoke reduced buffer + prefetch + arbiter + placement +
 #                    locality sweeps; writes BENCH_prefetch.json +
 #                    BENCH_arbiter.json + BENCH_placement.json +
-#                    BENCH_locality.json (CI artifacts)
+#                    BENCH_locality.json (CI artifacts), then gates the
+#                    locality envelope (benchmarks/locality_gate.py:
+#                    hotspot <= 1.2x pressure_aware, TTFT win >= 2x,
+#                    dedup pool saving)
 #   make deps        install runtime + test dependencies
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -27,6 +30,7 @@ bench-smoke:
 	python -m benchmarks.arbiter_sweep --quick
 	python -m benchmarks.placement_sweep --quick
 	python -m benchmarks.locality_sweep --quick
+	python -m benchmarks.locality_gate
 
 deps:
 	pip install -r requirements.txt

@@ -1,0 +1,96 @@
+"""Regression gate over the locality sweep artifact (PR 6).
+
+Reads ``BENCH_locality.json`` (written by benchmarks/locality_sweep.py,
+the last step of `make bench-smoke`) and fails — nonzero exit — when the
+radix_replica cell regresses out of its acceptance envelope at the
+gated concurrencies:
+
+  - ``hotspot_ratio_replica`` > 1.2: the fabric hotspot is back.  The
+    metric is critical-link demand bytes (sum over decode steps of the
+    max per-device fetch demand) relative to the pressure_aware
+    envelope — see the sweep's module docstring for why raw end-to-end
+    exposed seconds are NOT comparable across cells (the radix cells
+    run ~35% fewer, larger decode steps; each extra step donates flat
+    base-compute hide window, a volume effect that is the TTFT win
+    itself, not the hotspot).
+  - ``ttft_win_replica`` < 2.0: the radix TTFT win over pressure_aware
+    was lost.
+  - ``ttft_replica_vs_affinity`` > 1.2: replication/dedup/admission
+    overhead ate the PR 5 latency win.
+  - ``pool_bytes_ratio`` >= 1.0: page dedup stopped saving pool bytes
+    per request vs the affinity baseline.
+
+Usage: ``python -m benchmarks.locality_gate [--json BENCH_locality.json]``
+"""
+import argparse
+import json
+import sys
+
+GATED_CONCURRENCIES = (16, 32)
+HOTSPOT_MAX = 1.2
+TTFT_WIN_MIN = 2.0
+TTFT_VS_AFFINITY_MAX = 1.2
+POOL_RATIO_MAX = 1.0
+
+
+def check(doc: dict) -> list:
+    """Return a list of failure strings (empty = gate passes)."""
+    envelopes = {e["concurrency"]: e for e in doc.get("envelopes", [])}
+    failures = []
+    for conc in GATED_CONCURRENCIES:
+        env = envelopes.get(conc)
+        if env is None:
+            failures.append(f"conc={conc}: no envelope row in artifact")
+            continue
+        hotspot = env.get("hotspot_ratio_replica", float("inf"))
+        if hotspot > HOTSPOT_MAX:
+            failures.append(
+                f"conc={conc}: hotspot_ratio_replica {hotspot:.3f} > "
+                f"{HOTSPOT_MAX} (critical-link demand vs pressure_aware)")
+        win = env.get("ttft_win_replica", 0.0)
+        if win < TTFT_WIN_MIN:
+            failures.append(
+                f"conc={conc}: ttft_win_replica {win:.2f}x < "
+                f"{TTFT_WIN_MIN}x (radix TTFT win lost)")
+        vs_aff = env.get("ttft_replica_vs_affinity", float("inf"))
+        if vs_aff > TTFT_VS_AFFINITY_MAX:
+            failures.append(
+                f"conc={conc}: ttft_replica_vs_affinity {vs_aff:.3f} > "
+                f"{TTFT_VS_AFFINITY_MAX} (replication overhead)")
+        pool = env.get("pool_bytes_ratio", float("inf"))
+        if pool >= POOL_RATIO_MAX:
+            failures.append(
+                f"conc={conc}: pool_bytes_ratio {pool:.3f} >= "
+                f"{POOL_RATIO_MAX} (dedup saves nothing)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_locality.json")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.json) as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"locality gate: cannot read {args.json}: {e}")
+        return 2
+    failures = check(doc)
+    if failures:
+        print("locality gate: FAIL")
+        for line in failures:
+            print(f"  - {line}")
+        return 1
+    envs = doc.get("envelopes", [])
+    for e in envs:
+        if e["concurrency"] in GATED_CONCURRENCIES:
+            print(f"locality gate: conc={e['concurrency']} "
+                  f"hotspot={e['hotspot_ratio_replica']:.3f}x "
+                  f"ttft_win={e['ttft_win_replica']:.2f}x "
+                  f"pool={e['pool_bytes_ratio']:.2f}x  OK")
+    print("locality gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,23 +1,49 @@
-"""Prefix-locality ablation: radix_affinity vs pressure_aware on CXL.
+"""Prefix-locality ablation: pressure_aware vs radix_affinity vs
+radix_replica on CXL.
 
-Beyond-paper sweep (PR 5, serving/radix.py + core/placement.py): on a
-shared-prefix workload (system prompts, few-shot templates — requests
-reuse a cached prompt prefix with probability ``REUSE_P``) the radix
-prefix cache only pays off when placement puts a reusing request on the
-device that HOLDS its cached prefix: reuse there skips the matched
-tokens' prefill recompute and their pool write (a device-local copy),
-while off-device the prefix would cross two fabric links and is
-recomputed instead.
+Beyond-paper sweep (PR 5 radix affinity + PR 6 replication/dedup,
+serving/radix.py + core/placement.py): on a shared-prefix workload
+(system prompts, few-shot templates — requests reuse a cached prompt
+prefix with probability ``REUSE_P``) the radix prefix cache only pays
+off when placement puts a reusing request on a device that HOLDS its
+cached prefix: reuse there skips the matched tokens' prefill recompute
+and their pool write, while off-device the prefix would cross two
+fabric links and is recomputed instead.
 
 ``pressure_aware`` balances link pressure but scatters prefix groups
 across devices (every reuse is a coin flip); ``radix_affinity`` weighs
-the locality benefit (saved prefill + write seconds) against the live
-pressure gap, capacity always winning.  Reported per cell: TTFT, prefill
-write bytes, reused prefix tokens, and hit rate — the acceptance claim
-is lower write bytes and TTFT at no hit-rate loss.
+the locality benefit against the live pressure gap — and concentrates
+hot prefixes on one link (the PR 5 exposed-fabric regression).
+``radix_replica`` adds the PR 6 mechanisms: hot-prefix replication
+(copy the prefix to the least-pressured device when corrected pressure
+on the owning link covers the one-time copy cost), refcounted page
+dedup (matched bytes are shared with the cache, not privately booked),
+and radix-aware admission.  The acceptance claim: radix_replica keeps
+the TTFT win (within 1.2x of radix_affinity) while the fabric hotspot
+returns to <= 1.2x the pressure_aware envelope and pool bytes per
+request drop.
+
+**The envelope metric.**  The hotspot envelope is measured on
+``critical_demand_bytes`` — the sum over decode steps of the MAX
+per-device fetch demand, i.e. the issued traffic serialized on each
+step's critical-path link.  Raw end-to-end exposed seconds are NOT
+comparable across these cells: exposure accrues per step against a
+hide window with a flat base-compute term, and the radix cells finish
+prefill ~2-3x faster, so they run ~35% fewer (larger) decode steps —
+each step pressure_aware additionally runs donates ~1.8 ms of free
+hide window (measured by fitting exposed ~= A*imbalance + steps*D - E
+across the three cells: D ~= -1.8 ms/step).  That volume effect is the
+TTFT win itself, not the hotspot; total fetched bytes are identical
+across all three policies.  ``critical_demand_bytes`` isolates exactly
+the quantity replication flattens: pressure_aware's per-step balance
+makes it the floor (ratio 1.0 by construction), PR 5 radix_affinity
+concentrates hot prefixes to ~1.31x, replication returns it under
+1.2x.  Raw exposed seconds are still reported per row for reference.
 
 Writes a ``BENCH_locality.json`` artifact (the `make bench-smoke` / CI
-contract): one row per (concurrency, policy) cell.
+contract, gated by benchmarks/locality_gate.py): one row per
+(concurrency, policy) cell, p50/p99 latencies, pool bytes per request,
+plus an ``envelopes`` section with the acceptance ratios.
 """
 import argparse
 import json
@@ -34,57 +60,104 @@ REUSE_P = 0.75      # fraction of arrivals reusing a live prefix group
 BUFFER = 2048
 OVERLAP = 0.3
 
+POLICIES = ("pressure_aware", "radix_affinity", "radix_replica")
+
+
+def _sim_cfg(conc: int, policy: str) -> SimConfig:
+    radix = policy != "pressure_aware"
+    return SimConfig(concurrency=conc, round1=True, overlap_frac=OVERLAP,
+                     device_buffer=BUFFER, radix_affinity=radix,
+                     placement=None if radix else "pressure_aware",
+                     replicate_prefixes=policy == "radix_replica",
+                     dedup_pages=policy == "radix_replica",
+                     radix_admission=policy == "radix_replica")
+
 
 def run(csv=None, quick=False, out_json="BENCH_locality.json"):
     concs = CONCURRENCIES[:2] if quick else CONCURRENCIES
     model = model_profile()
     backend = default_backends()["cxl"]
-    print("\n== Locality sweep: pressure_aware vs radix_affinity (CXL, "
-          f"shared-prefix reuse_p={REUSE_P}) ==")
-    rows = []
+    print("\n== Locality sweep: pressure_aware vs radix_affinity vs "
+          f"radix_replica (CXL, shared-prefix reuse_p={REUSE_P}) ==")
+    rows, envelopes = [], []
     for conc in concs:
         n = conc * (3 if quick else 5)
         cells = {}
-        for policy in ("pressure_aware", "radix_affinity"):
+        for policy in POLICIES:
             reqs = shared_prefix_trace(
                 n, prefix_len=PREFIX, suffix_len=SUFFIX,
                 output_len=OUT_LEN, reuse_p=REUSE_P, seed=1)
-            radix = policy == "radix_affinity"
-            r = simulate(reqs, model, backend,
-                         SimConfig(concurrency=conc, round1=True,
-                                   overlap_frac=OVERLAP,
-                                   device_buffer=BUFFER,
-                                   radix_affinity=radix,
-                                   placement=None if radix
-                                   else "pressure_aware"))
+            r = simulate(reqs, model, backend, _sim_cfg(conc, policy))
             cells[policy] = r
             rows.append(dict(
                 concurrency=conc, placement=policy,
                 ttft_mean_s=r["ttft_mean_s"],
+                ttft_p50_s=r["ttft_p50_s"],
+                ttft_p99_s=r["ttft_p99_s"],
+                tbt_mean_s=r["tbt_mean_s"],
+                tbt_p50_s=r["tbt_p50_s"],
+                tbt_p99_s=r["tbt_p99_s"],
                 bytes_written=r["bytes_written"],
+                critical_demand_bytes=r.get("critical_demand_bytes", 0.0),
                 radix_hit_tokens=r["radix_hit_tokens"],
+                replicated_bytes=r.get("replicated_bytes", 0.0),
+                dedup_shared_bytes=r.get("dedup_shared_bytes", 0.0),
+                pool_bytes_per_req=r.get("pool_bytes_per_req", 0.0),
                 throughput_tok_s=r["throughput_tok_s"],
                 exposed_fabric_s=r["exposed_fabric_s"],
                 hit_rate=r["sim_hit_rate"]))
-        pa, ra = cells["pressure_aware"], cells["radix_affinity"]
-        wr_cut = 1 - ra["bytes_written"] / max(pa["bytes_written"], 1e-9)
-        ttft_cut = 1 - ra["ttft_mean_s"] / max(pa["ttft_mean_s"], 1e-12)
-        print(f"conc={conc:>4}  ttft {pa['ttft_mean_s']:.2f}s -> "
-              f"{ra['ttft_mean_s']:.2f}s ({ttft_cut*100:+.1f}%)  "
-              f"written {pa['bytes_written']:.2e} -> "
-              f"{ra['bytes_written']:.2e} ({wr_cut*100:+.1f}%)  "
-              f"reused {ra['radix_hit_tokens']:.0f} tok  "
-              f"hit {pa['sim_hit_rate']:.3f}/{ra['sim_hit_rate']:.3f}")
+        pa = cells["pressure_aware"]
+        ra = cells["radix_affinity"]
+        rr = cells["radix_replica"]
+        # the acceptance envelope (benchmarks/locality_gate.py contract):
+        # critical-link demand vs the pressure_aware envelope (see the
+        # module docstring for why raw exposed seconds are not the
+        # metric), the TTFT win vs pressure_aware, replica TTFT vs the
+        # affinity baseline, and the dedup pool-byte saving
+        env = dict(
+            concurrency=conc,
+            hotspot_ratio_affinity=(ra["critical_demand_bytes"]
+                                    / max(pa["critical_demand_bytes"],
+                                          1e-9)),
+            hotspot_ratio_replica=(rr["critical_demand_bytes"]
+                                   / max(pa["critical_demand_bytes"],
+                                         1e-9)),
+            exposed_ratio_affinity=(ra["exposed_fabric_s"]
+                                    / max(pa["exposed_fabric_s"], 1e-9)),
+            exposed_ratio_replica=(rr["exposed_fabric_s"]
+                                   / max(pa["exposed_fabric_s"], 1e-9)),
+            ttft_win_affinity=(pa["ttft_mean_s"]
+                               / max(ra["ttft_mean_s"], 1e-12)),
+            ttft_win_replica=(pa["ttft_mean_s"]
+                              / max(rr["ttft_mean_s"], 1e-12)),
+            ttft_replica_vs_affinity=(rr["ttft_mean_s"]
+                                      / max(ra["ttft_mean_s"], 1e-12)),
+            pool_bytes_ratio=(rr["pool_bytes_per_req"]
+                              / max(ra["pool_bytes_per_req"], 1e-9)),
+        )
+        envelopes.append(env)
+        print(f"conc={conc:>4}  ttft {pa['ttft_mean_s']:.2f}s / "
+              f"{ra['ttft_mean_s']:.2f}s / {rr['ttft_mean_s']:.2f}s  "
+              f"hotspot {env['hotspot_ratio_affinity']:.2f}x -> "
+              f"{env['hotspot_ratio_replica']:.2f}x  "
+              f"exposed {pa['exposed_fabric_s']:.2f}s / "
+              f"{ra['exposed_fabric_s']:.2f}s / "
+              f"{rr['exposed_fabric_s']:.2f}s  "
+              f"pool B/req {ra['pool_bytes_per_req']:.2e} -> "
+              f"{rr['pool_bytes_per_req']:.2e}  "
+              f"(pa / affinity / replica)")
         if csv is not None:
             csv.add(f"locality/conc{conc}", 0.0,
-                    f"ttft_cut={ttft_cut*100:+.1f}% "
-                    f"write_cut={wr_cut*100:+.1f}%")
+                    f"ttft_win={env['ttft_win_replica']:.2f}x "
+                    f"hotspot_ratio={env['hotspot_ratio_replica']:.2f}x "
+                    f"pool_ratio={env['pool_bytes_ratio']:.2f}x")
     if out_json:
         with open(out_json, "w") as f:
             json.dump({"model": PAPER_MODEL, "backend": "cxl",
                        "prefix_len": PREFIX, "suffix_len": SUFFIX,
                        "reuse_p": REUSE_P, "device_buffer": BUFFER,
-                       "quick": quick, "rows": rows}, f, indent=2)
+                       "quick": quick, "rows": rows,
+                       "envelopes": envelopes}, f, indent=2)
         print(f"wrote {out_json} ({len(rows)} rows)")
     return rows
 

@@ -87,6 +87,23 @@ class SACConfig:
                                      # LRU cached prefixes (0 = only evict
                                      # when placement actually fails)
 
+    # --- PR 6: hot-prefix replication / page dedup / radix admission ---
+    replicate_prefixes: bool = False  # copy hot cached prefixes to the
+                                      # least-pressured pool device when
+                                      # the owning link's pressure gap
+                                      # pays back the one-time copy cost
+    replicate_horizon_steps: int = 64  # decode steps over which a
+                                       # replica's per-step pressure
+                                       # relief must amortize its copy
+                                       # cost before replication fires
+    dedup_pages: bool = False         # refcount-share matched prefix
+                                      # pages between the radix cache and
+                                      # live slots instead of holding
+                                      # private pool copies
+    radix_admission: bool = False     # admit waiting requests by expected
+                                      # prefix reuse (match length) rather
+                                      # than FCFS
+
 
 # ---------------------------------------------------------------------------
 # Model architecture configuration

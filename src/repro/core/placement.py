@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -217,9 +217,16 @@ class RadixAffinityPolicy(PressureAwarePolicy):
         hint = placer.affinity_hint
         if hint is None:
             return ordered
-        dev, bonus_s = hint
-        if not 0 <= dev < placer.n_devices:
+        devs, bonus_s = hint
+        devs = [d for d in devs if 0 <= d < placer.n_devices]
+        if not devs:
             return ordered
+        # PR 6: the hint may name SEVERAL devices (a replicated prefix —
+        # every copy is equally reusable), so promote the cheapest copy,
+        # not the single owner: the least-corrected-pressure replica
+        # competes against the globally best link
+        dev = min(devs, key=lambda d: (pressure[d], placer.bytes_used[d],
+                                       placer.pages_used[d], d))
         if pressure[dev] <= pressure[ordered[0]] + max(bonus_s, 0.0):
             ordered.remove(dev)
             ordered.insert(0, dev)
@@ -315,6 +322,21 @@ class Placer:
         raw = [max(float(p), 0.0) for p in self._pressure_fn()]
         return (raw + [0.0] * self.n_devices)[:self.n_devices]
 
+    def corrected_pressure(self) -> List[float]:
+        """Pressure as the active policy will see it at the NEXT
+        placement: the raw feed plus pressure-keyed policies' in-flight
+        booking correction.  The PR 6 replication trigger reads this —
+        during a same-wave admission burst the raw feed is a stale
+        snapshot, but every booking already committed raises its
+        device's corrected pressure, so the burst itself can push the
+        copy-holding link over the replication threshold before the
+        feed catches up.  Pressure-blind policies fall back to the raw
+        feed."""
+        corr = getattr(self.policy, "_corrected", None)
+        if corr is not None:
+            return corr(self)
+        return self.device_pressure()
+
     # -- placement ---------------------------------------------------------
     def fits(self, device: int, n_bytes: float = 0.0, n_pages: int = 0
              ) -> bool:
@@ -322,20 +344,26 @@ class Placer:
                 and self.pages_used[device] + n_pages <= self.capacity_pages)
 
     def place(self, request_id: int, *, n_bytes: float = 0.0,
-              n_pages: int = 0, affinity: Optional[int] = None,
+              n_pages: int = 0, affinity=None,
               affinity_s: float = 0.0) -> Optional[int]:
         """Book ``request_id`` on the first policy-ordered device with
         room; returns the device or None if every device is full.
 
-        ``affinity``/``affinity_s`` (radix_affinity policy): the device
-        holding the request's cached prefix and the seconds reuse there
-        would save.  Pressure-blind policies ignore the hint; no policy
-        may use it to override capacity — it only reorders candidates.
+        ``affinity``/``affinity_s`` (radix_affinity policy): the
+        device(s) holding the request's cached prefix — an int, or a
+        sequence of ints when the prefix is replicated (PR 6) — and the
+        seconds reuse there would save.  Pressure-blind policies ignore
+        the hint; no policy may use it to override capacity — it only
+        reorders candidates.
         """
         assert request_id not in self._bookings, \
             f"request {request_id} already placed"
-        self.affinity_hint = ((affinity, affinity_s)
-                              if affinity is not None else None)
+        if affinity is None:
+            self.affinity_hint = None
+        else:
+            devs = ((affinity,) if isinstance(affinity, int)
+                    else tuple(affinity))
+            self.affinity_hint = (devs, affinity_s) if devs else None
         try:
             order = self.policy.order(self)
         finally:
@@ -367,13 +395,41 @@ class Placer:
         their own pressure-feed correction at finish time)."""
         self.policy.on_departure(self, device, seconds)
 
+    def shrink(self, request_id: int, *, n_bytes: float = 0.0,
+               n_pages: int = 0) -> Tuple[float, int]:
+        """Shrink a live booking in place (page dedup, PR 6): a request
+        whose leading pages are refcount-shared with the radix cache
+        returns its private copies to the pool, so its booking — and the
+        device occupancy it charges — must drop by exactly that much NOW,
+        not at release.  Release then subtracts only the shrunk booking,
+        which is what keeps a departing sharer from subtracting bytes
+        the cache (or another sharer) still holds.  Clamped to the
+        booking; returns (bytes, pages) actually shrunk."""
+        bk = self._bookings.get(request_id)
+        if bk is None:
+            return 0.0, 0
+        n_bytes = min(max(n_bytes, 0.0), bk.n_bytes)
+        n_pages = min(max(n_pages, 0), bk.n_pages)
+        bk.n_bytes -= n_bytes
+        bk.n_pages -= n_pages
+        self.bytes_used[bk.device] = max(
+            0.0, self.bytes_used[bk.device] - n_bytes)
+        self.pages_used[bk.device] = max(
+            0, self.pages_used[bk.device] - n_pages)
+        return n_bytes, n_pages
+
     def release(self, request_id: int) -> Optional[int]:
-        """Undo a booking; returns the device it lived on (None if unknown)."""
+        """Undo a booking; returns the device it lived on (None if
+        unknown).  Subtracts the booking's CURRENT size — a booking
+        shrunk by page dedup (``shrink``) releases only what it still
+        holds, never bytes shared pages' other owners keep charging."""
         bk = self._bookings.pop(request_id, None)
         if bk is None:
             return None
-        self.bytes_used[bk.device] -= bk.n_bytes
-        self.pages_used[bk.device] -= bk.n_pages
+        self.bytes_used[bk.device] = max(
+            0.0, self.bytes_used[bk.device] - bk.n_bytes)
+        self.pages_used[bk.device] = max(
+            0, self.pages_used[bk.device] - bk.n_pages)
         self.counts[bk.device] -= 1
         return bk.device
 

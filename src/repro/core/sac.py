@@ -238,6 +238,21 @@ class SACSystem:
         self.radix_evicted_pages = 0     # cumulative cache pages returned
                                          # to the allocator (place-time
                                          # pressure + headroom evictions)
+        # PR 6 page dedup: requests whose leading pages are refcount-
+        # shared with a cached prefix (request_id -> that shared page
+        # list), per-page sharer refcounts, and the orphan set — shared
+        # pages whose owning copy left (owner departed un-retained, or
+        # the cache evicted under a sharer) stay allocated + booked
+        # until the LAST sharer departs, then return to the pool here
+        self._shared_pages: Dict[int, list] = {}
+        self._shared_refs: Dict[Tuple[int, int], int] = {}
+        self._orphaned = [set() for _ in range(n_pool_devices)]
+        self.replicated_pages = 0        # cumulative replica pages copied
+        self.dedup_shared_pages = 0      # cumulative pages refcount-shared
+                                         # instead of privately held
+        self.booked_pages_cum = 0        # cumulative request pages booked
+                                         # net of dedup (the pool-bytes-
+                                         # per-request numerator)
 
     # -- placement ---------------------------------------------------------
     def set_pressure_fn(self, fn) -> None:
@@ -257,16 +272,17 @@ class SACSystem:
         self.radix = radix
 
     def place(self, request_id: int, n_tokens: int, *,
-              affinity: Optional[int] = None, affinity_s: float = 0.0
+              affinity=None, affinity_s: float = 0.0
               ) -> Optional[RequestPages]:
         """Allocate pool pages for a request on one device (paper stores a
         request's KV within a single device; the shared placer interleaves
         requests across devices).
 
         ``affinity``/``affinity_s`` thread a radix-matched prefix's
-        device (and the seconds reuse there saves) to the placement
-        policy.  Under pool page pressure, unpinned LRU cached prefixes
-        are evicted until the request fits or nothing is evictable.
+        device — or, with replicas, every device holding a copy — and
+        the seconds reuse there saves to the placement policy.  Under
+        pool page pressure, unpinned LRU cached prefixes are evicted
+        until the request fits or nothing is evictable.
         """
         n_pages = pages_for_tokens(n_tokens, self.page_tokens)
         n_bytes = n_pages * self.page_bytes
@@ -286,7 +302,78 @@ class SACSystem:
         self.requests[request_id] = rp
         for pno, page in enumerate(pages):
             self.directory.publish(request_id, pno, dev, page)
+        self.booked_pages_cum += n_pages
         return rp
+
+    # -- hot-prefix replication / page dedup (PR 6) ------------------------
+    def replica_copy_cost_s(self, n_pages: int) -> float:
+        """One-time fabric cost of copying ``n_pages`` to another pool
+        device (read leg + write leg run on different links; a symmetric
+        fabric makes them equal, so charge one bulk transfer)."""
+        return self.fabric.bulk_transfer_time(n_pages * self.page_bytes)
+
+    def replicate_prefix(self, tokens, pages, src_device: int,
+                         dst_device: int) -> int:
+        """Copy a cached prefix's pages onto ``dst_device`` (hot-prefix
+        replication): allocate fresh pages there, register them as a
+        replica on the backing radix node, book them against the
+        device's budgets, and charge the one-time copy traffic — a bulk
+        read on the owning link plus a bulk write on the target link.
+        The copy is charged UNkeyed: it belongs to the cache, not to any
+        request, so no departure ever subtracts it from the pressure
+        signal.  Returns pages replicated (0 when the target doesn't
+        fit, the node already has a copy there, or no node matches)."""
+        if (self.radix is None or src_device == dst_device
+                or not 0 <= dst_device < self.n_devices):
+            return 0
+        n_pages = len(pages)
+        n_bytes = n_pages * self.page_bytes
+        if n_pages == 0 or not self.placer.fits(dst_device, n_bytes=n_bytes,
+                                                n_pages=n_pages):
+            return 0
+        new_pages = self.allocator.alloc(dst_device, n_pages)
+        if new_pages is None:
+            return 0
+        took = self.radix.add_replica(tokens, dst_device, new_pages)
+        if not took:
+            self.allocator.release(dst_device, new_pages)
+            return 0
+        self.placer.adjust(dst_device, n_bytes=n_bytes, n_pages=n_pages)
+        self._radix_pages[dst_device].update(new_pages)
+        self.traffic.bulk_fetch(n_bytes, device=src_device)
+        self.traffic.write_back(n_bytes, device=dst_device)
+        self.replicated_pages += took
+        return took
+
+    def dedup_match(self, request_id: int, shared_pages) -> int:
+        """Refcount-share a matched prefix's cached pages with a live
+        request (page dedup): the request's freshly allocated private
+        copies of the matched prefix return straight to the pool, its
+        booking shrinks by the same amount, and its directory entries
+        re-point at the cached pages.  Decode never mutates prefix
+        pages, so no copy-on-write path is needed; the caller keeps the
+        backing radix path pinned for the request's lifetime, which is
+        what keeps the shared pages resident.  Returns pages shared."""
+        rp = self.requests.get(request_id)
+        if rp is None or request_id in self._shared_pages:
+            return 0
+        n = min(len(shared_pages), len(rp.pages))
+        if n <= 0:
+            return 0
+        shared = list(shared_pages)[:n]
+        self.allocator.release(rp.device, rp.pages[:n])
+        self.placer.shrink(request_id, n_bytes=n * self.page_bytes,
+                           n_pages=n)
+        rp.pages = shared + rp.pages[n:]
+        for pno, page in enumerate(shared):
+            self.directory.publish(request_id, pno, rp.device, page)
+        self._shared_pages[request_id] = shared
+        for p in shared:
+            k = (rp.device, p)
+            self._shared_refs[k] = self._shared_refs.get(k, 0) + 1
+        self.dedup_shared_pages += n
+        self.booked_pages_cum -= n
+        return n
 
     def release(self, request_id: int, *, keep_pages: int = 0) -> int:
         """Free a finished request's pool pages.
@@ -299,11 +386,39 @@ class SACSystem:
         page actually freed is purged from the attached index in the
         same motion — the index can never advertise a freed page.
         Returns the number of pages retained (0 on unknown requests).
+
+        Shared pages (PR 6 dedup) never free here under another live
+        sharer: pages this request BORROWED only drop a refcount (the
+        last sharer out frees an orphaned page); pages this request OWNS
+        that others still share turn sticky — excluded from invalidation
+        and from the freed list, they stay allocated + booked as cache
+        pages (if the index still references them) or orphans (freed at
+        the last sharer's departure).  No double-free, no leak.
         """
         rp = self.requests.pop(request_id, None)
         if rp is None:
             return 0
         self.placer.release(request_id)
+        dev = rp.device
+        # drop this request's borrowed-page refcounts first; an orphan
+        # whose last sharer just left finally returns to the pool
+        borrowed = set(self._shared_pages.pop(request_id, []))
+        for p in borrowed:
+            k = (dev, p)
+            left = self._shared_refs.get(k, 0) - 1
+            if left > 0:
+                self._shared_refs[k] = left
+                continue
+            self._shared_refs.pop(k, None)
+            if p in self._orphaned[dev]:
+                self._orphaned[dev].discard(p)
+                self.allocator.release(dev, [p])
+                self.placer.adjust(dev, n_bytes=-self.page_bytes,
+                                   n_pages=-1)
+        # pages OTHER live requests still share out of this one's
+        # allocation are sticky: this departure must not free them
+        sticky = {p for p in rp.pages
+                  if p not in borrowed and (dev, p) in self._shared_refs}
         keep = max(0, min(int(keep_pages), len(rp.pages)))
         kept: list = []
         if self.radix is not None:
@@ -312,18 +427,29 @@ class SACSystem:
             # prefix is unreadable), which may un-register pages inside
             # the keep range too — retention is node-granular, so only
             # pages a surviving node still references are retained
-            if keep < len(rp.pages):
-                self.radix.invalidate_pages(rp.device, rp.pages[keep:])
+            tail = [p for p in rp.pages[keep:]
+                    if p not in borrowed and p not in sticky]
+            if tail:
+                self.radix.invalidate_pages(dev, tail)
             kept = [p for p in rp.pages[:keep]
-                    if self.radix.owns(rp.device, p)]
+                    if p not in borrowed and self.radix.owns(dev, p)]
         kept_set = set(kept)
-        freed = [p for p in rp.pages if p not in kept_set]
+        for p in sticky - kept_set:
+            if self.radix is not None and self.radix.owns(dev, p):
+                kept.append(p)      # sharer's pin keeps the node alive
+            else:
+                self._orphaned[dev].add(p)
+                self.placer.adjust(dev, n_bytes=self.page_bytes, n_pages=1)
+        kept_set = set(kept)
+        freed = [p for p in rp.pages
+                 if p not in kept_set and p not in borrowed
+                 and p not in self._orphaned[dev]]
         if kept:
-            self.placer.adjust(rp.device, n_bytes=len(kept) * self.page_bytes,
+            self.placer.adjust(dev, n_bytes=len(kept) * self.page_bytes,
                                n_pages=len(kept))
-            self._radix_pages[rp.device].update(kept)
+            self._radix_pages[dev].update(kept)
         if freed:
-            self.allocator.release(rp.device, freed)
+            self.allocator.release(dev, freed)
         for pno in range(len(rp.pages)):
             self.directory.unpublish(request_id, pno)
         return len(kept)
@@ -342,10 +468,19 @@ class SACSystem:
             if not owned:
                 continue
             self._radix_pages[dev].difference_update(owned)
-            self.allocator.release(dev, owned)
-            self.placer.adjust(dev, n_bytes=-len(owned) * self.page_bytes,
-                               n_pages=-len(owned))
-            n_freed += len(owned)
+            # a cache page a live request still refcount-shares must not
+            # return to the pool under the sharer's feet: it is orphaned
+            # (still allocated + booked) until the last sharer departs
+            free_now = [p for p in owned
+                        if (dev, p) not in self._shared_refs]
+            self._orphaned[dev].update(
+                p for p in owned if (dev, p) in self._shared_refs)
+            if free_now:
+                self.allocator.release(dev, free_now)
+                self.placer.adjust(
+                    dev, n_bytes=-len(free_now) * self.page_bytes,
+                    n_pages=-len(free_now))
+            n_freed += len(free_now)
         self.radix_evicted_pages += n_freed
         return n_freed
 

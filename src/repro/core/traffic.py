@@ -44,6 +44,17 @@ class TrafficStats:
     prefetched_entries: float = 0.0  # speculative/warm-up entries inserted
     prefetch_useful: float = 0.0     # prefetched entries later demand-hit
     prefetch_bytes: float = 0.0      # fabric bytes spent on prefetch
+    critical_demand_bytes: float = 0.0   # sum over steps of the MAX per-
+                                    # device demand bytes — the step fetch
+                                    # critical path.  Unlike end-to-end
+                                    # exposed seconds this is independent
+                                    # of the hide-window volume (how many
+                                    # steps the run took), so it is the
+                                    # fair link-hotspot envelope metric
+                                    # (benchmarks/locality_gate.py)
+    critical_issued_s: float = 0.0  # engine twin: sum over steps of the
+                                    # max per-device ISSUED seconds (the
+                                    # overlap queues' critical link)
     device_demand_bytes: List[float] = dataclasses.field(
         default_factory=list)       # cumulative fetch demand per device
     device_issued_s: List[float] = dataclasses.field(
@@ -155,6 +166,11 @@ class OverlapQueue:
     def pending_s(self) -> float:
         return sum(self._pending)
 
+    @property
+    def peak_pending_s(self) -> float:
+        """This step's critical-path link: the max per-device queue."""
+        return max(self._pending, default=0.0)
+
     def drain(self, compute_s: float) -> float:
         """End-of-step: return exposed seconds, clear the queues."""
         exposed = max((self.pipeline.exposed_time(p, compute_s)
@@ -209,6 +225,7 @@ class FabricAccountant:
         timed ops then charge exposed at issue time."""
         if self.overlap is None:
             return 0.0
+        self.stats.critical_issued_s += self.overlap.peak_pending_s
         exposed = self.overlap.drain(compute_s)
         self.charge_exposed(exposed)
         return exposed
@@ -354,6 +371,8 @@ class FabricAccountant:
         for d, n in enumerate(demand):
             self.stats.device_demand_bytes[d] += n
         self.stats.bytes_fetched += sum(demand)
+        if demand:
+            self.stats.critical_demand_bytes += max(demand)
         self._step_demand = [0.0] * self.n_devices
         return demand
 

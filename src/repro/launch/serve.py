@@ -52,6 +52,23 @@ def main():
                     help="disable the radix prefix cache entirely "
                          "(serving/radix.py; the A/B baseline for "
                          "prefix-locality wins)")
+    ap.add_argument("--replicate-prefixes", action="store_true",
+                    help="hot-prefix replication (PR 6): copy a matched "
+                         "prefix's pages to the least-pressured pool "
+                         "device when corrected pressure on the owning "
+                         "link covers the one-time copy cost, so "
+                         "placement can split a hot prefix's load "
+                         "across links (requires the radix cache)")
+    ap.add_argument("--dedup-pages", action="store_true",
+                    help="refcounted page dedup (PR 6): a same-device "
+                         "prefix match shares the cached pages with the "
+                         "new slot instead of booking private copies "
+                         "(decode never mutates prefix pages)")
+    ap.add_argument("--radix-admission", action="store_true",
+                    help="radix-aware admission (PR 6): admit the "
+                         "waiting request with the longest cached-"
+                         "prefix match first (FCFS tie-break) instead "
+                         "of strict FCFS")
     ap.add_argument("--resize-epsilon", type=float, default=None,
                     help="resize hysteresis: skip the online LayerSizer "
                          "re-apportioning when no layer's per-interval "
@@ -105,6 +122,11 @@ def main():
     if cfg.enc_dec:
         raise SystemExit("serve driver targets decoder-only archs; "
                          "whisper decode is exercised in tests")
+    if ((args.replicate_prefixes or args.dedup_pages
+         or args.radix_admission) and args.no_radix):
+        raise SystemExit("--replicate-prefixes/--dedup-pages/"
+                         "--radix-admission need the radix cache "
+                         "(drop --no-radix)")
     eng = Engine(cfg, slots=args.slots, max_ctx=args.max_ctx,
                  backend=args.backend, mode=args.mode, seed=args.seed,
                  track_buffer=not args.no_buffer,
@@ -113,7 +135,10 @@ def main():
                  arbiter=args.arbiter or None,
                  layer_sizing=args.layer_sizing,
                  placement=args.placement,
-                 radix=not args.no_radix)
+                 radix=not args.no_radix,
+                 replicate_prefixes=args.replicate_prefixes or None,
+                 dedup_pages=args.dedup_pages or None,
+                 radix_admission=args.radix_admission or None)
     if args.shared_prefix:
         if args.shared_prefix >= args.ctx:
             raise SystemExit("--shared-prefix must be below --ctx")

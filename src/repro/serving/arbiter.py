@@ -74,6 +74,18 @@ class DemandTracker:
         self._dev_mark: List[float] = [0.0] * self.n_devices
         self._req_mark: Dict[Hashable, float] = {}
         self._req_last: Dict[Hashable, float] = {}
+        self._pending: List[float] = [0.0] * self.n_devices
+
+    def note_transfer(self, device: int, seconds: float) -> None:
+        """Attribute UNkeyed cache-owned traffic (a hot-prefix replica
+        copy, PR 6) to a link's next step signal.  SIMULATOR-ONLY
+        companion to ``set_step``: the engine's ``observe`` path reads
+        cumulative counters that already include replica copies, so
+        calling this there would double-count.  The seconds fold into
+        the next ``set_step`` and, being unkeyed, no departure ever
+        subtracts them."""
+        if 0 <= device < self.n_devices and seconds > 0:
+            self._pending[device] += float(seconds)
 
     def observe(self, stats: TrafficStats, keys: Iterable[Hashable]
                 ) -> List[float]:
@@ -98,7 +110,11 @@ class DemandTracker:
         optionally each request's own share of them) were computed
         analytically — install them directly."""
         d = [max(float(x), 0.0) for x in demand_s]
-        self.last_demand_s = (d + [0.0] * self.n_devices)[:self.n_devices]
+        d = (d + [0.0] * self.n_devices)[:self.n_devices]
+        if any(self._pending):
+            d = [x + p for x, p in zip(d, self._pending)]
+            self._pending = [0.0] * self.n_devices
+        self.last_demand_s = d
         if request_shares is not None:
             for k, s in request_shares.items():
                 self._req_last[k] = float(s)

@@ -78,6 +78,10 @@ class EngineStats:
                                     # actually applied
     resize_skips: int = 0           # intervals skipped by the hysteresis
                                     # epsilon (rates barely moved)
+    replicated_pages: int = 0       # hot-prefix replica pages copied to a
+                                    # second pool device (PR 6)
+    dedup_shared_pages: int = 0     # request pages refcount-shared with
+                                    # the cache instead of held privately
     traffic: TrafficStats = dataclasses.field(default_factory=TrafficStats)
     # measured per-layer hot-tier outcomes ([L] arrays, accumulated per
     # step) — the LayerSizer's miss-rate signal (serving/arbiter.py)
@@ -205,6 +209,31 @@ class Engine:
     (``radix_hit_tokens`` changes timing and traffic — never tokens:
     prefill always recomputes the full prompt in-graph).  ``radix=False``
     disables the cache entirely (the A/B baseline).
+
+    PR 6 trades pool bytes for link bandwidth on hot prefixes:
+
+      - ``replicate_prefixes`` (default ``cfg.sac.replicate_prefixes``)
+        copies a matched prefix's pages to the least-pressured pool
+        device when the corrected pressure on the copy-holding link
+        covers the one-time copy cost within
+        ``cfg.sac.replicate_horizon_steps`` decode steps — placement
+        then picks the cheapest COPY (``MatchResult.copies``) instead
+        of the single owner, splitting a hot prefix's load across
+        links;
+      - ``dedup_pages`` (default ``cfg.sac.dedup_pages``) refcount-
+        shares a same-device match's cached pages with the new slot
+        instead of holding private pool copies (decode never mutates
+        prefix pages, so no copy-on-write is needed) — the slot's
+        booking shrinks by the shared bytes, multiplying effective pool
+        capacity under shared-prefix load;
+      - ``radix_admission`` (default ``cfg.sac.radix_admission``)
+        admits the waiting request with the longest page-granular match
+        against the current tree (FCFS tie-break) so batches sharing a
+        prefix land while the copy is hot.
+
+    All three change traffic, timing, and pool bytes — never decoded
+    tokens (prefill still recomputes the full prompt in-graph; page ids
+    are host-side bookkeeping).
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int = 4,
@@ -217,6 +246,9 @@ class Engine:
                  layer_sizing: Optional[str] = None,
                  placement: Optional[str] = None,
                  radix: bool = True,
+                 replicate_prefixes: Optional[bool] = None,
+                 dedup_pages: Optional[bool] = None,
+                 radix_admission: Optional[bool] = None,
                  topk_fn=None, seed: int = 0):
         self.cfg = cfg
         self.slots = slots
@@ -256,6 +288,16 @@ class Engine:
         self.radix = (RadixIndex(page_size=cfg.sac.page_size)
                       if radix else None)
         self.sac.attach_radix(self.radix)
+        # PR 6 knobs (all gated on the radix cache existing)
+        has_radix = self.radix is not None
+        self.replicate_on = bool(
+            (cfg.sac.replicate_prefixes if replicate_prefixes is None
+             else replicate_prefixes) and has_radix)
+        self.dedup_on = bool((cfg.sac.dedup_pages if dedup_pages is None
+                              else dedup_pages) and has_radix)
+        self.admission_on = bool(
+            (cfg.sac.radix_admission if radix_admission is None
+             else radix_admission) and has_radix)
         # per-slot radix bookkeeping: (pinned token paths — the matched
         # BACKING prefix and the request's own aligned path — and the
         # pages the index registered from this request's allocation)
@@ -409,11 +451,66 @@ class Engine:
                 - self.profile.prefill_s(prompt_len - matched)
                 + self.sac.fabric.bulk_transfer_time(saved_write))
 
+    def _pick_queue_index(self) -> int:
+        """Radix-aware admission: the waiting request with the longest
+        page-granular match against the CURRENT tree goes first (strict
+        ``>`` keeps FCFS as the tie-break), so batches sharing a prefix
+        land together while the copy is hot.  FCFS when the knob is
+        off or the queue is trivial."""
+        if not self.admission_on or len(self.queue) <= 1:
+            return 0
+        best, best_score = 0, -1
+        for i, req in enumerate(self.queue):
+            m = self.radix.match(
+                req.prompt_tokens[: req.context_len].tolist())
+            if m.paged_tokens > best_score:
+                best, best_score = i, m.paged_tokens
+        return best
+
+    def _maybe_replicate(self, m, toks: List[int], prompt_len: int):
+        """Hot-prefix replication trigger.  Fire when (a) the reuse
+        benefit itself covers the one-time copy cost and (b) the
+        CORRECTED pressure on the prefix's cheapest copy-holding link —
+        the raw feed plus the placer's in-flight booking correction, so
+        a same-wave admission burst counts before the feed catches up —
+        exceeds the one-time copy cost amortized over
+        ``cfg.sac.replicate_horizon_steps`` decode steps, with the copy
+        going to the least-pressured copy-free link (never a hotter
+        one).  Per-step backlog on the owning link must cover the bulk
+        copy's per-step share, or a lightly-loaded fabric would
+        replicate everything for nothing.  Returns the re-match
+        (placement must see the new copy) or None."""
+        pressure = self.sac.placer.corrected_pressure()
+        holders = [d for d in m.copies if 0 <= d < self.sac.n_devices]
+        others = [d for d in range(self.sac.n_devices)
+                  if d not in m.copies]
+        if not holders or not others:
+            return None
+        placer = self.sac.placer
+        src = min(holders, key=lambda d: pressure[d])
+        # ties (cold start: every link reads 0) break on booked bytes,
+        # then device id — a bare min() would funnel every group's
+        # first copy onto device 0
+        dst = min(others, key=lambda d: (pressure[d],
+                                         placer.bytes_used[d], d))
+        n_pages = len(m.copies[src])
+        copy_cost = self.sac.replica_copy_cost_s(n_pages)
+        bonus = self._locality_bonus_s(prompt_len, m.paged_tokens)
+        horizon = max(int(self.cfg.sac.replicate_horizon_steps), 1)
+        if (bonus < copy_cost or pressure[src] < pressure[dst]
+                or pressure[src] * horizon <= copy_cost):
+            return None
+        if not self.sac.replicate_prefix(list(m.pin_tokens),
+                                         m.copies[src], src, dst):
+            return None
+        self.stats.replicated_pages = self.sac.replicated_pages
+        return self.radix.match(toks)
+
     def _fill_slots(self):
         for s in range(self.slots):
             if self.slot_req[s] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            req = self.queue.pop(self._pick_queue_index())
             prompt = req.prompt_tokens[: req.context_len]
             toks = prompt.tolist()
             # radix prefix lookup — PAGE-granular reuse (crediting the
@@ -426,10 +523,17 @@ class Engine:
             if m is not None and m.hit:
                 pins.append(list(m.pin_tokens))
                 self.radix.pin(pins[-1])
+                if self.replicate_on:
+                    # the pin above keeps the node alive through the
+                    # copy; a successful replication re-matches so the
+                    # placer sees every copy (same node, same pin path)
+                    m2 = self._maybe_replicate(m, toks, len(prompt))
+                    if m2 is not None and m2.hit:
+                        m = m2
             bonus_s = (self._locality_bonus_s(len(prompt), m.paged_tokens)
                        if pins else 0.0)
             rp = self.sac.place(req.request_id, len(prompt) + req.output_len,
-                                affinity=m.device if pins else None,
+                                affinity=sorted(m.copies) if pins else None,
                                 affinity_s=bonus_s)
             if rp is None:
                 # pool exhausted even after radix eviction.  The pre-PR 5
@@ -450,17 +554,30 @@ class Engine:
                 break
             req.dispatch_s = self.clock_s
             req.pool_device = rp.device
-            # reuse is only real on the device holding the cached pages
-            # (off-device, the prefix would cross two fabric links —
-            # no better than recomputing); radix_affinity placement is
-            # what makes this coincide under low pressure
+            # reuse is only real on a device holding a copy of the
+            # cached pages (off-device, the prefix would cross two
+            # fabric links — no better than recomputing); radix_affinity
+            # placement + replication are what make this coincide
             matched = (m.paged_tokens
-                       if pins and rp.device == m.device else 0)
+                       if pins and rp.device in m.copies else 0)
             if pins and not matched:
                 self.radix.release(pins.pop())
             self.stats.radix_hit_tokens += matched
             if matched:
                 self.stats.radix_hit_requests += 1
+            # page dedup: share the matched copy's pages with this slot
+            # instead of holding private duplicates — the slot's own
+            # leading pages return to the pool and its booking shrinks.
+            # The backing pin (held for the request's lifetime) is what
+            # keeps the shared pages resident.
+            dedup_n = 0
+            if self.dedup_on and matched:
+                shared = m.copies[rp.device][: matched
+                                             // self.cfg.sac.page_size]
+                dedup_n = self.sac.dedup_match(req.request_id, shared)
+                if dedup_n:
+                    self.stats.dedup_shared_pages = \
+                        self.sac.dedup_shared_pages
             issued0 = self.stats.traffic.fabric_time_s
             # prefill this slot (batch of 1), splice into the shared
             # state — ALWAYS over the full prompt: the radix hit changes
@@ -480,7 +597,11 @@ class Engine:
             page_tokens = (len(prompt) // self.cfg.sac.page_size) \
                 * self.cfg.sac.page_size
             keep = 0
-            if self.radix is not None and page_tokens:
+            if self.radix is not None and page_tokens and not dedup_n:
+                # (with dedup, the slot's leading pages ARE the cached
+                # node's pages — inserting its own path would register a
+                # second owner for them; the backing pin + existing node
+                # already serve future matches)
                 own = toks[:page_tokens]
                 # register the request's ACTUAL pool pages (the pre-PR 5
                 # index advertised fabricated range(n) ids) — an
@@ -810,7 +931,14 @@ class Engine:
                    prefetched_entries=self.stats.prefetched_entries,
                    prefetch_useful=self.stats.prefetch_useful,
                    prefetch_wasted=self.stats.prefetch_wasted,
-                   prefetch_precision=self.stats.prefetch_precision)
+                   prefetch_precision=self.stats.prefetch_precision,
+                   replicated_pages=self.sac.replicated_pages,
+                   dedup_shared_pages=self.sac.dedup_shared_pages,
+                   critical_issued_s=(
+                       self.sac.traffic.stats.critical_issued_s),
+                   pool_bytes_per_req=(self.sac.booked_pages_cum
+                                       * self.sac.page_bytes
+                                       / max(len(requests), 1)))
         if self.arbiter is not None:
             out["arbiter_width_mean"] = (self._grant_sum / self._grant_n
                                          if self._grant_n else 0.0)

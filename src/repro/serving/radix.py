@@ -35,6 +35,15 @@ nodes).  ``match`` therefore reports the deepest paged node's (device,
 pages) as the reusable unit, with the match length rounded DOWN to page
 granularity — a raw edge walk can overshoot into page-less split nodes,
 and crediting those tokens would count reuse no page actually backs.
+
+PR 6 adds hot-prefix REPLICATION: a paged node can carry full copies of
+its page list on other devices (``add_replica``), all registered in the
+same owner map and reported by ``match`` through ``MatchResult.copies``
+so placement can pick the cheapest copy.  Replicas are second-class on
+the way out: per-device eviction drops them before primaries, a primary
+whose pages are evicted/invalidated promotes its hottest surviving
+replica, and only the loss of the LAST copy kills the node's payload —
+a cached prefix always retains one primary.
 """
 from __future__ import annotations
 
@@ -53,6 +62,13 @@ class _Node:
     parent: Optional["_Node"] = None
     refs: int = 0
     last_use: float = 0.0
+    # PR 6 hot-prefix replication: additional full copies of this node's
+    # cumulative page list on OTHER devices (device -> page list), each
+    # with its own LRU stamp so replica eviction is per-copy.  The
+    # (pages, device) pair above stays the PRIMARY copy — a paged node
+    # always retains one primary (eviction promotes a replica first).
+    replicas: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    replica_use: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     def depth_tokens(self) -> int:
         n, d = self, 0
@@ -78,6 +94,12 @@ class MatchResult:
                                 # what a caller must pin to keep the
                                 # reused pages alive (the backing node
                                 # may sit deeper than the match point)
+    copies: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+                                # EVERY device holding a copy of the
+                                # backing node -> that copy's FULL page
+                                # list (primary + replicas); ``device``/
+                                # ``pages`` above remain the primary's
+                                # matched slice for back-compat
 
     @property
     def hit(self) -> bool:
@@ -185,9 +207,12 @@ class RadixIndex:
         if paged <= 0:
             return MatchResult(i, 0, -1, [])
         backing.last_use = next(self._clock)
+        copies = {backing.device: list(backing.pages)}
+        for dev, pgs in backing.replicas.items():
+            copies[dev] = list(pgs)
         return MatchResult(i, paged, backing.device,
                            list(backing.pages[:paged // self.page_size]),
-                           self._prefix_tokens(backing))
+                           self._prefix_tokens(backing), copies)
 
     def match_prefix(self, tokens: Sequence[int]
                      ) -> Tuple[int, List[Tuple[int, List[int]]]]:
@@ -256,6 +281,45 @@ class RadixIndex:
             self._page_owner[(device, p)] = node
         return len(pages)
 
+    def _find_paged(self, tokens: Sequence[int]) -> Optional[_Node]:
+        """The paged node whose full prefix is exactly ``tokens`` (whole-
+        edge walk ending on a node boundary), or None."""
+        toks = tuple(tokens)
+        node = self.root
+        i = 0
+        while i < len(toks):
+            nxt = node.children.get(toks[i])
+            if nxt is None or toks[i:i + len(nxt.edge)] != nxt.edge:
+                return None
+            i += len(nxt.edge)
+            node = nxt
+        return node if (node is not self.root and node.pages) else None
+
+    def add_replica(self, tokens: Sequence[int], device: int,
+                    pages: List[int]) -> int:
+        """Register ``pages`` as a full copy of the prefix ``tokens`` on
+        another ``device`` (hot-prefix replication, PR 6).
+
+        Returns the pages taken (0 if the prefix is not cached as an
+        exact paged node, the device already holds a copy, or the page
+        count does not mirror the primary's) — the caller keeps
+        ownership on 0, hands it over otherwise (pages come back through
+        ``evict_lru`` / ``invalidate_pages`` like primary pages)."""
+        node = self._find_paged(tokens)
+        if (node is None or node.device == device
+                or device in node.replicas
+                or len(pages) != len(node.pages)):
+            return 0
+        for p in pages:
+            assert (device, p) not in self._page_owner, \
+                f"replica page {(device, p)} already backs node " \
+                f"{self._page_owner[(device, p)].node_id}"
+        node.replicas[device] = list(pages)
+        node.replica_use[device] = next(self._clock)
+        for p in pages:
+            self._page_owner[(device, p)] = node
+        return len(pages)
+
     # -- pin / release --------------------------------------------------------
     def pin(self, tokens: Sequence[int]) -> None:
         self._walk_refs(tokens, +1)
@@ -276,16 +340,46 @@ class RadixIndex:
             node = nxt
 
     # -- eviction / invalidation ----------------------------------------------
-    def _drop_payload(self, node: _Node) -> Optional[Tuple[int, List[int]]]:
-        """Forget a node's page backing (owner-map consistent)."""
-        if not node.pages:
-            return None
-        freed = (node.device, node.pages)
-        for p in node.pages:
-            self._page_owner.pop((node.device, p), None)
-        node.pages = []
-        node.device = -1
+    def _drop_payload(self, node: _Node) -> List[Tuple[int, List[int]]]:
+        """Forget a node's ENTIRE page backing — the primary copy and
+        every replica (owner-map consistent).  Returns freed
+        (device, pages) tuples, one per copy."""
+        freed: List[Tuple[int, List[int]]] = []
+        for dev in list(node.replicas):
+            got = self._drop_replica(node, dev)
+            if got is not None:
+                freed.append(got)
+        if node.pages:
+            freed.append((node.device, node.pages))
+            for p in node.pages:
+                self._page_owner.pop((node.device, p), None)
+            node.pages = []
+            node.device = -1
         return freed
+
+    def _drop_replica(self, node: _Node, device: int
+                      ) -> Optional[Tuple[int, List[int]]]:
+        """Forget one replica copy; the primary (and the node) survive."""
+        pages = node.replicas.pop(device, None)
+        node.replica_use.pop(device, None)
+        if pages is None:
+            return None
+        for p in pages:
+            self._page_owner.pop((device, p), None)
+        return (device, pages)
+
+    def _promote_replica(self, node: _Node) -> bool:
+        """Make the hottest replica the node's primary copy (called when
+        the primary's pages are being evicted/invalidated but replicas
+        survive — a prefix always retains one primary).  The owner map
+        needs no update: replica pages already point at this node."""
+        if not node.replicas:
+            return False
+        dev = max(node.replicas, key=lambda d: node.replica_use.get(d, 0.0))
+        node.pages = node.replicas.pop(dev)
+        node.device = dev
+        node.replica_use.pop(dev, None)
+        return True
 
     def _cleanup(self, node: Optional[_Node]) -> None:
         """Re-merge / remove the structural debris a removal leaves:
@@ -313,13 +407,17 @@ class RadixIndex:
         dropped — pins protect ancestors by construction, since a pin
         walk increments every node down the path.
 
-        ``device`` restricts victims to unpinned PAGED nodes on that
-        device — leaf or internal, since a device's cached copies can
-        all sit on interior nodes (pool-pressure relief must not drain
-        healthy devices' caches; a global LRU walk would evict the
-        cluster's coldest prefixes first no matter whose budget is
-        blocked).  Without it, any unpinned leaf — including page-less
-        debris — qualifies, which is what collapses the tree on drain.
+        ``device`` restricts victims to unpinned COPIES on that device —
+        a replica, or a primary, on a leaf or an interior node (pool-
+        pressure relief must not drain healthy devices' caches; a global
+        LRU walk would evict the cluster's coldest prefixes first no
+        matter whose budget is blocked).  Replicas evict FIRST (cheapest
+        relief: the node keeps its primary and stays matchable) and a
+        primary with surviving replicas is only demoted — its pages free
+        and the hottest replica is promoted, so a prefix always retains
+        one primary.  Without ``device``, any unpinned leaf — including
+        page-less debris — qualifies (its replicas go with it), which is
+        what collapses the tree on drain.
         """
         freed: List[Tuple[int, List[int]]] = []
         evicted = 0
@@ -327,30 +425,48 @@ class RadixIndex:
             # ONE tree walk per batch (not per victim): collect every
             # candidate, sort LRU-first, evict up to the budget.
             # Evicting one candidate never invalidates another — cleanup
-            # only removes/merges page-less refs-0 nodes, which are
-            # never candidates themselves.
+            # only removes/merges page-less refs-0 nodes (never
+            # candidates), and a promotion moves a copy from a DIFFERENT
+            # device, never another candidate of this batch's device.
             if device is None:
-                cands = [n for n in self._all_nodes()
+                cands = [(1, n.last_use, n) for n in self._all_nodes()
                          if not n.children and n.refs == 0
                          and n is not self.root]
             else:
-                cands = [n for n in self._all_nodes()
-                         if n.pages and n.device == device
-                         and n.refs == 0 and n is not self.root]
+                cands = []
+                for n in self._all_nodes():
+                    if n is self.root or n.refs != 0:
+                        continue
+                    if device in n.replicas:
+                        cands.append((0, n.replica_use.get(device, 0.0), n))
+                    elif n.pages and n.device == device:
+                        cands.append((1, n.last_use, n))
             if not cands:
                 break
-            cands.sort(key=lambda n: n.last_use)
-            for victim in cands[:n_leaves - evicted]:
-                got = self._drop_payload(victim)
-                if got is not None:
-                    freed.append(got)
-                if not victim.children:
-                    parent = victim.parent
-                    if parent is not None:
-                        parent.children.pop(victim.edge[0], None)
-                    self._cleanup(parent)
+            cands.sort(key=lambda c: (c[0], c[1]))
+            for is_primary, _, victim in cands[:n_leaves - evicted]:
+                if device is not None and not is_primary:
+                    got = self._drop_replica(victim, device)
+                    if got is not None:
+                        freed.append(got)
+                elif device is not None and victim.replicas:
+                    # demote the primary: free its pages, promote the
+                    # hottest replica — node structure untouched
+                    freed.append((victim.device, victim.pages))
+                    for p in victim.pages:
+                        self._page_owner.pop((victim.device, p), None)
+                    victim.pages = []
+                    victim.device = -1
+                    self._promote_replica(victim)
                 else:
-                    self._cleanup(victim)
+                    freed.extend(self._drop_payload(victim))
+                    if not victim.children:
+                        parent = victim.parent
+                        if parent is not None:
+                            parent.children.pop(victim.edge[0], None)
+                        self._cleanup(parent)
+                    else:
+                        self._cleanup(victim)
                 evicted += 1
             if device is None and evicted < n_leaves:
                 continue    # leaf eviction exposes new leaves: re-walk
@@ -363,19 +479,35 @@ class RadixIndex:
 
         Called by the pool owner the moment it frees pages a request
         left behind, so the index can never hand out a (device, pages)
-        tuple the allocator considers free.  The node's payload is
-        dropped (its whole pages list is invalid once one page is gone);
-        the structure is cleaned like eviction.  Returns nodes purged.
+        tuple the allocator considers free.  Invalidation is per COPY:
+        a freed replica page drops only that replica (the primary and
+        the node survive); a freed primary page drops the primary's
+        whole pages list (partially freed prefixes are unreadable) and
+        promotes a surviving replica if any — only a node whose LAST
+        copy is invalidated loses its payload and gets the structural
+        cleanup.  Returns nodes that lost at least one copy.
         """
-        victims = []
-        seen = set()
+        victims: Dict[int, list] = {}   # id(node) -> [node, primary?, devs]
         for p in pages:
             node = self._page_owner.get((device, p))
-            if node is not None and id(node) not in seen:
-                seen.add(id(node))
-                victims.append(node)
-        for node in victims:
-            self._drop_payload(node)
+            if node is None:
+                continue
+            ent = victims.setdefault(id(node), [node, False, set()])
+            if node.device == device:
+                ent[1] = True
+            elif device in node.replicas:
+                ent[2].add(device)
+        for node, primary_hit, rep_devs in victims.values():
+            for d in rep_devs:
+                self._drop_replica(node, d)
+            if not primary_hit:
+                continue
+            for p in node.pages:
+                self._page_owner.pop((node.device, p), None)
+            node.pages = []
+            node.device = -1
+            if self._promote_replica(node):
+                continue
             if not node.children and node.refs == 0:
                 if node.parent is not None:
                     node.parent.children.pop(node.edge[0], None)
@@ -395,6 +527,12 @@ class RadixIndex:
     def owns(self, device: int, page: int) -> bool:
         """True iff some node's payload currently references this page."""
         return (device, page) in self._page_owner
+
+    def replica_pages(self, device: Optional[int] = None) -> int:
+        """Pages held by replica (non-primary) copies, one device or all."""
+        return sum(len(p) for n in self._all_nodes()
+                   for d, p in n.replicas.items()
+                   if device is None or d == device)
 
     def n_nodes(self) -> int:
         """Node count excluding the root (boundedness invariant)."""

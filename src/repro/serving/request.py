@@ -117,7 +117,9 @@ def summarize(reqs: List[Request]) -> dict:
         "throughput_tok_s": total_tokens / max(span, 1e-9),
         "throughput_req_s": len(done) / max(span, 1e-9),
         "ttft_mean_s": float(ttfts.mean()),
+        "ttft_p50_s": float(np.percentile(ttfts, 50)),
         "ttft_p99_s": float(np.percentile(ttfts, 99)),
         "tbt_mean_s": float(tbts.mean()) if len(tbts) else 0.0,
+        "tbt_p50_s": float(np.percentile(tbts, 50)) if len(tbts) else 0.0,
         "tbt_p99_s": float(np.percentile(tbts, 99)) if len(tbts) else 0.0,
     }

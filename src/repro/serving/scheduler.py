@@ -45,6 +45,13 @@ class Scheduler:
         self.hbm_bytes = 0.0
         self._affinity_fn = None
         self._admit_fn = None
+        self._reuse_fn = None
+        # PR 6 dedup accounting: per-request booked bytes returned early
+        # (refcount-shared with the cache) and the cumulative bytes ever
+        # booked net of those shrinks — the simulator's pool-bytes-per-
+        # request numerator, mirroring SACSystem.booked_pages_cum
+        self._shrunk: Dict[int, float] = {}
+        self.booked_bytes_cum = 0.0
 
     def set_pressure_fn(self, fn) -> None:
         """Attach the live per-device link-pressure feed consumed by the
@@ -76,6 +83,33 @@ class Scheduler:
         insert with placement."""
         self._admit_fn = fn
 
+    def set_reuse_fn(self, fn) -> None:
+        """Attach the radix-admission scorer ``fn(req) -> float`` (the
+        request's expected prefix reuse, e.g. its page-granular match
+        length against the current tree).  When set, ``try_admit``
+        stable-sorts the wait queue by descending score each wave —
+        requests sharing a hot prefix land together; ties keep FCFS
+        order.  None restores pure FCFS."""
+        self._reuse_fn = fn
+
+    def shrink_booking(self, req: Request, n_bytes: float) -> float:
+        """Return part of an ACTIVE request's booking early (PR 6 page
+        dedup twin: the matched prefix's bytes are refcount-shared with
+        the cache, not privately held).  Shrinks the placer booking and
+        the local/HBM tallies now, and remembers the amount so
+        ``finish`` doesn't subtract it a second time.  Returns the
+        bytes actually shrunk."""
+        if req.request_id not in self.active or n_bytes <= 0:
+            return 0.0
+        got, _ = self.placer.shrink(req.request_id, n_bytes=n_bytes)
+        if got:
+            self._shrunk[req.request_id] = \
+                self._shrunk.get(req.request_id, 0.0) + got
+            self.local_bytes = max(0.0, self.local_bytes - got)
+            self.hbm_bytes = max(0.0, self.hbm_bytes - got)
+            self.booked_bytes_cum -= got
+        return got
+
     def note_departure(self, device: int, seconds: float) -> None:
         """Forward a finished request's measured demand share to the
         placer's pressure-keyed policies (core/placement.py)."""
@@ -90,8 +124,16 @@ class Scheduler:
         return (req.context_len + req.output_len) * self.cfg.bytes_per_token
 
     def try_admit(self, now_s: float) -> List[Request]:
-        """Admit queued requests while resources allow (FCFS)."""
+        """Admit queued requests while resources allow (FCFS, or by
+        descending expected reuse when a ``set_reuse_fn`` scorer is
+        attached — radix-aware admission, PR 6)."""
         admitted = []
+        if self._reuse_fn is not None and len(self.queue) > 1:
+            # stable sort: equal scores keep submission order, so the
+            # scorer can only ever PROMOTE reuse, never starve FCFS ties
+            ordered = sorted(enumerate(self.queue),
+                             key=lambda p: (-self._reuse_fn(p[1]), p[0]))
+            self.queue = deque(r for _, r in ordered)
         while self.queue and len(self.active) < self.cfg.concurrency:
             req = self.queue[0]
             need = self._kv_bytes(req)
@@ -111,6 +153,7 @@ class Scheduler:
             req.dispatch_s = now_s
             self.local_bytes += need
             self.hbm_bytes += need
+            self.booked_bytes_cum += need
             self.active[req.request_id] = req
             admitted.append(req)
             if self._admit_fn is not None:
@@ -125,10 +168,13 @@ class Scheduler:
         finish corrupted ``local_bytes``/``hbm_bytes`` forever)."""
         if self.active.pop(req.request_id, None) is None:
             return
-        need = self._kv_bytes(req)
+        # a dedup-shrunk booking already returned part of its bytes
+        # (shrink_booking); subtracting the full need again would drive
+        # the tallies below truth — the PR 6 half of the idempotence fix
+        need = self._kv_bytes(req) - self._shrunk.pop(req.request_id, 0.0)
         self.placer.release(req.request_id)
-        self.local_bytes -= need
-        self.hbm_bytes -= need
+        self.local_bytes = max(0.0, self.local_bytes - need)
+        self.hbm_bytes = max(0.0, self.hbm_bytes - need)
 
     # -- introspection ----------------------------------------------------------
     @property

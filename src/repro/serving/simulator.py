@@ -257,6 +257,28 @@ class SimConfig:
                                        # RadixIndex loop (capacity/
                                        # eviction effects stay with the
                                        # engine's real allocator)
+    replicate_prefixes: bool = False   # PR 6 hot-prefix replication twin:
+                                       # when the corrected pressure on a
+                                       # cached prefix's cheapest copy-
+                                       # holding link covers the one-time
+                                       # copy cost within
+                                       # `replicate_horizon` steps, the
+                                       # group gains a copy on the least-
+                                       # pressured other link (copy
+                                       # traffic charged, unkeyed)
+    replicate_horizon: int = 64        # payback horizon in decode steps
+                                       # (SACConfig.replicate_horizon_
+                                       # steps twin)
+    dedup_pages: bool = False          # PR 6 page-dedup twin: a same-
+                                       # device hit returns the matched
+                                       # bytes from the request's booking
+                                       # (Scheduler.shrink_booking) — the
+                                       # pages are refcount-shared with
+                                       # the cache, not privately held
+    radix_admission: bool = False      # PR 6 radix-aware admission twin:
+                                       # the wait queue orders by paged
+                                       # match length (FCFS tie-break)
+                                       # via Scheduler.set_reuse_fn
     precision_weighted: bool = False   # arbiter grants split per request
                                        # by analytic prefetch precision
     resize_interval: int = 0           # > 0 models online LayerSizer
@@ -309,11 +331,14 @@ def simulate(reqs: List[Request], model: ModelProfile,
     """Run the trace to completion; returns summarize() metrics."""
     # deep-copy request records so traces can be reused across backends
     reqs = [dataclasses.replace(r) for r in reqs]
+    # any PR 6 mechanism implies the radix prefix cache exists
+    use_radix = bool(sim.radix_affinity or sim.replicate_prefixes
+                     or sim.dedup_pages or sim.radix_admission)
     sched = Scheduler(SchedulerConfig(
         concurrency=sim.concurrency,
         n_pool_devices=backend.n_pool_devices,
         interleave=backend.interleave,
-        placement=sim.placement or ("radix_affinity" if sim.radix_affinity
+        placement=sim.placement or ("radix_affinity" if use_radix
                                     else None),
         pool_device_bytes=backend.local_dram_bytes / backend.n_pool_devices
         if backend.name != "hbm" else float("inf"),
@@ -396,55 +421,119 @@ def simulate(reqs: List[Request], model: ModelProfile,
     grant_sum = grant_n = 0
 
     # analytic radix prefix cache (SimConfig.radix_affinity): group id ->
-    # (device of the first cached copy, cached prefix tokens).  First
-    # writer wins, like the engine's RadixIndex.insert; reuse is only
-    # real when placement lands the request on the cached device —
-    # exactly the locality-vs-pressure decision the radix_affinity
-    # policy arbitrates.  ``matched`` carries each admitted request's
-    # reused tokens into the prefill model (skipped compute + write).
-    radix_cache: Dict[int, Tuple[int, int]] = {}
+    # [cached prefix tokens, devices holding a copy].  First writer wins,
+    # like the engine's RadixIndex.insert; replication (PR 6) appends
+    # copy devices.  Reuse is only real when placement lands the request
+    # on A device holding a copy — exactly the locality-vs-pressure
+    # decision the radix_affinity policy arbitrates.  ``matched`` carries
+    # each admitted request's reused tokens into the prefill model
+    # (skipped compute + write).
+    radix_cache: Dict[int, list] = {}
     matched: Dict[int, int] = {}
     write_bw = backend.fetch_bw_Bps * backend.n_pool_devices
     page = max(int(sim.page_size), 1)
+    replicated_b = [0.0]
+    dedup_b = [0.0]
 
     def _paged(tokens: int) -> int:
         """Reuse is page-granular, exactly as the engine credits it —
         a raw prefix_len would diverge for unaligned prefixes."""
         return (tokens // page) * page
 
-    def _affinity(r: Request):
-        if not sim.radix_affinity or r.prefix_group is None:
+    def _group_hit(r: Request):
+        """(paged hit tokens, copy-device list) for ``r``'s group, or
+        None when nothing usable is cached."""
+        if not use_radix or r.prefix_group is None:
             return None
         cached = radix_cache.get(r.prefix_group)
         if cached is None:
             return None
-        dev, plen = cached
-        plen = _paged(min(plen, r.prefix_len))
+        plen = _paged(min(cached[0], r.prefix_len))
         if plen <= 0:
             return None
-        bonus = (model.prefill_s(r.context_len)
-                 - model.prefill_s(r.context_len - plen)
-                 + plen * model.kv_bytes_per_token() / write_bw)
-        return dev, bonus
+        return plen, cached[1]
+
+    def _bonus_s(r: Request, plen: int) -> float:
+        return (model.prefill_s(r.context_len)
+                - model.prefill_s(r.context_len - plen)
+                + plen * model.kv_bytes_per_token() / write_bw)
+
+    def _maybe_replicate(plen: int, devices: list) -> None:
+        """Hot-prefix replication twin (the engine's _maybe_replicate):
+        fire when the reuse benefit covers the one-time copy cost AND
+        the CORRECTED pressure on the cheapest copy-holding link (the
+        placer's view including in-flight bookings — same-wave bursts
+        count before the demand feed catches up) exceeds the copy cost
+        amortized over ``replicate_horizon`` steps, copying to the
+        least-pressured copy-free link (never a hotter one).  Copy
+        traffic is charged unkeyed (cache-owned; no departure subtracts
+        it) on both links."""
+        pressure = sched.placer.corrected_pressure()
+        others = [d for d in range(backend.n_pool_devices)
+                  if d not in devices]
+        if not others:
+            return
+        booked = sched.placer.bytes_used
+        src = min(devices, key=lambda d: pressure[d])
+        # ties (cold start: every link reads 0) break on booked bytes,
+        # then device id — a bare min() would funnel every group's
+        # first copy onto device 0
+        dst = min(others, key=lambda d: (pressure[d], booked[d], d))
+        copy_b = plen * model.kv_bytes_per_token()
+        copy_cost = copy_b / backend.fetch_bw_Bps
+        horizon = max(int(sim.replicate_horizon), 1)
+        # benefit proxy: the locality bonus of a full-prefix reuse
+        bonus = (model.prefill_s(plen) +
+                 copy_b / write_bw)
+        if (bonus < copy_cost or pressure[src] < pressure[dst]
+                or pressure[src] * horizon <= copy_cost):
+            return
+        devices.append(dst)
+        acct.stats.bytes_fetched += copy_b
+        acct.stats.bytes_written += copy_b
+        acct.charge_seconds(copy_cost)
+        tracker.note_transfer(src, copy_cost)
+        tracker.note_transfer(dst, copy_cost)
+        replicated_b[0] += copy_b
+
+    def _affinity(r: Request):
+        hit = _group_hit(r)
+        if hit is None:
+            return None
+        plen, devices = hit
+        if sim.replicate_prefixes:
+            _maybe_replicate(plen, devices)
+        return tuple(devices), _bonus_s(r, plen)
 
     def _note_radix(r: Request) -> None:
         """Post-placement accounting (the Scheduler admit hook — runs
         after EACH placement, so same-wave requests see earlier ones):
-        record the reuse (same-device hits only) and register the first
-        cached copy of a new group."""
+        record the reuse (hits on any copy-holding device) and register
+        the first cached copy of a new group."""
         if r.prefix_group is None:
             return
         cached = radix_cache.get(r.prefix_group)
-        if cached is not None and cached[0] == r.pool_device:
-            hit = _paged(min(cached[1], r.prefix_len))
+        if cached is not None and r.pool_device in cached[1]:
+            hit = _paged(min(cached[0], r.prefix_len))
             if hit > 0:
                 matched[r.request_id] = hit
+                if sim.dedup_pages:
+                    # page-dedup twin: the matched bytes are refcount-
+                    # shared with the cache, not privately booked
+                    dedup_b[0] += sched.shrink_booking(
+                        r, hit * model.kv_bytes_per_token())
         elif cached is None:
-            radix_cache[r.prefix_group] = (r.pool_device, r.prefix_len)
+            radix_cache[r.prefix_group] = [r.prefix_len, [r.pool_device]]
 
-    if sim.radix_affinity:
+    def _reuse_score(r: Request) -> float:
+        hit = _group_hit(r)
+        return float(hit[0]) if hit is not None else 0.0
+
+    if use_radix:
         sched.set_affinity_fn(_affinity)
         sched.set_admit_fn(_note_radix)
+        if sim.radix_admission:
+            sched.set_reuse_fn(_reuse_score)
 
     # prefill warm-up's cold-start miss reduction: a request's FIRST
     # decode step runs against a cold hot tier, lifted to the modeled
@@ -650,7 +739,12 @@ def simulate(reqs: List[Request], model: ModelProfile,
                exposed_fabric_s=acct.stats.exposed_fabric_s,
                bytes_fetched=acct.stats.bytes_fetched,
                bytes_written=acct.stats.bytes_written,
+               critical_demand_bytes=acct.stats.critical_demand_bytes,
                radix_hit_tokens=float(sum(matched.values())),
+               replicated_bytes=replicated_b[0],
+               dedup_shared_bytes=dedup_b[0],
+               pool_bytes_per_req=(sched.booked_bytes_cum
+                                   / max(n_done, 1)),
                prefetch_bytes=acct.stats.prefetch_bytes,
                prefetched_entries=acct.stats.prefetched_entries,
                prefetch_useful=acct.stats.prefetch_useful,

@@ -285,3 +285,63 @@ def test_shared_prefix_radix_parity_engine_vs_sim():
     assert sim_out[True]["ttft_mean_s"] < sim_out[False]["ttft_mean_s"]
     assert sim_out[True]["sim_hit_rate"] == \
         pytest.approx(sim_out[False]["sim_hit_rate"], abs=1e-9)
+
+
+def test_dedup_pool_saving_parity_engine_vs_sim():
+    """PR 6 acceptance: refcounted page dedup saves pool bytes on BOTH
+    serving layers, and each layer's saving is exactly its own shared
+    volume — (pool_off - pool_on) * n equals the engine's shared pages
+    in bytes and the simulator's shrunk booking bytes.  Reuse
+    accounting and the decoded streams are untouched by the knob."""
+    from parity import shared_prefix_requests
+
+    from repro.serving.engine import Engine
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    PREFIX, SUFFIX, OUT, N = 24, 8, 6, 6
+
+    def trace():
+        return shared_prefix_requests(cfg, n=N, prefix=PREFIX,
+                                      suffix=SUFFIX, out=OUT)
+
+    eng_out = {}
+    for dedup in (True, False):
+        eng = Engine(cfg, slots=2, max_ctx=96, seed=0, radix=True,
+                     placement="radix_affinity", dedup_pages=dedup)
+        eng_out[dedup] = eng.run(trace())
+        assert eng_out[dedup]["n_done"] == N
+    model = profile_from_config(cfg)
+    backend = default_backends()["cxl"]
+    sim_out = {}
+    for dedup in (True, False):
+        sim_out[dedup] = simulate(
+            trace(), model, backend,
+            SimConfig(concurrency=N, round1=True, device_buffer=32,
+                      page_size=cfg.sac.page_size, radix_affinity=True,
+                      dedup_pages=dedup))
+
+    # dedup only re-books bytes: reuse and output accounting identical
+    assert (eng_out[True]["radix_hit_tokens"]
+            == eng_out[False]["radix_hit_tokens"] > 0)
+    assert sim_out[True]["radix_hit_tokens"] == \
+        pytest.approx(sim_out[False]["radix_hit_tokens"])
+    assert sim_out[True]["radix_hit_tokens"] > 0
+    assert eng_out[True]["engine_tokens"] == eng_out[False]["engine_tokens"]
+
+    # the engine's saving IS its shared pages, in bytes
+    saved_eng = (eng_out[False]["pool_bytes_per_req"]
+                 - eng_out[True]["pool_bytes_per_req"]) * N
+    shared_pages = eng_out[True]["dedup_shared_pages"]
+    assert shared_pages > 0
+    page_bytes = (cfg.sac.page_size
+                  * (cfg.kv_bytes_per_token_layer + 2 * cfg.sac.d_idx)
+                  * max(cfg.n_attn_layers, 1))
+    assert saved_eng == pytest.approx(shared_pages * page_bytes)
+    assert eng_out[False]["dedup_shared_pages"] == 0
+
+    # the simulator's saving IS its shrunk booking bytes
+    saved_sim = (sim_out[False]["pool_bytes_per_req"]
+                 - sim_out[True]["pool_bytes_per_req"]) * N
+    assert sim_out[True]["dedup_shared_bytes"] > 0
+    assert saved_sim == pytest.approx(sim_out[True]["dedup_shared_bytes"])
+    assert sim_out[False]["dedup_shared_bytes"] == 0
