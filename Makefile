@@ -3,12 +3,15 @@
 #   make test        tier-1 suite (the ROADMAP verify command)
 #   make test-fast   substrate + engine-buffer slice (quick signal)
 #   make bench-smoke reduced buffer + prefetch + arbiter + placement +
-#                    locality sweeps; writes BENCH_prefetch.json +
-#                    BENCH_arbiter.json + BENCH_placement.json +
-#                    BENCH_locality.json (CI artifacts), then gates the
-#                    locality envelope (benchmarks/locality_gate.py:
-#                    hotspot <= 1.2x pressure_aware, TTFT win >= 2x,
-#                    dedup pool saving)
+#                    locality + fabric sweeps; writes BENCH_prefetch.json
+#                    + BENCH_arbiter.json + BENCH_placement.json +
+#                    BENCH_locality.json + BENCH_fabric.json (CI
+#                    artifacts), then gates the locality envelope
+#                    (benchmarks/locality_gate.py: hotspot <= 1.2x
+#                    pressure_aware, TTFT win >= 2x, dedup pool saving)
+#                    and the fabric envelope (benchmarks/fabric_gate.py:
+#                    aware trunks balanced, aware p99 TTFT/TBT beat the
+#                    segment-blind baseline on tree:4x2)
 #   make deps        install runtime + test dependencies
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -31,6 +34,8 @@ bench-smoke:
 	python -m benchmarks.placement_sweep --quick
 	python -m benchmarks.locality_sweep --quick
 	python -m benchmarks.locality_gate
+	python -m benchmarks.fabric_sweep --quick
+	python -m benchmarks.fabric_gate
 
 deps:
 	pip install -r requirements.txt

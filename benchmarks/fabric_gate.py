@@ -1,0 +1,99 @@
+"""Regression gate over the fabric sweep artifact (PR 7).
+
+Reads ``BENCH_fabric.json`` (written by benchmarks/fabric_sweep.py, the
+last step of `make bench-smoke`) and fails — nonzero exit — when the
+``tree_aware`` cell regresses out of its acceptance envelope at the
+gated concurrencies.  The sweep puts 4 CXL devices behind 2 switch
+trunks (``tree:4x2``) with two hot prefix groups; ``tree_blind`` runs
+the same timing but a flat-accounting control plane (the pre-PR 7
+baseline), ``tree_aware`` runs segment-aware placement pressure,
+per-path arbiter budgets, replica-aware reads and warm-up seeding:
+
+  - ``trunk_hotspot_aware`` > 1.05: the aware control plane stopped
+    balancing the switch trunks (max/mean cumulative demand bytes over
+    the trunk segments; 1.0 = balanced, 2.0 = one trunk carries
+    everything — the blind cell's failure mode).
+  - ``hotspot_win`` < 1.0: blind's trunk imbalance is no longer worse
+    than aware's — the A/B contrast the subsystem exists to win
+    collapsed (or the blind baseline accidentally became aware).
+  - ``ttft_p99_ratio`` > 1.0: aware p99 TTFT no longer beats blind.
+    The win comes from warm-up seeding splitting the hot groups across
+    switches, so prefill pool-writes stop serializing on one trunk.
+  - ``tbt_p99_ratio`` > 0.95: aware p99 TBT stopped clearly beating
+    blind — replica-aware reads should split each hot prefix's decode
+    fetches across its copies' trunks (observed ~0.77-0.83x).
+
+Usage: ``python -m benchmarks.fabric_gate [--json BENCH_fabric.json]``
+"""
+import argparse
+import json
+import sys
+
+GATED_CONCURRENCIES = (16, 32)
+HOTSPOT_AWARE_MAX = 1.05
+HOTSPOT_WIN_MIN = 1.0
+TTFT_RATIO_MAX = 1.0
+TBT_RATIO_MAX = 0.95
+
+
+def check(doc: dict) -> list:
+    """Return a list of failure strings (empty = gate passes)."""
+    envelopes = {e["concurrency"]: e for e in doc.get("envelopes", [])}
+    failures = []
+    for conc in GATED_CONCURRENCIES:
+        env = envelopes.get(conc)
+        if env is None:
+            failures.append(f"conc={conc}: no envelope row in artifact")
+            continue
+        hotspot = env.get("trunk_hotspot_aware", float("inf"))
+        if hotspot > HOTSPOT_AWARE_MAX:
+            failures.append(
+                f"conc={conc}: trunk_hotspot_aware {hotspot:.3f} > "
+                f"{HOTSPOT_AWARE_MAX} (aware trunks unbalanced)")
+        win = env.get("hotspot_win", 0.0)
+        if win < HOTSPOT_WIN_MIN:
+            failures.append(
+                f"conc={conc}: hotspot_win {win:.3f} < "
+                f"{HOTSPOT_WIN_MIN} (blind no longer worse than aware)")
+        ttft = env.get("ttft_p99_ratio", float("inf"))
+        if ttft > TTFT_RATIO_MAX:
+            failures.append(
+                f"conc={conc}: ttft_p99_ratio {ttft:.3f} > "
+                f"{TTFT_RATIO_MAX} (aware p99 TTFT stopped beating blind)")
+        tbt = env.get("tbt_p99_ratio", float("inf"))
+        if tbt > TBT_RATIO_MAX:
+            failures.append(
+                f"conc={conc}: tbt_p99_ratio {tbt:.3f} > "
+                f"{TBT_RATIO_MAX} (replica-read TBT win lost)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_fabric.json")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.json) as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"fabric gate: cannot read {args.json}: {e}")
+        return 2
+    failures = check(doc)
+    if failures:
+        print("fabric gate: FAIL")
+        for line in failures:
+            print(f"  - {line}")
+        return 1
+    for e in doc.get("envelopes", []):
+        if e["concurrency"] in GATED_CONCURRENCIES:
+            print(f"fabric gate: conc={e['concurrency']} "
+                  f"hotspot={e['trunk_hotspot_blind']:.3f}x->"
+                  f"{e['trunk_hotspot_aware']:.3f}x "
+                  f"ttft_p99={e['ttft_p99_ratio']:.3f}x "
+                  f"tbt_p99={e['tbt_p99_ratio']:.3f}x  OK")
+    print("fabric gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

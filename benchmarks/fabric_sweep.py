@@ -1,0 +1,175 @@
+"""Fabric topology sweep (PR 7): flat star vs 2-switch tree, segment-
+blind vs segment-aware control plane, on the shared-prefix trace.
+
+The question this sweep answers: when 4 pool devices sit behind 2
+switches (``tree:4x2`` — each trunk is ONE device-link's worth of
+upstream bandwidth, paper §A.2's PCIe-x8 uplink), does the PR 7
+segment-aware control plane (bottleneck-segment placement pressure,
+per-path arbiter budgets, replica-aware reads, warm-up pressure
+seeding) actually relieve the trunk that the flat-accounting control
+plane saturates?
+
+The trace is the shared-prefix workload collapsed to TWO hot prefix
+groups (``prefix_group %= 2`` — the acceptance regime: with flat
+accounting, radix affinity parks both groups' owners on the lowest-
+index devices, which sit behind the SAME switch).  Cells per
+concurrency (all run the full PR 6 radix stack — replication, dedup,
+radix admission — so the prefix-locality loop is live in every cell):
+
+  - ``flat``       : ``flat:4`` — no shared segments; the reference for
+    how much the tree timing itself costs.
+  - ``tree_blind`` : ``tree:4x2`` with ``segment_aware=False`` — the
+    A/B baseline.  Timing pays the shared trunks but the control plane
+    still reads flat per-device endpoint demand, so radix affinity
+    parks the hot prefix groups contiguously: both land behind ONE
+    switch and its trunk serializes ~all fetch traffic.
+  - ``tree_aware`` : ``tree:4x2`` with the PR 7 loop on
+    (``segment_aware`` + ``replica_reads`` + ``warmup_pressure_seed``)
+    — placement sees trunk pressure, grants budget per path, reads
+    follow the least-pressured replica.
+
+**The envelope metric.**  ``trunk_hotspot`` = max / mean of cumulative
+demand bytes over the TRUNK segments (the bottleneck tier; leaf
+segments are per-device and gated by benchmarks/locality_gate.py
+already).  1.0 = both trunks carry equal traffic; 2.0 (the 2-trunk
+worst case) = one trunk carries everything.  The gate
+(benchmarks/fabric_gate.py) holds ``tree_aware`` to a hotspot AND a
+p99-TTFT win over ``tree_blind``.
+
+Writes ``BENCH_fabric.json`` (the `make bench-smoke` / CI artifact
+contract): one row per (concurrency, cell) with p50/p99 TTFT/TBT and
+the per-segment byte vectors, plus an ``envelopes`` section with the
+acceptance ratios.
+"""
+import argparse
+import dataclasses
+import json
+
+from benchmarks.common import PAPER_MODEL, model_profile
+from repro.core.fabric import FabricTopology
+from repro.serving.request import shared_prefix_trace
+from repro.serving.simulator import SimConfig, default_backends, simulate
+
+CONCURRENCIES = (16, 32, 64)
+N_DEVICES = 4
+TOPOLOGY = f"tree:{N_DEVICES}x2"
+PREFIX = 32768
+SUFFIX = 8192
+OUT_LEN = 256
+REUSE_P = 0.75
+N_HOT = 2           # collapse the trace to two hot prefix groups
+BUFFER = 2048
+OVERLAP = 0.3
+PREFETCH_W = 512
+
+CELLS = ("flat", "tree_blind", "tree_aware")
+
+
+def _sim_cfg(conc: int, cell: str) -> SimConfig:
+    aware = cell == "tree_aware"
+    return SimConfig(
+        concurrency=conc, round1=True, overlap_frac=OVERLAP,
+        device_buffer=BUFFER, prefetch_width=PREFETCH_W, arbiter=True,
+        radix_affinity=True, replicate_prefixes=True, dedup_pages=True,
+        radix_admission=True,
+        topology=f"flat:{N_DEVICES}" if cell == "flat" else TOPOLOGY,
+        segment_aware=aware or cell == "flat",
+        replica_reads=aware, warmup_pressure_seed=aware)
+
+
+def _trunk_hotspot(seg_bytes, topo: FabricTopology) -> float:
+    """max/mean cumulative demand bytes over the non-leaf (trunk)
+    segments — 1.0 is perfectly balanced, n_trunks is one trunk
+    carrying everything.  Generalizes the locality sweep's per-device
+    hotspot to the switch tier."""
+    trunks = [seg_bytes[s] for s in range(topo.n_devices, topo.n_segments)]
+    if not trunks or sum(trunks) <= 0:
+        return 1.0
+    return max(trunks) / (sum(trunks) / len(trunks))
+
+
+def run(csv=None, quick=False, out_json="BENCH_fabric.json"):
+    concs = CONCURRENCIES[:2] if quick else CONCURRENCIES
+    model = model_profile()
+    backend = dataclasses.replace(default_backends()["cxl"],
+                                  n_pool_devices=N_DEVICES)
+    topo = FabricTopology.from_spec(TOPOLOGY)
+    print(f"\n== Fabric sweep: flat vs {TOPOLOGY} blind vs aware "
+          f"(CXL x{N_DEVICES}, shared-prefix reuse_p={REUSE_P}) ==")
+    rows, envelopes = [], []
+    for conc in concs:
+        n = conc * (3 if quick else 5)
+        cells = {}
+        for cell in CELLS:
+            reqs = shared_prefix_trace(
+                n, prefix_len=PREFIX, suffix_len=SUFFIX,
+                output_len=OUT_LEN, reuse_p=REUSE_P, seed=1)
+            for req in reqs:        # two hot groups (acceptance regime)
+                req.prefix_group %= N_HOT
+            r = simulate(reqs, model, backend, _sim_cfg(conc, cell))
+            r["trunk_hotspot"] = (
+                _trunk_hotspot(r["segment_demand_bytes"], topo)
+                if cell != "flat" else 1.0)
+            cells[cell] = r
+            rows.append(dict(
+                concurrency=conc, cell=cell,
+                ttft_mean_s=r["ttft_mean_s"],
+                ttft_p50_s=r["ttft_p50_s"],
+                ttft_p99_s=r["ttft_p99_s"],
+                tbt_mean_s=r["tbt_mean_s"],
+                tbt_p50_s=r["tbt_p50_s"],
+                tbt_p99_s=r["tbt_p99_s"],
+                throughput_tok_s=r["throughput_tok_s"],
+                exposed_fabric_s=r["exposed_fabric_s"],
+                critical_demand_bytes=r["critical_demand_bytes"],
+                spec_yielded_s=r["spec_yielded_s"],
+                replica_redirects=r["replica_redirects"],
+                trunk_hotspot=r["trunk_hotspot"],
+                segment_demand_bytes=r["segment_demand_bytes"]))
+        bl, aw = cells["tree_blind"], cells["tree_aware"]
+        env = dict(
+            concurrency=conc,
+            trunk_hotspot_blind=bl["trunk_hotspot"],
+            trunk_hotspot_aware=aw["trunk_hotspot"],
+            hotspot_win=(bl["trunk_hotspot"]
+                         / max(aw["trunk_hotspot"], 1e-9)),
+            ttft_p99_ratio=(aw["ttft_p99_s"]
+                            / max(bl["ttft_p99_s"], 1e-12)),
+            tbt_p99_ratio=(aw["tbt_p99_s"]
+                           / max(bl["tbt_p99_s"], 1e-12)),
+            tree_tax_blind=(bl["tbt_mean_s"]
+                            / max(cells["flat"]["tbt_mean_s"], 1e-12)),
+        )
+        envelopes.append(env)
+        print(f"conc={conc:>4}  trunk hotspot "
+              f"{env['trunk_hotspot_blind']:.2f}x -> "
+              f"{env['trunk_hotspot_aware']:.2f}x  "
+              f"p99 ttft {bl['ttft_p99_s']:.2f}s -> "
+              f"{aw['ttft_p99_s']:.2f}s "
+              f"({env['ttft_p99_ratio']:.2f}x)  "
+              f"p99 tbt {bl['tbt_p99_s'] * 1e3:.1f}ms -> "
+              f"{aw['tbt_p99_s'] * 1e3:.1f}ms  "
+              f"redirects {aw['replica_redirects']:.0f}  "
+              f"(blind -> aware)")
+        if csv is not None:
+            csv.add(f"fabric/conc{conc}", 0.0,
+                    f"hotspot_win={env['hotspot_win']:.2f}x "
+                    f"ttft_p99_ratio={env['ttft_p99_ratio']:.2f}x")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"model": PAPER_MODEL, "backend": "cxl",
+                       "topology": TOPOLOGY, "n_devices": N_DEVICES,
+                       "prefix_len": PREFIX, "suffix_len": SUFFIX,
+                       "reuse_p": REUSE_P, "device_buffer": BUFFER,
+                       "quick": quick, "rows": rows,
+                       "envelopes": envelopes}, f, indent=2)
+        print(f"wrote {out_json} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_fabric.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out_json=args.json)

@@ -6,13 +6,17 @@ radix_replica cell regresses out of its acceptance envelope at the
 gated concurrencies:
 
   - ``hotspot_ratio_replica`` > 1.2: the fabric hotspot is back.  The
-    metric is critical-link demand bytes (sum over decode steps of the
-    max per-device fetch demand) relative to the pressure_aware
-    envelope — see the sweep's module docstring for why raw end-to-end
-    exposed seconds are NOT comparable across cells (the radix cells
-    run ~35% fewer, larger decode steps; each extra step donates flat
-    base-compute hide window, a volume effect that is the TTFT win
-    itself, not the hotspot).
+    metric is critical-link demand bytes — since PR 7 the sum over
+    decode steps of the max per-SEGMENT fetch demand (core/fabric.py;
+    on the sweep's flat-star default each device IS its own segment,
+    so the number is bit-identical to the old per-device max) —
+    relative to the pressure_aware envelope.  See the sweep's module
+    docstring for why raw end-to-end exposed seconds are NOT
+    comparable across cells (the radix cells run ~35% fewer, larger
+    decode steps; each extra step donates flat base-compute hide
+    window, a volume effect that is the TTFT win itself, not the
+    hotspot).  Switch topologies get their own gate:
+    benchmarks/fabric_gate.py.
   - ``ttft_win_replica`` < 2.0: the radix TTFT win over pressure_aware
     was lost.
   - ``ttft_replica_vs_affinity`` > 1.2: replication/dedup/admission

@@ -25,8 +25,10 @@ request drop.
 
 **The envelope metric.**  The hotspot envelope is measured on
 ``critical_demand_bytes`` — the sum over decode steps of the MAX
-per-device fetch demand, i.e. the issued traffic serialized on each
-step's critical-path link.  Raw end-to-end exposed seconds are NOT
+per-SEGMENT fetch demand (PR 7 generalization, core/fabric.py; on
+this sweep's flat-star default every device is its own segment, so
+the value equals the old per-device max bit-for-bit), i.e. the
+issued traffic serialized on each step's critical-path link.  Raw end-to-end exposed seconds are NOT
 comparable across these cells: exposure accrues per step against a
 hide window with a flat base-compute term, and the radix cells finish
 prefill ~2-3x faster, so they run ~35% fewer (larger) decode steps —

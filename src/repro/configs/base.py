@@ -104,6 +104,30 @@ class SACConfig:
                                       # prefix reuse (match length) rather
                                       # than FCFS
 
+    # --- PR 7: CXL fabric topology (core/fabric.py) ---
+    topology: Optional[str] = None   # fabric spec: None = flat star (one
+                                     # dedicated host port per device;
+                                     # bit-identical to the pre-PR 7 flat
+                                     # per-device accounting), or
+                                     # "tree:NxS" / "multi_switch:NxS" /
+                                     # "mesh:NxP" — traffic is then
+                                     # charged per link SEGMENT and
+                                     # placement/grants read bottleneck-
+                                     # segment pressure along each path
+    warmup_pressure_seed: bool = False  # seed the placement pressure feed
+                                     # from BOOKED demand during the
+                                     # window before the first decode
+                                     # step only (wave-1 admissions herd
+                                     # onto the prefix owner while the
+                                     # feed is still silent; always-on
+                                     # seeding regresses under dedup —
+                                     # see benchmarks/locality_sweep.py)
+    replica_reads: bool = False      # re-pick the least-pressured replica
+                                     # of a request's cached prefix every
+                                     # STEP (bottleneck-segment pressure)
+                                     # instead of freezing the copy
+                                     # choice at placement time
+
 
 # ---------------------------------------------------------------------------
 # Model architecture configuration

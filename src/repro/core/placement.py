@@ -277,9 +277,16 @@ class Placer:
     def __init__(self, n_devices: int, *, policy: str = "round_robin",
                  capacity_bytes: float = float("inf"),
                  capacity_pages: Optional[int] = None,
-                 pressure_fn: Optional[Callable[[], Sequence[float]]] = None):
+                 pressure_fn: Optional[Callable[[], Sequence[float]]] = None,
+                 topology=None):
         assert n_devices >= 1
         self.n_devices = n_devices
+        # optional FabricTopology (core/fabric.py): when attached, the
+        # pressure feed is per-SEGMENT and device_pressure() projects
+        # each device's BOTTLENECK-segment pressure (a device behind a
+        # saturated trunk reads the trunk, not its idle leaf).  The
+        # policies stay per-device — only the signal changes.
+        self.topology = topology
         self.policy = make_policy(policy)
         self.capacity_bytes = capacity_bytes
         self.capacity_pages = (capacity_pages if capacity_pages is not None
@@ -316,10 +323,17 @@ class Placer:
         """Per-device link pressure from the attached feed (0.0 per
         device without one — pressure_aware then degrades to
         least_loaded).  Shorter feeds are zero-padded; longer ones
-        truncated (the placer's device space is authoritative)."""
+        truncated (the placer's device space is authoritative).
+
+        With a topology attached the feed is per-SEGMENT and each
+        device's reading is the max over the segments on its route —
+        the bottleneck on the path a placement would load.  The flat
+        star's identity routing makes this the plain per-device feed."""
         if self._pressure_fn is None:
             return [0.0] * self.n_devices
         raw = [max(float(p), 0.0) for p in self._pressure_fn()]
+        if self.topology is not None:
+            return self.topology.device_view(raw)
         return (raw + [0.0] * self.n_devices)[:self.n_devices]
 
     def corrected_pressure(self) -> List[float]:

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import hisparse
+from repro.core.fabric import FabricTopology
 from repro.core.metadata import PageDirectory, PoolAllocator
 from repro.core.placement import (Placer, pages_for_tokens,
                                   policy_for_interleave)
@@ -206,11 +207,19 @@ class SACSystem:
     def __init__(self, cfg: ModelConfig, *, backend: str = "cxl",
                  n_pool_devices: int = 2, device_bytes: int = 256 << 30,
                  interleave: bool = True, placement: Optional[str] = None,
-                 pressure_fn=None, seq_capacity: int = 1 << 17):
+                 pressure_fn=None, seq_capacity: int = 1 << 17,
+                 topology=None):
         self.cfg = cfg
         self.backend = backend
         self.fabric: FabricModel = FABRICS[backend]
         self.interleave = interleave
+        # fabric switch topology (core/fabric.py): accepts None (flat
+        # star — the exact pre-PR 7 per-device accounting), a spec
+        # string ("tree:4x2", ...), or a FabricTopology.  One object is
+        # shared by the accountant (per-segment charging), the placer
+        # (bottleneck-pressure projection), and — via the engine — the
+        # demand tracker and budget arbiter.
+        self.topology = FabricTopology.from_spec(topology, n_pool_devices)
         self.n_devices = n_pool_devices
         self.entry_bytes = cfg.kv_bytes_per_token_layer + 2 * cfg.sac.d_idx
         self.page_tokens = cfg.sac.page_size
@@ -223,9 +232,11 @@ class SACSystem:
             policy=placement or policy_for_interleave(interleave),
             capacity_bytes=float(device_bytes),
             capacity_pages=pages_per_device,
-            pressure_fn=pressure_fn)
+            pressure_fn=pressure_fn,
+            topology=self.topology)
         self.traffic = FabricAccountant(self.fabric,
-                                        n_devices=n_pool_devices)
+                                        n_devices=n_pool_devices,
+                                        topology=self.topology)
         self.directory = PageDirectory()
         self.requests: Dict[int, RequestPages] = {}
         # radix prefix cache ownership: the index (attach_radix) plus the

@@ -30,6 +30,21 @@ import dataclasses
 import math
 from typing import Dict
 
+# ---------------------------------------------------------------------------
+# QoS classes (fabric topology, core/fabric.py)
+# ---------------------------------------------------------------------------
+# Every transfer the accountant books carries one of two service classes.
+# DEMAND traffic (decode-step top-k misses, prefill write-back) is on the
+# token-latency critical path and owns the link.  SPECULATIVE traffic
+# (arbiter-granted prefetch, warm-up) yields at congested fabric segments:
+# on a topology with ``qos_spec_yield`` set, a segment services its
+# speculative backlog only from the hide window left over after its demand
+# backlog, and the un-serviced remainder is dropped from the step's
+# exposure (speculated entries go stale by the next step, so deferring
+# them has no value) and counted in ``TrafficStats.spec_yielded_s``.
+QOS_DEMAND = 0
+QOS_SPECULATIVE = 1
+
 
 @dataclasses.dataclass(frozen=True)
 class FabricModel:

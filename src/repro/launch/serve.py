@@ -69,6 +69,25 @@ def main():
                          "waiting request with the longest cached-"
                          "prefix match first (FCFS tie-break) instead "
                          "of strict FCFS")
+    ap.add_argument("--topology", default=None,
+                    help="CXL fabric topology spec (PR 7, core/"
+                         "fabric.py): e.g. 'tree:4x2' (4 devices "
+                         "behind 2 switches), 'multi_switch:8x2', "
+                         "'mesh:4x2'; default = flat star (one host "
+                         "port per device — the pre-PR 7 accounting). "
+                         "Traffic is charged per link SEGMENT and "
+                         "placement/grants read bottleneck-segment "
+                         "pressure along each path")
+    ap.add_argument("--warmup-pressure-seed", action="store_true",
+                    help="seed the placement pressure feed from BOOKED "
+                         "prefill-write demand before the first decode "
+                         "step (PR 7: wave-1 admissions stop herding "
+                         "onto a hot prefix's owner)")
+    ap.add_argument("--replica-reads", action="store_true",
+                    help="replica-aware reads (PR 7): re-pick the "
+                         "least-pressured copy of a cached prefix "
+                         "every step instead of freezing the choice "
+                         "at placement (requires the radix cache)")
     ap.add_argument("--resize-epsilon", type=float, default=None,
                     help="resize hysteresis: skip the online LayerSizer "
                          "re-apportioning when no layer's per-interval "
@@ -123,10 +142,11 @@ def main():
         raise SystemExit("serve driver targets decoder-only archs; "
                          "whisper decode is exercised in tests")
     if ((args.replicate_prefixes or args.dedup_pages
-         or args.radix_admission) and args.no_radix):
+         or args.radix_admission or args.replica_reads)
+            and args.no_radix):
         raise SystemExit("--replicate-prefixes/--dedup-pages/"
-                         "--radix-admission need the radix cache "
-                         "(drop --no-radix)")
+                         "--radix-admission/--replica-reads need the "
+                         "radix cache (drop --no-radix)")
     eng = Engine(cfg, slots=args.slots, max_ctx=args.max_ctx,
                  backend=args.backend, mode=args.mode, seed=args.seed,
                  track_buffer=not args.no_buffer,
@@ -138,7 +158,10 @@ def main():
                  radix=not args.no_radix,
                  replicate_prefixes=args.replicate_prefixes or None,
                  dedup_pages=args.dedup_pages or None,
-                 radix_admission=args.radix_admission or None)
+                 radix_admission=args.radix_admission or None,
+                 topology=args.topology,
+                 warmup_pressure_seed=args.warmup_pressure_seed or None,
+                 replica_reads=args.replica_reads or None)
     if args.shared_prefix:
         if args.shared_prefix >= args.ctx:
             raise SystemExit("--shared-prefix must be below --ctx")

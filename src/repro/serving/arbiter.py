@@ -43,6 +43,7 @@ import dataclasses
 from typing import Dict, Hashable, Iterable, List, Mapping, Optional, \
     Sequence
 
+from repro.core.fabric import FabricTopology
 from repro.core.traffic import TrafficStats
 from repro.core.transfer import FabricModel, PipelineModel
 
@@ -66,15 +67,37 @@ class DemandTracker:
       - :meth:`observe` (engine): snapshot cumulative stats each step;
       - :meth:`set_step` (simulator): the analytic per-step seconds are
         computed directly, no cumulative counters needed.
+
+    With a :class:`~repro.core.fabric.FabricTopology` attached (PR 7) the
+    tracked slot space is the fabric's SEGMENTS, not devices: ``observe``
+    reads ``TrafficStats.segment_demand_s()``, ``note_transfer`` books a
+    device's transfer on every segment of its path, and ``depart``
+    subtracts the request's share along its device's route (clamped at
+    zero — exact under the flat star, a safe under-estimate when shared
+    trunk segments carry other requests' traffic too).  The flat-star
+    topology degenerates to the per-device behavior bit-for-bit.
     """
 
-    def __init__(self, n_devices: int):
+    def __init__(self, n_devices: int,
+                 topology: Optional[FabricTopology] = None):
         self.n_devices = max(int(n_devices), 1)
-        self.last_demand_s: List[float] = [0.0] * self.n_devices
-        self._dev_mark: List[float] = [0.0] * self.n_devices
+        self.topology = topology
+        self.n_slots = (topology.n_segments if topology is not None
+                        else self.n_devices)
+        self.last_demand_s: List[float] = [0.0] * self.n_slots
+        self._dev_mark: List[float] = [0.0] * self.n_slots
         self._req_mark: Dict[Hashable, float] = {}
         self._req_last: Dict[Hashable, float] = {}
-        self._pending: List[float] = [0.0] * self.n_devices
+        self._pending: List[float] = [0.0] * self.n_slots
+
+    def _route(self, device: int) -> Sequence[int]:
+        """Slots a device's traffic lands on: its fabric path, or just
+        its own slot when no topology is attached."""
+        if self.topology is None:
+            return (device,) if 0 <= device < self.n_slots else ()
+        if not 0 <= device < self.topology.n_devices:
+            return ()
+        return self.topology.route(device)
 
     def note_transfer(self, device: int, seconds: float) -> None:
         """Attribute UNkeyed cache-owned traffic (a hot-prefix replica
@@ -84,17 +107,24 @@ class DemandTracker:
         calling this there would double-count.  The seconds fold into
         the next ``set_step`` and, being unkeyed, no departure ever
         subtracts them."""
-        if 0 <= device < self.n_devices and seconds > 0:
+        if seconds <= 0:
+            return
+        if self.topology is not None:
+            for sid, c in self.topology.segment_charge(device,
+                                                       float(seconds)):
+                self._pending[sid] += c
+        elif 0 <= device < self.n_slots:
             self._pending[device] += float(seconds)
 
     def observe(self, stats: TrafficStats, keys: Iterable[Hashable]
                 ) -> List[float]:
         """Engine mode: fold this step's cumulative counters into fresh
-        per-device and per-request deltas.  ``keys`` are the requests
+        per-link and per-request deltas.  ``keys`` are the requests
         live this step (their attribution is snapshotted; others keep
         their last known share for a late ``depart``)."""
-        cur = stats.device_demand_s()
-        cur = (list(cur) + [0.0] * self.n_devices)[:self.n_devices]
+        cur = (stats.segment_demand_s() if self.topology is not None
+               else stats.device_demand_s())
+        cur = (list(cur) + [0.0] * self.n_slots)[:self.n_slots]
         self.last_demand_s = [c - m for c, m in zip(cur, self._dev_mark)]
         self._dev_mark = cur
         for k in keys:
@@ -106,14 +136,15 @@ class DemandTracker:
     def set_step(self, demand_s: Sequence[float],
                  request_shares: Optional[Mapping[Hashable, float]] = None
                  ) -> List[float]:
-        """Simulator mode: this step's per-device demand seconds (and
+        """Simulator mode: this step's per-link demand seconds (per
+        SEGMENT when a topology is attached, per device otherwise; and
         optionally each request's own share of them) were computed
         analytically — install them directly."""
         d = [max(float(x), 0.0) for x in demand_s]
-        d = (d + [0.0] * self.n_devices)[:self.n_devices]
+        d = (d + [0.0] * self.n_slots)[:self.n_slots]
         if any(self._pending):
             d = [x + p for x, p in zip(d, self._pending)]
-            self._pending = [0.0] * self.n_devices
+            self._pending = [0.0] * self.n_slots
         self.last_demand_s = d
         if request_shares is not None:
             for k, s in request_shares.items():
@@ -122,14 +153,18 @@ class DemandTracker:
 
     def depart(self, key: Hashable, device: int) -> float:
         """A request finished: drop its attribution and subtract its own
-        last-step demand share from its link's live signal.  Returns the
-        share subtracted (0 for unknown keys/devices)."""
+        last-step demand share from its link's (every segment on its
+        route's) live signal.  Returns the share subtracted (0 for
+        unknown keys/devices)."""
         share = self._req_last.pop(key, 0.0)
         self._req_mark.pop(key, None)
-        if not 0 <= device < self.n_devices or share <= 0:
+        if share <= 0:
             return 0.0
-        self.last_demand_s[device] = max(
-            0.0, self.last_demand_s[device] - share)
+        slots = self._route(device)
+        if not slots:
+            return 0.0
+        for s in slots:
+            self.last_demand_s[s] = max(0.0, self.last_demand_s[s] - share)
         return share
 
 
@@ -205,24 +240,35 @@ class BudgetArbiter:
     """
 
     def __init__(self, cfg: ArbiterConfig, *, entry_s: float,
-                 n_layers: int, pipeline: PipelineModel):
+                 n_layers: int, pipeline: PipelineModel,
+                 topology: Optional[FabricTopology] = None):
         assert entry_s > 0, "per-entry fabric seconds must be positive"
         self.cfg = cfg
         self.entry_s = float(entry_s)
         self.n_layers = max(int(n_layers), 1)
         self.pipeline = pipeline
+        # with a fabric topology, grants are per-PATH: a device's budget
+        # is the headroom of the most-loaded segment on its route, and
+        # spec seconds granted at one device are charged against every
+        # segment of its path before the next device is considered — two
+        # devices behind one saturated trunk can no longer each claim the
+        # trunk's full residue (None = flat per-device budgets, the
+        # pre-PR 7 behavior, which the flat star matches exactly)
+        self.topology = topology
 
     @classmethod
     def from_fabric(cls, cfg: ArbiterConfig, fabric: FabricModel,
                     entry_bytes: int, *, n_layers: int,
-                    pipeline: PipelineModel) -> "BudgetArbiter":
+                    pipeline: PipelineModel,
+                    topology: Optional[FabricTopology] = None
+                    ) -> "BudgetArbiter":
         """Engine-side constructor: amortized per-entry cost from the
         calibrated fabric model, over a nominal full-width burst."""
         nominal = max(cfg.max_width * max(n_layers, 1), 1)
         entry_s = fabric.per_entry_seconds(entry_bytes,
                                            nominal_batch=nominal)
         return cls(cfg, entry_s=entry_s, n_layers=n_layers,
-                   pipeline=pipeline)
+                   pipeline=pipeline, topology=topology)
 
     # -- budget arithmetic -------------------------------------------------
     def link_budget_s(self, compute_s: float) -> float:
@@ -237,19 +283,40 @@ class BudgetArbiter:
         headroom = self.link_budget_s(compute_s) - max(demand_s, 0.0)
         return max(headroom, 0.0) / self.entry_s
 
-    def _device_demand(self, demand_s: Sequence[float], dev: int) -> float:
+    def _device_demand(self, demand_s: Sequence[float], dev: int,
+                       extra: Optional[Mapping[int, float]] = None
+                       ) -> float:
         """Validated per-device demand lookup.  The pre-PR 4 ``dev %
         len(demand_s)`` convention silently aliased an out-of-range id
         onto the WRONG link's budget; the arbiter is control logic, so a
-        bad id is a programming error and raises."""
+        bad id is a programming error and raises.
+
+        With a topology attached, ``demand_s`` is per-SEGMENT and the
+        returned figure is the BOTTLENECK on the device's path — the
+        most-loaded segment between host and device (plus any
+        ``extra`` spec seconds already granted there this step).
+        Occupancy seconds are directly comparable across segments
+        (``Segment.charge`` already folds in bandwidth_scale), so path
+        headroom = window - max-over-path.
+        """
         if not len(demand_s):
             return 0.0
+        if self.topology is not None:
+            if not 0 <= dev < self.topology.n_devices:
+                raise ValueError(
+                    f"device {dev} out of range "
+                    f"[0, {self.topology.n_devices}) — placement and "
+                    "the fabric topology disagree on the device space")
+            vals = (list(demand_s)
+                    + [0.0] * self.topology.n_segments)
+            return max(vals[s] + (extra.get(s, 0.0) if extra else 0.0)
+                       for s in self.topology.route(dev))
         if not 0 <= dev < len(demand_s):
             raise ValueError(
                 f"device {dev} out of range [0, {len(demand_s)}) — "
                 "placement and traffic accounting disagree on the "
                 "device space")
-        return demand_s[dev]
+        return demand_s[dev] + (extra.get(dev, 0.0) if extra else 0.0)
 
     def grant(self, compute_s: float, demand_s: Sequence[float],
               device_requests: Mapping[int, Sequence[Hashable]],
@@ -278,10 +345,14 @@ class BudgetArbiter:
         grants: Dict[Hashable, int] = {}
         floor = max(min(self.cfg.min_width, self.cfg.max_width), 0)
         weighted = self.cfg.precision_weighted and precision is not None
+        # spec seconds already granted per segment this step (per-path
+        # budgets only; empty interaction under flat star — each device
+        # owns its single segment and appears once)
+        granted_seg: Dict[int, float] = {}
         for dev, rids in device_requests.items():
             if not rids:
                 continue
-            d = self._device_demand(demand_s, dev)
+            d = self._device_demand(demand_s, dev, granted_seg)
             entries = self.device_entry_budget(compute_s, d)
             total_w = int(entries // self.n_layers)
             if weighted:
@@ -292,8 +363,13 @@ class BudgetArbiter:
             else:
                 weights = [1.0] * len(rids)
             widths = _apportion(total_w, self.cfg.max_width, weights)
+            spec_s = 0.0
             for rid, w in zip(rids, widths):
                 grants[rid] = max(w, floor)
+                spec_s += grants[rid] * self.n_layers * self.entry_s
+            if self.topology is not None and spec_s > 0:
+                for sid in self.topology.route(dev):
+                    granted_seg[sid] = granted_seg.get(sid, 0.0) + spec_s
         return grants
 
     def grant_warmup(self, compute_s: float, demand_s: Sequence[float],

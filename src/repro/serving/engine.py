@@ -82,6 +82,10 @@ class EngineStats:
                                     # second pool device (PR 6)
     dedup_shared_pages: int = 0     # request pages refcount-shared with
                                     # the cache instead of held privately
+    replica_redirects: int = 0      # slot-steps whose prefix reads went
+                                    # to a less-pressured replica device
+                                    # instead of the slot's own (PR 7
+                                    # replica-aware grants)
     traffic: TrafficStats = dataclasses.field(default_factory=TrafficStats)
     # measured per-layer hot-tier outcomes ([L] arrays, accumulated per
     # step) — the LayerSizer's miss-rate signal (serving/arbiter.py)
@@ -249,6 +253,9 @@ class Engine:
                  replicate_prefixes: Optional[bool] = None,
                  dedup_pages: Optional[bool] = None,
                  radix_admission: Optional[bool] = None,
+                 topology=None,
+                 warmup_pressure_seed: Optional[bool] = None,
+                 replica_reads: Optional[bool] = None,
                  topk_fn=None, seed: int = 0):
         self.cfg = cfg
         self.slots = slots
@@ -276,8 +283,15 @@ class Engine:
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self.placement = placement if placement is not None \
             else cfg.sac.placement
+        # fabric topology (core/fabric.py): one object shared by the
+        # accountant (per-segment charging), placer (bottleneck-pressure
+        # projection), demand tracker, and arbiter.  None -> cfg.sac
+        # spec -> flat star (bit-identical to flat per-device accounting)
         self.sac = SACSystem(cfg, backend=backend,
-                             placement=self.placement)
+                             placement=self.placement,
+                             topology=(topology if topology is not None
+                                       else cfg.sac.topology))
+        self.topology = self.sac.topology
         # live link-pressure feed for pressure_aware / radix_affinity
         # placement: the placer reads last step's measured per-device
         # demand seconds at place time (no-op under pressure-blind
@@ -298,6 +312,22 @@ class Engine:
         self.admission_on = bool(
             (cfg.sac.radix_admission if radix_admission is None
              else radix_admission) and has_radix)
+        # PR 7 satellites: warm-up-only pressure seeding (the feed is
+        # silent before the first decode step — seed it from BOOKED
+        # demand so wave-1 admissions stop herding; always-on regresses
+        # under dedup, see benchmarks/locality_sweep.py) and replica-
+        # aware per-step reads (prefix fetches go to the least-pressured
+        # copy each step instead of the copy frozen at placement)
+        self.warm_seed_on = bool(
+            cfg.sac.warmup_pressure_seed if warmup_pressure_seed is None
+            else warmup_pressure_seed)
+        self.replica_reads_on = bool(
+            (cfg.sac.replica_reads if replica_reads is None
+             else replica_reads) and has_radix)
+        # per-slot (replica copy devices, prefix read fraction) of the
+        # matched cached prefix — the backing pin held for the slot's
+        # lifetime keeps the copy set valid
+        self._slot_prefix: List[tuple] = [((), 0.0) for _ in range(slots)]
         # per-slot radix bookkeeping: (pinned token paths — the matched
         # BACKING prefix and the request's own aligned path — and the
         # pages the index registered from this request's allocation)
@@ -329,7 +359,7 @@ class Engine:
         # per-link AND per-request demand-step deltas (serving/arbiter.py
         # DemandTracker): the pressure feed subtracts a finishing
         # request's own share from its link immediately at departure
-        self._demand = DemandTracker(self.sac.n_devices)
+        self._demand = DemandTracker(self.sac.n_devices, self.topology)
         if self.arbiter_on:
             self.arbiter = BudgetArbiter.from_fabric(
                 ArbiterConfig(max_width=int(cfg.sac.prefetch_width),
@@ -339,7 +369,8 @@ class Engine:
                               precision_weighted=bool(
                                   cfg.sac.precision_weighted)),
                 self.sac.fabric, self.sac.entry_bytes,
-                n_layers=max(self.model.n_kv, 1), pipeline=self.pipeline)
+                n_layers=max(self.model.n_kv, 1), pipeline=self.pipeline,
+                topology=self.topology)
         # per-layer hot-tier sizing: apportion the uniform total
         # (device_buffer * n_layers) by the LayerSizer's windowed prior.
         # resize_interval > 0 re-apportions ONLINE from the measured
@@ -395,9 +426,23 @@ class Engine:
 
     @property
     def _last_demand_s(self) -> List[float]:
-        """Last step's per-device demand seconds (departures already
-        subtracted) — the arbiter's and the placer's pressure signal."""
-        return self._demand.last_demand_s
+        """Last step's per-SEGMENT demand seconds (departures already
+        subtracted) — the arbiter's and the placer's pressure signal
+        (the placer projects each device's path bottleneck from it).
+
+        Warm-up-only seeding (PR 7): before the FIRST decode step the
+        tracker has never observed, so the feed is silent exactly while
+        wave-1 admissions are herding onto the prefix owner.  With
+        ``warmup_pressure_seed`` on, the cumulative BOOKED demand
+        (prefill writes already charged this fill wave) is added during
+        that window only.  No double count: the tracker's first
+        ``observe`` delta includes the warm-up traffic, and by then
+        ``stats.steps > 0`` so seeding is off."""
+        base = self._demand.last_demand_s
+        if self.warm_seed_on and self.stats.steps == 0:
+            booked = self.stats.traffic.segment_demand_s()
+            return [b + x for b, x in zip(base, booked)]
+        return base
 
     # -- submission --------------------------------------------------------------
     def submit(self, req: Request):
@@ -615,6 +660,16 @@ class Engine:
                 self.radix.pin(own)
                 pins.append(own)
             self._slot_radix[s] = (pins, keep)
+            # replica-aware reads (PR 7): remember which devices hold a
+            # copy of the matched prefix and what fraction of this
+            # slot's reads live in the prefix region — step() re-picks
+            # the least-pressured copy every step.  The backing pin
+            # (held until departure) keeps every copy's pages resident.
+            if self.replica_reads_on and matched:
+                self._slot_prefix[s] = (tuple(sorted(m.copies)),
+                                        matched / max(len(prompt), 1))
+            else:
+                self._slot_prefix[s] = ((), 0.0)
             # prefill-time warm-up: seed the recycled (cold) lane from the
             # radix-reused prefix tail + top-scoring prompt entries
             if self.planner is not None:
@@ -722,6 +777,40 @@ class Engine:
         prev_len = np.asarray(self.state["cache_len"])
         occupied = [s for s in range(self.slots) if self.slot_req[s]]
         t_comp = self.step_compute_s(len(occupied))
+        # replica-aware read choice (PR 7): slot -> (read device, prefix
+        # read fraction).  Re-evaluated every step from the bottleneck-
+        # projected pressure feed — the copy choice is NOT frozen at
+        # placement.  With replica_reads off this is (own device, 0.0)
+        # and everything below is bit-identical to the flat path.
+        reads: Dict[int, tuple] = {}
+        pres = (list(self.sac.placer.device_pressure())
+                if self.replica_reads_on else None)
+        # within-step booking: charge each slot's expected step demand
+        # onto its chosen devices as reads are assigned — the pressure
+        # feed refreshes only between steps, so without it every reader
+        # of a hot prefix herds onto the same least-pressured copy each
+        # step (the simulator twin books the same way)
+        est_s = (self.cfg.sac.topk * self.sac.entry_bytes
+                 / self.sac.fabric.bandwidth_Bps)
+        for s in occupied:
+            own = self.sac.device_of(self.slot_req[s].request_id)
+            copies, frac = self._slot_prefix[s]
+            rd = own
+            if pres is not None and copies and frac > 0.0:
+                cands = sorted(set(copies) | {own})
+                rd = min(cands,
+                         key=lambda d: (pres[d] if d < len(pres) else 0.0,
+                                        d))
+            if rd == own:
+                frac = 0.0
+            else:
+                self.stats.replica_redirects += 1
+            if pres is not None:
+                if rd < len(pres):
+                    pres[rd] += frac * est_s
+                if own < len(pres):
+                    pres[own] += (1.0 - frac) * est_s
+            reads[s] = (own, rd, frac)
         if self.arbiter is not None:
             # cross-request budget arbitration: last step's measured
             # per-device demand backlog shapes this step's speculation;
@@ -734,8 +823,10 @@ class Engine:
                 precision = {}
             for s in occupied:
                 req = self.slot_req[s]
-                dev = self.sac.device_of(req.request_id)
-                dev_slots.setdefault(dev, []).append(s)
+                # group under the slot's READ device: a replica-
+                # redirected slot's granted fetches flow on the chosen
+                # copy's path, so its budget must be consumed there
+                dev_slots.setdefault(reads[s][1], []).append(s)
                 if precision is not None:
                     precision[s] = self.stats.traffic.request_precision(
                         req.request_id)
@@ -774,27 +865,40 @@ class Engine:
                     pf_use = np.asarray(self.state["pf_useful"])
                 for s in occupied:
                     req = self.slot_req[s]
-                    dev = self.sac.device_of(req.request_id)
+                    dev, read_dev, frac = reads[s]
                     self.sac.traffic.record_hits(int(hits[s]),
                                                  int(misses[s]))
                     n_miss = int(misses[s])
                     if n_miss:
                         # keyed: the request's own demand share, so the
-                        # pressure feed can subtract it at departure
-                        self.sac.sparse_fetch_time(n_miss, device=dev,
-                                                   key=req.request_id)
+                        # pressure feed can subtract it at departure.
+                        # The prefix-region share of the misses reads
+                        # the step's chosen replica copy; the rest stays
+                        # on the slot's own device (frac == 0 charges
+                        # everything there — the flat path, unchanged).
+                        n_pfx = min(int(round(n_miss * frac)), n_miss)
+                        if n_pfx:
+                            self.sac.sparse_fetch_time(
+                                n_pfx, device=read_dev,
+                                key=req.request_id)
+                        if n_miss - n_pfx:
+                            self.sac.sparse_fetch_time(
+                                n_miss - n_pfx, device=dev,
+                                key=req.request_id)
                     if self.prefetch:
                         # measured speculation outcomes (in-graph pf_*
                         # counters): issued entries cross the fabric as
                         # prefetch traffic; useful ones were demand hits.
                         # Keyed by request so the arbiter's precision
-                        # weighting sees per-request precision.
+                        # weighting sees per-request precision.  Charged
+                        # to the READ device — the same path the grant
+                        # that authorized these entries was budgeted on.
                         self.sac.traffic.record_prefetch(
                             int(pf_ins[s]), int(pf_use[s]),
                             key=req.request_id)
                         if int(pf_ins[s]):
                             self.sac.prefetch_fetch_time(int(pf_ins[s]),
-                                                         device=dev)
+                                                         device=read_dev)
             else:
                 # cold-read convention: every step is charged the full
                 # top-k transfer per layer
@@ -879,6 +983,7 @@ class Engine:
                     for p in pins:
                         self.radix.release(p)
                 self._slot_radix[s] = ([], 0)
+                self._slot_prefix[s] = ((), 0.0)
                 kept = self.sac.release(req.request_id, keep_pages=keep)
                 if kept and self.cfg.sac.radix_headroom_frac > 0:
                     # pool page pressure: push the LRU tail of the cache
@@ -934,6 +1039,10 @@ class Engine:
                    prefetch_precision=self.stats.prefetch_precision,
                    replicated_pages=self.sac.replicated_pages,
                    dedup_shared_pages=self.sac.dedup_shared_pages,
+                   replica_redirects=self.stats.replica_redirects,
+                   spec_yielded_s=self.stats.traffic.spec_yielded_s,
+                   critical_demand_bytes=(
+                       self.sac.traffic.stats.critical_demand_bytes),
                    critical_issued_s=(
                        self.sac.traffic.stats.critical_issued_s),
                    pool_bytes_per_req=(self.sac.booked_pages_cum

@@ -30,6 +30,11 @@ class SchedulerConfig:
     local_dram_bytes: float = float("inf")     # RDMA baseline constraint
     hbm_kv_bytes: float = float("inf")         # GPU-only baseline constraint
     bytes_per_token: float = 0.0               # KV bytes/token (all layers)
+    topology: Optional[object] = None          # FabricTopology (PR 7): when
+                                               # set, the pressure feed is
+                                               # per-SEGMENT and the placer
+                                               # projects it to per-device
+                                               # bottleneck pressure
 
 
 class Scheduler:
@@ -40,7 +45,8 @@ class Scheduler:
         self.placer = Placer(
             cfg.n_pool_devices,
             policy=cfg.placement or policy_for_interleave(cfg.interleave),
-            capacity_bytes=cfg.pool_device_bytes)
+            capacity_bytes=cfg.pool_device_bytes,
+            topology=cfg.topology)
         self.local_bytes = 0.0
         self.hbm_bytes = 0.0
         self._affinity_fn = None

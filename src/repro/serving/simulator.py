@@ -52,8 +52,9 @@ from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.core.fabric import FabricTopology
 from repro.core.traffic import FabricAccountant
-from repro.core.transfer import PipelineModel
+from repro.core.transfer import PipelineModel, QOS_SPECULATIVE
 from repro.serving.arbiter import (ArbiterConfig, BudgetArbiter,
                                    DemandTracker, LayerSizer,
                                    resize_allocation_width)
@@ -288,6 +289,39 @@ class SimConfig:
     round1: bool = False               # cold cache: prefill + write first
     prefill_concurrency: int = 8
     max_sim_s: float = 1e5
+    # --- PR 7: CXL fabric topology (core/fabric.py) ---
+    topology: Optional[str] = None     # fabric spec ("tree:NxS", "multi_
+                                       # switch:NxS", "mesh:NxP", ...);
+                                       # None = flat star — one dedicated
+                                       # host port per device, bit-
+                                       # identical to the pre-PR 7 flat
+                                       # per-device accounting.  Timing
+                                       # always honors the topology: the
+                                       # step's fetch time is the max
+                                       # per-SEGMENT drain time (a shared
+                                       # trunk serializes the traffic of
+                                       # every device behind it)
+    segment_aware: bool = True         # control plane (placer pressure,
+                                       # DemandTracker, arbiter budgets)
+                                       # reads per-SEGMENT bottleneck
+                                       # pressure along each path.  False
+                                       # = segment-BLIND baseline: timing
+                                       # still pays the topology but the
+                                       # control loop only sees flat
+                                       # per-device endpoint demand — the
+                                       # A/B cell of benchmarks/
+                                       # fabric_sweep.py
+    warmup_pressure_seed: bool = False # PR 7 satellite (engine twin):
+                                       # seed the placement pressure feed
+                                       # from BOOKED prefill-write demand
+                                       # during the window before the
+                                       # FIRST decode step only
+    replica_reads: bool = False        # PR 7 satellite (engine twin):
+                                       # re-pick the least-bottleneck-
+                                       # pressured replica of a cached
+                                       # prefix every step; the matched
+                                       # fraction of the request's misses
+                                       # follows the read device
 
 
 class _Prefetch:
@@ -334,6 +368,14 @@ def simulate(reqs: List[Request], model: ModelProfile,
     # any PR 6 mechanism implies the radix prefix cache exists
     use_radix = bool(sim.radix_affinity or sim.replicate_prefixes
                      or sim.dedup_pages or sim.radix_admission)
+    # PR 7: the switch fabric.  ``topo`` always shapes TIMING (per-segment
+    # drain); ``ctl_topo`` additionally shapes the CONTROL PLANE (pressure
+    # feed, tracker, arbiter budgets) unless segment_aware is off — the
+    # segment-blind A/B baseline of benchmarks/fabric_sweep.py.
+    topo = FabricTopology.from_spec(sim.topology, backend.n_pool_devices)
+    ctl_topo = topo if sim.segment_aware else None
+    n_slots = ctl_topo.n_segments if ctl_topo is not None \
+        else backend.n_pool_devices
     sched = Scheduler(SchedulerConfig(
         concurrency=sim.concurrency,
         n_pool_devices=backend.n_pool_devices,
@@ -346,6 +388,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
                           else float("inf")),
         hbm_kv_bytes=backend.hbm_kv_bytes,
         bytes_per_token=model.kv_bytes_per_token(),
+        topology=ctl_topo,
     ))
     prefetch = _Prefetch(backend.nic_bw_Bps)
     rearrange = _Prefetch(REARRANGE_BW)
@@ -356,8 +399,16 @@ def simulate(reqs: List[Request], model: ModelProfile,
     prefill_q: deque = deque()
     prefill_done: List[Tuple[float, Request]] = []
     prefill_busy_until = [0.0] * max(sim.prefill_concurrency, 1)
+    # trunk write serialization (PR 7): concurrent prefill pool-writes
+    # whose routes cross the same multi-device segment serialize on it
+    # (a switch trunk carries one device-link's worth of upstream
+    # bandwidth).  Single-device segments keep the independent-lane
+    # model, so the flat star — no shared segments — is bit-identical
+    # to the pre-fabric behavior.
+    seg_write_busy = [0.0] * topo.n_segments
     n_done = 0
-    acct = FabricAccountant(n_devices=backend.n_pool_devices)
+    acct = FabricAccountant(n_devices=backend.n_pool_devices,
+                            topology=topo)
 
     # per-request miss traffic: each request's hot-buffer hit rate depends
     # on its OWN context length (mixed-length traces are the norm).
@@ -409,16 +460,37 @@ def simulate(reqs: List[Request], model: ModelProfile,
                           link_budget_frac=sim.link_budget_frac,
                           precision_weighted=sim.precision_weighted),
             entry_s=model.entry_bytes / backend.fetch_bw_Bps,
-            n_layers=model.n_attn_layers, pipeline=pipeline)
+            n_layers=model.n_attn_layers, pipeline=pipeline,
+            topology=ctl_topo)
     # per-link AND per-request analytic demand (the engine's
     # DemandTracker twin): a finishing request's own share leaves its
-    # link's pressure signal immediately, not via EMA decay
-    tracker = DemandTracker(backend.n_pool_devices)
+    # link's pressure signal immediately, not via EMA decay.  With a
+    # control-plane topology the tracker runs in SEGMENT space.
+    tracker = DemandTracker(backend.n_pool_devices, ctl_topo)
+
+    def _ctl_route(dev: int):
+        return ctl_topo.route(dev) if ctl_topo is not None else (dev,)
+
+    # PR 7 satellite (engine twin): before the first decode step the
+    # demand feed is silent, so wave-1 admissions herd onto the prefix
+    # owner — seed the feed with each admission's BOOKED prefill-write
+    # demand until the first real measurement lands
+    warm_seed = [0.0] * n_slots
+    _seed_on = [bool(sim.warmup_pressure_seed)]
+
+    def _pressure():
+        if _seed_on[0]:
+            return [b + w for b, w in zip(tracker.last_demand_s,
+                                          warm_seed)]
+        return tracker.last_demand_s
+
     # pressure_aware / radix_affinity placement reads the live analytic
     # demand seconds — the same per-link signal the engine feeds its
-    # own placer
-    sched.set_pressure_fn(lambda: tracker.last_demand_s)
+    # own placer (per-segment when the control plane is topology-aware;
+    # the placer projects it to per-device bottleneck pressure)
+    sched.set_pressure_fn(_pressure)
     grant_sum = grant_n = 0
+    replica_redirects = [0]
 
     # analytic radix prefix cache (SimConfig.radix_affinity): group id ->
     # [cached prefix tokens, devices holding a copy].  First writer wins,
@@ -529,11 +601,30 @@ def simulate(reqs: List[Request], model: ModelProfile,
         hit = _group_hit(r)
         return float(hit[0]) if hit is not None else 0.0
 
+    def _seed_pressure(r: Request) -> None:
+        """Warm-up pressure seeding: charge the admitted request's booked
+        prefill-write seconds along its device's path (runs AFTER
+        ``_note_radix``, so a dedup/radix hit seeds only the unmatched
+        residue — the engine reads the same booked write_back traffic
+        via ``TrafficStats.segment_demand_s``)."""
+        if not _seed_on[0]:
+            return
+        eff = r.context_len - matched.get(r.request_id, 0)
+        s = eff * model.kv_bytes_per_token() / write_bw
+        for slot in _ctl_route(r.pool_device):
+            warm_seed[slot] += s
+
+    def _admit_hook(r: Request) -> None:
+        if use_radix:
+            _note_radix(r)
+        _seed_pressure(r)
+
     if use_radix:
         sched.set_affinity_fn(_affinity)
-        sched.set_admit_fn(_note_radix)
         if sim.radix_admission:
             sched.set_reuse_fn(_reuse_score)
+    if use_radix or sim.warmup_pressure_seed:
+        sched.set_admit_fn(_admit_hook)
 
     # prefill warm-up's cold-start miss reduction: a request's FIRST
     # decode step runs against a cold hot tier, lifted to the modeled
@@ -574,10 +665,31 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     # local) — the engine's _fill_slots twin
                     eff_ctx = r.context_len - matched.get(r.request_id, 0)
                     dur = model.prefill_s(eff_ctx)
-                    # pool write (layer-wise bulk) on the backend fabric
+                    # pool write (layer-wise bulk) on the backend fabric,
+                    # serialized on any shared trunk along the owning
+                    # device's route (flat star: exactly wb / write_bw)
                     wb = eff_ctx * model.kv_bytes_per_token()
                     acct.stats.bytes_written += wb
-                    dur += wb / write_bw
+                    xfer = topo.transfer_seconds(r.pool_device,
+                                                 wb / write_bw)
+                    trunks = [sg for sg in topo.route(r.pool_device)
+                              if sg in topo.shared_segments]
+                    if trunks:
+                        # a shared trunk drains at its own scaled LINK
+                        # rate, not the pool's striped aggregate — the
+                        # shared port is the write's bottleneck
+                        xfer = max(xfer, max(
+                            wb / (backend.fetch_bw_Bps
+                                  * max(topo.segments[sg].bandwidth_scale,
+                                        1e-12))
+                            for sg in trunks))
+                        start = max([t] + [seg_write_busy[sg]
+                                           for sg in trunks])
+                        for sg in trunks:
+                            seg_write_busy[sg] = start + xfer
+                        dur += (start - t) + xfer
+                    else:
+                        dur += xfer
                     prefill_busy_until[i] = t + dur
                     r.first_token_s = t + dur      # TTFT = prefill completion
                     r.generated = 1
@@ -619,6 +731,38 @@ def simulate(reqs: List[Request], model: ModelProfile,
         if backend.name == "hbm":
             t_fetch = t_exposed = 0.0
         else:
+            # PR 7 replica-aware reads (engine twin): re-pick the least-
+            # bottleneck-pressured copy of each request's cached prefix
+            # THIS step; the matched fraction of its misses (and its
+            # speculative prefetch) reads from that copy, so grants and
+            # demand charges follow the read device
+            reads: Dict[int, Tuple[int, int, float]] = {}
+            replica_on = sim.replica_reads and use_radix
+            pres = (list(sched.placer.device_pressure())
+                    if replica_on else None)
+            # within-step booking: charge each reader's expected step
+            # demand onto its chosen devices as reads are assigned —
+            # the pressure feed refreshes only BETWEEN steps, so
+            # without it every reader of a hot prefix herds onto the
+            # same least-pressured copy each step (the copies flip-flop
+            # in lockstep and the per-step bottleneck never improves)
+            est_s = step_topk * model.entry_bytes / backend.fetch_bw_Bps
+            for r in decoding.values():
+                own = r.pool_device
+                rd, frac = own, 0.0
+                hit = matched.get(r.request_id, 0)
+                if replica_on and hit > 0 and r.prefix_group is not None:
+                    cached = radix_cache.get(r.prefix_group)
+                    if cached is not None:
+                        copies = sorted(set(cached[1]) | {own})
+                        rd = min(copies, key=lambda d: (pres[d], d))
+                        if rd != own:
+                            frac = min(hit / max(r.context_len, 1), 1.0)
+                            replica_redirects[0] += 1
+                if pres is not None:
+                    pres[rd] += frac * est_s
+                    pres[own] += (1.0 - frac) * est_s
+                reads[r.request_id] = (own, rd, frac)
             grants = None
             if arb is not None:
                 dev_reqs: Dict[int, List[int]] = {}
@@ -629,14 +773,17 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     # same TrafficStats signal the engine feeds)
                     precision = {}
                 for r in decoding.values():
-                    dev_reqs.setdefault(r.pool_device,
+                    dev_reqs.setdefault(reads[r.request_id][1],
                                         []).append(r.request_id)
                     if precision is not None:
                         precision[r.request_id] = \
                             acct.stats.request_precision(r.request_id)
                 grants = arb.grant(t_comp, tracker.last_demand_s, dev_reqs,
                                    precision=precision)
-            demand_only = [0.0] * backend.n_pool_devices
+            # per-SLOT demand-only backlog (segment space when the
+            # control plane is topology-aware, device space otherwise) —
+            # next step's pressure signal
+            demand_ctl = [0.0] * n_slots
             req_miss_b: Dict[int, float] = {}
             for r in decoding.values():
                 rid = r.request_id
@@ -674,8 +821,22 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     h, pf_n, pf_u = pf_at(rid, w)
                 miss_b = step_topk * (1 - h) * model.entry_bytes
                 pf_b = pf_n * model.entry_bytes
-                acct.add_step_demand(r.pool_device, miss_b + pf_b)
-                demand_only[r.pool_device] += miss_b
+                own, rd, frac = reads[rid]
+                pfx_b = miss_b * frac         # matched-prefix share ->
+                                              # the replica read device
+                if pfx_b:
+                    acct.add_step_demand(rd, pfx_b)
+                    for slot in _ctl_route(rd):
+                        demand_ctl[slot] += pfx_b
+                acct.add_step_demand(own, miss_b - pfx_b)
+                for slot in _ctl_route(own):
+                    demand_ctl[slot] += miss_b - pfx_b
+                if pf_b:
+                    # speculation is QoS-classed: at qos_spec_yield
+                    # topologies it can only fill the hide window left
+                    # after demand (the drain below), and it follows
+                    # the read device like the engine's prefetch lane
+                    acct.add_step_demand(rd, pf_b, qos=QOS_SPECULATIVE)
                 req_miss_b[rid] = miss_b
                 acct.record_hits(h * step_topk, (1 - h) * step_topk)
                 if pf_n:
@@ -685,23 +846,48 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     acct.record_prefetch(pf_n, pf_u,
                                          key=None if was_cold else rid)
                     acct.stats.prefetch_bytes += pf_b
-            step_demand = acct.drain_step()
+            step_demand = acct.drain_step()     # per-SEGMENT bytes
             bw = backend.fetch_bw_Bps
             if backend.prefetch and (prefetch.busy() or rearrange.busy()):
                 bw *= (1 - backend.pcie_contention)   # PCIe bus contention
             # arbiter feedback: this step's demand-only (non-speculative)
-            # seconds per device are next step's link-pressure signal,
-            # split per request so a departure subtracts its own share
-            tracker.set_step([d / bw for d in demand_only],
+            # seconds per slot are next step's pressure signal, split
+            # per request so a departure subtracts its own share
+            tracker.set_step([d / bw for d in demand_ctl],
                              {rid: b / bw for rid, b in req_miss_b.items()})
             sched.note_pressure_update()
-            t_fetch = (max(step_demand) / bw + backend.fetch_base_s
+            # per-SEGMENT drain: a shared trunk serializes everything
+            # behind it, so the step's fetch tail is the BOTTLENECK
+            # segment's drain time (flat star: exactly the old per-
+            # device max)
+            seg_s = topo.segment_seconds(step_demand, bw)
+            spec_s = topo.segment_seconds(acct.step_spec_bytes, bw)
+            t_fetch = (max(seg_s) + backend.fetch_base_s
                        + model.n_attn_layers * backend.layer_latency_s)
-            # issued vs exposed: only the tail of the step's fetch that
-            # does not fit the double-buffered hide window stalls decode
-            t_exposed = pipeline.exposed_time(t_fetch, t_comp)
+            if topo.qos_spec_yield:
+                # QoS: speculation yields to demand at congested
+                # segments — only DEMAND traffic can stall the step,
+                # and spec beyond each segment's leftover hide window
+                # arrives too late to help (dropped from exposure,
+                # counted in spec_yielded_s; it stays issued)
+                dem_s = [a - b for a, b in zip(seg_s, spec_s)]
+                t_exposed = pipeline.exposed_time(
+                    max(dem_s) + backend.fetch_base_s
+                    + model.n_attn_layers * backend.layer_latency_s,
+                    t_comp)
+                window = pipeline.hide_window_s(t_comp)
+                acct.stats.spec_yielded_s += sum(
+                    max(0.0, sp - max(0.0, window - dm))
+                    for sp, dm in zip(spec_s, dem_s))
+            else:
+                # issued vs exposed: only the tail of the step's fetch
+                # that does not fit the double-buffered hide window
+                # stalls decode
+                t_exposed = pipeline.exposed_time(t_fetch, t_comp)
+            acct.charge_segment_seconds(seg_s, spec_s)
             acct.charge_seconds(t_fetch)
             acct.charge_exposed(t_exposed)
+        _seed_on[0] = False        # first decode step ends warm seeding
         dt = t_comp + t_exposed
         t += dt
 
@@ -740,6 +926,9 @@ def simulate(reqs: List[Request], model: ModelProfile,
                bytes_fetched=acct.stats.bytes_fetched,
                bytes_written=acct.stats.bytes_written,
                critical_demand_bytes=acct.stats.critical_demand_bytes,
+               critical_issued_s=acct.stats.critical_issued_s,
+               spec_yielded_s=acct.stats.spec_yielded_s,
+               replica_redirects=float(replica_redirects[0]),
                radix_hit_tokens=float(sum(matched.values())),
                replicated_bytes=replicated_b[0],
                dedup_shared_bytes=dedup_b[0],
@@ -751,6 +940,10 @@ def simulate(reqs: List[Request], model: ModelProfile,
                sim_hit_rate=acct.stats.hit_rate,
                cold_hit_rate=(sum(cold_hits_seen) / len(cold_hits_seen)
                               if cold_hits_seen else cold_hit))
+    # per-SEGMENT traffic (lists — benchmarks/fabric_sweep.py computes
+    # trunk/leaf hotspot ratios from these against the topology)
+    out["segment_demand_bytes"] = list(acct.stats.segment_demand_bytes)
+    out["segment_issued_s"] = list(acct.stats.segment_issued_s)
     if arb is not None:
         out["arbiter_width_mean"] = (grant_sum / grant_n if grant_n
                                      else 0.0)

@@ -1,0 +1,498 @@
+"""CXL fabric topology subsystem (PR 7, core/fabric.py).
+
+The invariant this suite guards: **topology changes traffic and timing,
+never decoded tokens** — the fabric graph is pure control/accounting
+plane.  Sections:
+
+  - FabricTopology structure: presets (flat_star / tree / multi_switch /
+    mesh), deterministic routing, LCA device->device routes, bottleneck
+    vs leaf projections, from_spec parsing + error cases;
+  - the conservation property (hypothesis): the accountant's summed
+    per-segment charged seconds equal the charges recomputed along every
+    fetch's path — no traffic is lost or double-counted by the graph;
+  - flat-star degeneracy: with the default topology the per-SEGMENT
+    stats equal the per-device stats element-for-element (the PR 7
+    accounting is a strict superset of the historical flat accounting);
+  - tree conservation: a trunk's issued seconds are the sum of its
+    member leaves' (trunk_scale=1), and leaf segments equal the
+    per-device numbers — holds for the engine AND the simulator (the
+    per-segment issued-seconds parity contract);
+  - QoS: the OverlapQueue's speculative class yields at congested
+    segments (only demand stalls; late spec lands in spec_yielded_s);
+  - per-path arbiter budgets: devices sharing a saturated trunk share
+    one speculation budget (granted_seg), flat star matches the
+    topology-free arbiter exactly; DemandTracker departures subtract
+    along the full route;
+  - engine bit-identity: decoded tokens identical across topologies and
+    with warmup_pressure_seed / replica_reads on;
+  - simulator: flat-spec runs match the default exactly, a shared trunk
+    serializes timing, QoS yield is recorded.
+"""
+import dataclasses
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core.fabric import FabricTopology, Segment
+from repro.core.traffic import FabricAccountant, OverlapQueue
+from repro.core.transfer import (FABRICS, PipelineModel, QOS_DEMAND,
+                                 QOS_SPECULATIVE)
+from repro.serving.arbiter import ArbiterConfig, BudgetArbiter, DemandTracker
+
+
+# ---------------------------------------------------------------------------
+# structure + routing
+# ---------------------------------------------------------------------------
+
+
+def test_flat_star_structure():
+    flat = FabricTopology.flat_star(3)
+    assert flat.n_segments == 3
+    assert [flat.route(d) for d in range(3)] == [(0,), (1,), (2,)]
+    assert not flat.qos_spec_yield
+    assert flat.transfer_seconds(1, 2.5) == 2.5      # identity charge
+
+
+def test_tree_structure_leaves_numbered_first():
+    tree = FabricTopology.tree(4, n_switches=2)
+    assert tree.n_segments == 6                      # 4 leaves + 2 trunks
+    # leaf sid == device id, so leaf projections align index-for-index
+    # with per-device arrays
+    for d in range(4):
+        assert tree.leaf(d) == d
+    assert tree.route(0) == (4, 0) and tree.route(1) == (4, 1)
+    assert tree.route(2) == (5, 2) and tree.route(3) == (5, 3)
+    assert tree.qos_spec_yield
+
+
+def test_multi_switch_and_mesh_structure():
+    ms = FabricTopology.multi_switch(8, 2)
+    assert ms.n_segments == 11                       # 8 + 2 trunks + root
+    assert ms.route(0) == (10, 8, 0)
+    assert ms.route(7) == (10, 9, 7)
+    mesh = FabricTopology.mesh(4, n_ports=2)
+    # striped: devices 0 and 2 share port 0, 1 and 3 share port 1
+    assert mesh.route(0)[0] == mesh.route(2)[0]
+    assert mesh.route(1)[0] == mesh.route(3)[0]
+    assert mesh.route(0)[0] != mesh.route(1)[0]
+
+
+def test_route_between_stops_at_lca():
+    tree = FabricTopology.tree(4, n_switches=2)
+    # same switch: the shared trunk is never crossed
+    assert tree.route_between(0, 1) == (0, 1)
+    # cross switch: up to the host, down the other trunk
+    assert tree.route_between(0, 2) == (0, 4, 5, 2)
+
+
+def test_route_out_of_range_raises():
+    tree = FabricTopology.tree(4, n_switches=2)
+    with pytest.raises(IndexError):
+        tree.route(4)
+    with pytest.raises(IndexError):
+        tree.route(-1)
+
+
+def test_device_view_is_bottleneck_leaf_view_is_endpoint():
+    tree = FabricTopology.tree(4, n_switches=2)
+    seg = [1.0, 0.0, 0.0, 0.0, 5.0, 0.0]            # leaf0=1, trunk0=5
+    assert tree.device_view(seg) == [5.0, 5.0, 0.0, 0.0]
+    assert tree.leaf_view(seg) == [1.0, 0.0, 0.0, 0.0]
+
+
+def test_trunk_scale_slows_segment():
+    tree = FabricTopology.tree(2, n_switches=1, trunk_scale=0.5)
+    charges = dict(tree.segment_charge(0, 1.0))
+    assert charges[0] == 1.0                         # leaf: full rate
+    assert charges[2] == 2.0                         # trunk: half rate
+    assert tree.transfer_seconds(0, 1.0) == 2.0      # bottleneck
+    assert tree.segment_seconds([0.0, 0.0, 32e9], 32e9) == [0.0, 0.0, 2.0]
+
+
+def test_from_spec_strings_and_errors():
+    assert FabricTopology.from_spec(None, 3).name == "flat"
+    t = FabricTopology.from_spec("tree:4x2")
+    assert t.n_devices == 4 and t.n_segments == 6
+    assert FabricTopology.from_spec("tree", 4).n_devices == 4
+    assert FabricTopology.from_spec("flat:2").n_segments == 2
+    assert FabricTopology.from_spec("multi_switch:8x2").n_segments == 11
+    assert FabricTopology.from_spec("mesh:4x2").name == "mesh"
+    # pass-through with device-count agreement
+    assert FabricTopology.from_spec(t, 4) is t
+    with pytest.raises(ValueError):
+        FabricTopology.from_spec("warp:4")           # unknown kind
+    with pytest.raises(ValueError):
+        FabricTopology.from_spec("tree:4x2", 8)      # count mismatch
+    with pytest.raises(ValueError):
+        FabricTopology.from_spec("tree")             # no count anywhere
+
+
+# ---------------------------------------------------------------------------
+# conservation property: per-segment charges == recomputed path charges
+# ---------------------------------------------------------------------------
+
+
+def _make_topo(kind: str, n: int) -> FabricTopology:
+    return {"flat": lambda: FabricTopology.flat_star(n),
+            "tree": lambda: FabricTopology.tree(n, 2),
+            "multi_switch": lambda: FabricTopology.multi_switch(n, 2),
+            "mesh": lambda: FabricTopology.mesh(n, 2)}[kind]()
+
+
+@given(kind=st.sampled_from(["flat", "tree", "multi_switch", "mesh"]),
+       n=st.integers(min_value=2, max_value=6),
+       fetches=st.lists(st.tuples(st.integers(min_value=0, max_value=63),
+                                  st.integers(min_value=1, max_value=4096)),
+                        min_size=1, max_size=24))
+@settings(max_examples=60, deadline=None)
+def test_segment_charge_conservation(kind, n, fetches):
+    """Every fetch charges exactly its path: the accountant's cumulative
+    per-segment issued seconds equal the charges recomputed fetch by
+    fetch via segment_charge, and the per-device issued seconds equal
+    the recomputed bottleneck times."""
+    topo = _make_topo(kind, n)
+    acct = FabricAccountant(backend="cxl", n_devices=n, topology=topo)
+    expect_seg = [0.0] * topo.n_segments
+    expect_dev = [0.0] * n
+    for dev_raw, entries in fetches:
+        dev = dev_raw % n
+        acct.sparse_fetch(entries, 1152, device=dev)
+        raw = FABRICS["cxl"].sparse_fetch_time(entries, 1152)
+        for sid, c in topo.segment_charge(dev, raw):
+            expect_seg[sid] += c
+        expect_dev[dev] += topo.transfer_seconds(dev, raw)
+    assert acct.stats.segment_issued_s == pytest.approx(
+        expect_seg, rel=1e-12, abs=1e-15)
+    assert acct.stats.device_issued_s == pytest.approx(
+        expect_dev, rel=1e-12, abs=1e-15)
+    # nothing leaks into the speculative class from demand fetches
+    assert acct.stats.segment_prefetch_s == [0.0] * topo.n_segments
+
+
+# ---------------------------------------------------------------------------
+# flat-star degeneracy: per-segment stats == per-device stats exactly
+# ---------------------------------------------------------------------------
+
+
+def test_flat_star_segment_stats_equal_device_stats():
+    acct = FabricAccountant(backend="cxl", n_devices=3)
+    acct.sparse_fetch(100, 1152, device=0)
+    acct.prefetch_fetch(40, 1152, device=1)
+    acct.bulk_fetch(5e6, device=2)
+    acct.write_back(3e6, device=0)
+    acct.add_step_demand(1, 1e6)
+    acct.add_step_demand(2, 2e6, qos=QOS_SPECULATIVE)
+    seg_backlog = acct.drain_step()
+    st_ = acct.stats
+    assert st_.segment_issued_s == st_.device_issued_s
+    assert st_.segment_prefetch_s == st_.device_prefetch_s
+    assert st_.segment_demand_s() == st_.device_demand_s()
+    assert st_.segment_demand_bytes == st_.device_demand_bytes
+    assert seg_backlog == [0.0, 1e6, 2e6]
+    assert st_.critical_demand_bytes == 2e6
+
+
+def test_flat_spec_matches_default_exactly():
+    """topology='flat:N' and the default (None) produce bit-identical
+    stats for the same op sequence."""
+    outs = []
+    for spec in (None, "flat:2", FabricTopology.flat_star(2)):
+        acct = FabricAccountant(backend="cxl", n_devices=2, topology=spec)
+        acct.enable_overlap(PipelineModel(depth=2, overlap_frac=0.6))
+        acct.sparse_fetch(64, 1152, device=0)
+        acct.prefetch_fetch(32, 1152, device=1)
+        acct.drain_overlap(1e-4)
+        outs.append((acct.stats.segment_issued_s,
+                     acct.stats.segment_exposed_s,
+                     acct.stats.exposed_fabric_s,
+                     acct.stats.critical_issued_s,
+                     acct.stats.spec_yielded_s))
+    assert outs[0] == outs[1] == outs[2]
+    assert outs[0][4] == 0.0                 # flat star never QoS-yields
+
+
+# ---------------------------------------------------------------------------
+# tree conservation: trunk == sum of member leaves (the per-segment
+# issued-seconds contract shared by engine and simulator)
+# ---------------------------------------------------------------------------
+
+
+def test_tree_trunk_issued_is_sum_of_leaves_accountant():
+    tree = FabricTopology.tree(2, n_switches=1)      # segs: d0, d1, trunk
+    acct = FabricAccountant(backend="cxl", n_devices=2, topology=tree)
+    acct.sparse_fetch(100, 1152, device=0)
+    acct.sparse_fetch(60, 1152, device=1)
+    acct.prefetch_fetch(30, 1152, device=0)
+    st_ = acct.stats
+    assert st_.segment_issued_s[2] == pytest.approx(
+        st_.segment_issued_s[0] + st_.segment_issued_s[1], rel=1e-12)
+    # trunk_scale=1: leaf segments carry the per-device numbers
+    assert st_.segment_issued_s[:2] == st_.device_issued_s
+
+
+# ---------------------------------------------------------------------------
+# QoS: speculation yields at congested segments
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_queue_qos_spec_yields_to_demand():
+    tree = FabricTopology.tree(2, n_switches=1)      # qos_spec_yield=True
+    q = OverlapQueue(tree, PipelineModel(depth=2, overlap_frac=1.0))
+    q.issue(0, 0.008, QOS_DEMAND)
+    q.issue(0, 0.004, QOS_SPECULATIVE)
+    # hide window 0.01: demand (8 ms) fits -> exposed 0; spec gets the
+    # 2 ms leftover, the other 2 ms is dropped late (yielded) on BOTH
+    # segments of the route
+    assert q.drain(0.01) == 0.0
+    assert q.spec_yielded_s == pytest.approx(2 * 0.002)
+
+
+def test_overlap_queue_qos_demand_still_stalls():
+    tree = FabricTopology.tree(2, n_switches=1)
+    q = OverlapQueue(tree, PipelineModel(depth=2, overlap_frac=1.0))
+    q.issue(0, 0.02, QOS_DEMAND)                     # window is 0.01
+    q.issue(0, 0.004, QOS_SPECULATIVE)
+    assert q.drain(0.01) == pytest.approx(0.01)      # demand tail exposed
+    assert q.spec_yielded_s == pytest.approx(2 * 0.004)  # no window left
+
+
+def test_overlap_queue_without_yield_flag_spec_counts():
+    flat = FabricTopology.flat_star(2)               # qos off
+    q = OverlapQueue(flat, PipelineModel(depth=2, overlap_frac=1.0))
+    q.issue(0, 0.008, QOS_DEMAND)
+    q.issue(0, 0.004, QOS_SPECULATIVE)
+    assert q.drain(0.01) == pytest.approx(0.002)     # dem+spec - window
+    assert q.spec_yielded_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# per-path arbiter budgets + segment-space demand tracking
+# ---------------------------------------------------------------------------
+
+
+def test_tracker_departure_subtracts_along_route():
+    tree = FabricTopology.tree(2, n_switches=1)
+    tr = DemandTracker(2, tree)
+    tr.set_step([0.4, 0.3, 0.7], {1: 0.4})           # d0, d1, trunk
+    assert tr.depart(1, 0) == pytest.approx(0.4)
+    assert tr.last_demand_s == pytest.approx([0.0, 0.3, 0.3])
+
+
+def test_grant_shared_trunk_is_one_budget():
+    """Two devices behind one saturated trunk share a single speculation
+    budget: the second device's grant sees the first one's spec seconds
+    already booked on the trunk (granted_seg)."""
+    tree = FabricTopology.tree(2, n_switches=1)
+    pipe = PipelineModel(depth=2, overlap_frac=1.0)
+    cfg = ArbiterConfig(max_width=64, min_width=0, link_budget_frac=1.0)
+    entry_s = 1e-4
+    arb_t = BudgetArbiter(cfg, entry_s=entry_s, n_layers=1, pipeline=pipe,
+                          topology=tree)
+    arb_f = BudgetArbiter(cfg, entry_s=entry_s, n_layers=1, pipeline=pipe)
+    t_comp = 0.02                                    # hide window 20 ms
+    # leaves idle, trunk 18 ms busy -> 2 ms of shared headroom
+    g_t = arb_t.grant(t_comp, [0.0, 0.0, 0.018], {0: [1], 1: [2]})
+    g_f = arb_f.grant(t_comp, [0.0, 0.0], {0: [1], 1: [2]})
+    assert g_f[1] == g_f[2] == 64                    # flat: both full width
+    total_spec_s = (g_t[1] + g_t[2]) * entry_s
+    assert total_spec_s <= 0.002 + 1e-12             # one trunk budget
+    assert g_t[1] + g_t[2] < g_f[1] + g_f[2]
+
+
+def test_grant_flat_star_matches_no_topology():
+    flat = FabricTopology.flat_star(2)
+    pipe = PipelineModel(depth=2, overlap_frac=0.8)
+    cfg = ArbiterConfig(max_width=48, min_width=4, link_budget_frac=0.9)
+    kw = dict(entry_s=2e-4, n_layers=2, pipeline=pipe)
+    a = BudgetArbiter(cfg, topology=flat, **kw)
+    b = BudgetArbiter(cfg, **kw)
+    demand = [0.003, 0.011]
+    dev_reqs = {0: [1, 2], 1: [3]}
+    assert a.grant(0.02, demand, dev_reqs) == b.grant(0.02, demand,
+                                                      dev_reqs)
+
+
+def test_arbiter_rejects_out_of_range_device():
+    tree = FabricTopology.tree(2, n_switches=1)
+    arb = BudgetArbiter(ArbiterConfig(max_width=8),
+                        entry_s=1e-4, n_layers=1,
+                        pipeline=PipelineModel(depth=2, overlap_frac=1.0),
+                        topology=tree)
+    with pytest.raises(ValueError):
+        arb.grant(0.01, [0.0, 0.0, 0.0], {2: [1]})   # only 2 devices
+
+
+# ---------------------------------------------------------------------------
+# engine: decoded tokens are topology-invariant
+# ---------------------------------------------------------------------------
+
+
+def _engine(cfg, **kw):
+    from repro.serving.engine import Engine
+    return Engine(cfg, **kw)
+
+
+def _shared_trace(cfg, n=3, prefix=24, suffix=8, out=6, seed=3):
+    from repro.serving.request import shared_prefix_trace
+    return shared_prefix_trace(n, prefix_len=prefix, suffix_len=suffix,
+                               output_len=out, reuse_p=1.0, seed=seed,
+                               vocab=cfg.vocab)
+
+
+def test_engine_tokens_bit_identical_across_topologies():
+    """The fabric graph is control/accounting plane only: flat star, a
+    shared-trunk tree, and a cascaded multi_switch fabric decode the
+    same tokens."""
+    from repro.configs import get_config
+    cfg = get_config("qwen2-1.5b").reduced()
+    streams = []
+    for topo in (None, "tree:2x1", "multi_switch:2x2"):
+        eng = _engine(cfg, slots=2, max_ctx=96, seed=2,
+                      placement="radix_affinity", topology=topo)
+        for r in _shared_trace(cfg, out=10):
+            eng.submit(r)
+        for _ in range(10):
+            eng.step()
+        streams.append(sorted(tuple(t) for t in eng.slot_tokens))
+        assert eng.sac.traffic.stats.n_segments == \
+            FabricTopology.from_spec(topo, 2).n_segments
+    assert streams[0] == streams[1] == streams[2]
+
+
+def test_engine_tokens_bit_identical_fabric_knobs_on_off():
+    """warmup_pressure_seed + replica_reads change placement, grants and
+    charging — never decoded tokens (multiset comparison: seeding may
+    permute slot assignment)."""
+    from repro.configs import get_config
+    cfg = get_config("qwen2-1.5b").reduced()
+    streams = []
+    for on in (True, False):
+        eng = _engine(cfg, slots=2, max_ctx=96, seed=2,
+                      placement="radix_affinity",
+                      topology="tree:2x1" if on else None,
+                      replicate_prefixes=on,
+                      warmup_pressure_seed=on, replica_reads=on)
+        for r in _shared_trace(cfg, out=10):
+            eng.submit(r)
+        for _ in range(10):
+            eng.step()
+        streams.append(sorted(tuple(t) for t in eng.slot_tokens))
+    assert streams[0] == streams[1]
+
+
+def test_engine_tree_trunk_issued_is_sum_of_leaves():
+    """The per-segment issued-seconds contract on the REAL engine: with
+    trunk_scale=1 every charge lands once on the leaf and once on the
+    trunk, so trunk == leaf0 + leaf1 and leaves == device view."""
+    from repro.configs import get_config
+    cfg = get_config("qwen2-1.5b").reduced()
+    eng = _engine(cfg, slots=2, max_ctx=96, seed=0, topology="tree:2x1")
+    for r in _shared_trace(cfg, out=8):
+        eng.submit(r)
+    for _ in range(8):
+        eng.step()
+    st_ = eng.sac.traffic.stats
+    assert st_.n_segments == 3
+    assert sum(st_.segment_issued_s) > 0.0
+    assert st_.segment_issued_s[2] == pytest.approx(
+        st_.segment_issued_s[0] + st_.segment_issued_s[1], rel=1e-9)
+    assert st_.segment_issued_s[:2] == pytest.approx(
+        st_.device_issued_s, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# simulator: flat degeneracy, trunk serialization, QoS yield
+# ---------------------------------------------------------------------------
+
+
+def _sim_parts(n_devices=2):
+    from repro.serving.request import Request
+    from repro.serving.simulator import (ModelProfile, SimConfig,
+                                         default_backends, simulate)
+    reqs = [Request(request_id=i, arrival_s=0.01 * i, context_len=32768,
+                    output_len=24, prefix_len=16384, prefix_group=i % 2)
+            for i in range(12)]
+    model = ModelProfile("m", n_attn_layers=8, topk=2048, entry_bytes=1152,
+                         weights_bytes_per_gpu=2e10)
+    backend = dataclasses.replace(default_backends()["cxl"],
+                                  n_pool_devices=n_devices)
+    return reqs, model, backend, SimConfig, simulate
+
+
+def test_sim_flat_spec_matches_default_exactly():
+    reqs, model, backend, SimConfig, simulate = _sim_parts()
+    base = SimConfig(concurrency=8, round1=True, radix_affinity=True,
+                     prefetch_width=128, arbiter=True, overlap_frac=0.8)
+    a = simulate(reqs, model, backend, base)
+    b = simulate(reqs, model, backend,
+                 dataclasses.replace(base, topology="flat:2"))
+    assert a == b                                    # float-exact
+
+
+def test_sim_segment_blind_flat_star_is_noop():
+    """segment_aware=False only matters on switch topologies: under the
+    flat star the control plane is already device == segment."""
+    reqs, model, backend, SimConfig, simulate = _sim_parts()
+    base = SimConfig(concurrency=8, round1=True, radix_affinity=True,
+                     prefetch_width=128, arbiter=True, overlap_frac=0.8)
+    a = simulate(reqs, model, backend, base)
+    b = simulate(reqs, model, backend,
+                 dataclasses.replace(base, segment_aware=False))
+    assert a == b
+
+
+def test_sim_shared_trunk_serializes_timing():
+    """A 1-switch tree funnels BOTH devices through one trunk: per-step
+    fetch time is the trunk's (summed) drain, so decode is strictly no
+    faster than flat — and the trunk's demand bytes equal the leaves'
+    total."""
+    reqs, model, backend, SimConfig, simulate = _sim_parts()
+    base = SimConfig(concurrency=8, round1=True, radix_affinity=True)
+    flat = simulate(reqs, model, backend, base)
+    tree = simulate(reqs, model, backend,
+                    dataclasses.replace(base, topology="tree:2x1"))
+    assert tree["tbt_mean_s"] >= flat["tbt_mean_s"]
+    assert tree["exposed_fabric_s"] >= flat["exposed_fabric_s"]
+    seg = tree["segment_demand_bytes"]
+    assert len(seg) == 3
+    assert seg[2] == pytest.approx(seg[0] + seg[1], rel=1e-9)
+    # decoded-work invariance: same tokens generated, same bytes moved
+    assert tree["n_done"] == flat["n_done"]
+    assert tree["bytes_fetched"] == pytest.approx(flat["bytes_fetched"])
+
+
+def test_sim_qos_yield_recorded_under_congestion():
+    """On a qos_spec_yield topology a congested trunk drops late
+    speculation from exposure: spec_yielded_s > 0 and exposure stays
+    demand-driven (<= the blind total-backlog exposure)."""
+    reqs, model, backend, SimConfig, simulate = _sim_parts()
+    # zero hide window: every speculative segment-second is late, so a
+    # qos_spec_yield topology must drop (yield) all of it while the
+    # flat star still exposes the full dem+spec backlog
+    base = SimConfig(concurrency=12, round1=True, radix_affinity=True,
+                     prefetch_width=1024, overlap_frac=0.0)
+    flat = simulate(reqs, model, backend, base)
+    tree = simulate(reqs, model, backend,
+                    dataclasses.replace(base, topology="tree:2x1"))
+    assert flat["spec_yielded_s"] == 0.0
+    assert tree["spec_yielded_s"] > 0.0
+    # demand-only exposure: the tree's per-step exposed tail never
+    # includes the yielded speculation
+    assert tree["exposed_fabric_s"] < tree["issued_fabric_s"]
+
+
+def test_sim_replica_reads_and_seeding_run():
+    """The PR 7 satellites' simulator twins execute and keep the
+    decoded-work invariant (same requests complete, same tokens)."""
+    reqs, model, backend, SimConfig, simulate = _sim_parts(n_devices=4)
+    base = SimConfig(concurrency=8, round1=True, radix_affinity=True,
+                     replicate_prefixes=True, dedup_pages=True,
+                     radix_admission=True, topology="tree:4x2")
+    aware = dataclasses.replace(base, replica_reads=True,
+                                warmup_pressure_seed=True)
+    a = simulate(reqs, model, backend, base)
+    b = simulate(reqs, model, backend, aware)
+    assert a["n_done"] == b["n_done"] == len(reqs)
+    assert b["replica_redirects"] >= 0.0
+    assert len(b["segment_issued_s"]) == 6
