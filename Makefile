@@ -3,15 +3,20 @@
 #   make test        tier-1 suite (the ROADMAP verify command)
 #   make test-fast   substrate + engine-buffer slice (quick signal)
 #   make bench-smoke reduced buffer + prefetch + arbiter + placement +
-#                    locality + fabric sweeps; writes BENCH_prefetch.json
-#                    + BENCH_arbiter.json + BENCH_placement.json +
-#                    BENCH_locality.json + BENCH_fabric.json (CI
+#                    locality + fabric + serving sweeps; writes
+#                    BENCH_prefetch.json + BENCH_arbiter.json +
+#                    BENCH_placement.json + BENCH_locality.json +
+#                    BENCH_fabric.json + BENCH_serving.json (CI
 #                    artifacts), then gates the locality envelope
 #                    (benchmarks/locality_gate.py: hotspot <= 1.2x
-#                    pressure_aware, TTFT win >= 2x, dedup pool saving)
-#                    and the fabric envelope (benchmarks/fabric_gate.py:
+#                    pressure_aware, TTFT win >= 2x, dedup pool saving),
+#                    the fabric envelope (benchmarks/fabric_gate.py:
 #                    aware trunks balanced, aware p99 TTFT/TBT beat the
-#                    segment-blind baseline on tree:4x2)
+#                    segment-blind baseline on tree:4x2), and the
+#                    serving envelope (benchmarks/serving_gate.py:
+#                    arrival-anchored TTFT honest, chunked prefill
+#                    bounds the p99 worst token gap, disagg decode
+#                    never stalls on prompts)
 #   make deps        install runtime + test dependencies
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -36,6 +41,8 @@ bench-smoke:
 	python -m benchmarks.locality_gate
 	python -m benchmarks.fabric_sweep --quick
 	python -m benchmarks.fabric_gate
+	python -m benchmarks.serving_sweep --quick
+	python -m benchmarks.serving_gate
 
 deps:
 	pip install -r requirements.txt

@@ -1,0 +1,96 @@
+"""Regression gate over the serving sweep artifact (PR 8).
+
+Reads ``BENCH_serving.json`` (written by benchmarks/serving_sweep.py,
+the last step of `make bench-smoke`) and fails — nonzero exit — when
+continuous batching / disaggregated prefill regress out of their
+acceptance envelope on the open-loop diurnal/burst trace:
+
+  - ``ttft_honesty`` < 0: a cell's arrival-anchored p99 TTFT came out
+    SMALLER than its dispatch-anchored p99 — impossible when admission
+    is gated on ``arrival_s`` (queueing delay can only add latency), so
+    a negative value means a request was dispatched before it arrived:
+    the open-loop bug PR 8 fixed has come back.
+  - ``chunked_gap_ratio`` > 0.5: chunked prefill stopped bounding the
+    burst-induced decode stall — the p99 worst single token gap must
+    stay well under the monolithic cell's whole-prompt stalls
+    (observed ~0.15x at chunk=2048 on 16K effective prompts).
+  - ``disagg_gap_ratio`` > 0.1: prefill/decode disaggregation stopped
+    keeping prompts off the decode loop entirely (observed ~5e-4:
+    decode's worst gap is just a decode step).
+  - ``chunked_tbt_p99_ratio`` > 1.1: chunking made per-request mean
+    TBT clearly WORSE than monolithic — the schedule should spread the
+    same prefill compute, never add meaningfully to it.
+
+Usage: ``python -m benchmarks.serving_gate [--json BENCH_serving.json]``
+"""
+import argparse
+import json
+import sys
+
+TTFT_HONESTY_MIN = -1e-9
+CHUNKED_GAP_MAX = 0.5
+DISAGG_GAP_MAX = 0.1
+CHUNKED_TBT_MAX = 1.1
+
+
+def check(doc: dict) -> list:
+    """Return a list of failure strings (empty = gate passes)."""
+    envelopes = doc.get("envelopes", [])
+    failures = []
+    if not envelopes:
+        return ["no envelope rows in artifact"]
+    for env in envelopes:
+        rate = env.get("rate", "?")
+        honesty = env.get("ttft_honesty", -1.0)
+        if honesty < TTFT_HONESTY_MIN:
+            failures.append(
+                f"rate={rate}: ttft_honesty {honesty:.4f}s < 0 "
+                "(a request was dispatched before it arrived — the "
+                "open-loop arrival bug is back)")
+        gap = env.get("chunked_gap_ratio", float("inf"))
+        if gap > CHUNKED_GAP_MAX:
+            failures.append(
+                f"rate={rate}: chunked_gap_ratio {gap:.3f} > "
+                f"{CHUNKED_GAP_MAX} (chunked prefill stopped bounding "
+                "the decode stall)")
+        dgap = env.get("disagg_gap_ratio", float("inf"))
+        if dgap > DISAGG_GAP_MAX:
+            failures.append(
+                f"rate={rate}: disagg_gap_ratio {dgap:.3f} > "
+                f"{DISAGG_GAP_MAX} (disagg decode is stalling on "
+                "prompts)")
+        tbt = env.get("chunked_tbt_p99_ratio", float("inf"))
+        if tbt > CHUNKED_TBT_MAX:
+            failures.append(
+                f"rate={rate}: chunked_tbt_p99_ratio {tbt:.3f} > "
+                f"{CHUNKED_TBT_MAX} (chunking made mean TBT worse)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.json) as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"serving gate: cannot read {args.json}: {e}")
+        return 2
+    failures = check(doc)
+    if failures:
+        print("serving gate: FAIL")
+        for line in failures:
+            print(f"  - {line}")
+        return 1
+    for e in doc.get("envelopes", []):
+        print(f"serving gate: rate={e['rate']:g} "
+              f"chunked_gap={e['chunked_gap_ratio']:.3f}x "
+              f"disagg_gap={e['disagg_gap_ratio']:.4f}x "
+              f"honesty={e['ttft_honesty']:+.4f}s  OK")
+    print("serving gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,171 @@
+"""Open-loop serving sweep (PR 8): continuous batching + disaggregated
+prefill under honest arrival-anchored SLO metrics.
+
+The question this sweep answers: on an open-loop burst trace (the
+``diurnal_trace`` workload generator — inhomogeneous Poisson arrivals,
+burst clumps, heavy-tailed context lengths, multi-tenant prefix groups),
+what do chunked prefill and prefill/decode disaggregation buy over the
+monolithic colocated baseline, measured the honest way — TTFT anchored
+on ``arrival_s`` (queueing delay included) and per-request TBT?
+
+Cells per arrival rate (all on the cxl backend, same trace):
+
+  - ``monolithic`` : ``colocated_prefill=True``, no chunking — every
+    admitted prompt's full prefill stalls the decode loop (the
+    pre-PR 8 serving architecture, now with arrival-gated admission).
+  - ``chunked``    : ``colocated_prefill=True`` with
+    ``prefill_chunk_tokens`` — prompts splice in over bounded chunks
+    interleaved with decode steps, so a burst of long prompts costs
+    each decode step one chunk, never a whole prefill.
+  - ``disagg``     : ``round1=True`` — separate prefill lanes write KV
+    to the pool over the fabric and decode adopts via handoff; decode
+    never stalls on a prompt.
+
+**Envelope metrics** (gated by benchmarks/serving_gate.py).  The
+chunked-prefill win lives in ``tbt_max_p99_s`` — the p99 over each
+request's WORST single inter-token gap: a monolithic prefill stalls
+every decoding request for a whole prompt's compute (seconds), chunking
+bounds that stall to one chunk.  Per-request mean TBT averages the
+stall away, so it is reported but not the gated contrast.
+
+  - ``chunked_gap_ratio``      = chunked / monolithic p99 worst token
+    gap — chunking must bound the burst-induced decode stalls (< 1).
+  - ``disagg_gap_ratio``       = disagg / monolithic p99 worst token
+    gap — moving prefill off the decode loop cuts them hardest.
+  - ``chunked_tbt_p99_ratio``  = chunked / monolithic p99 mean TBT
+    (reported; secondary gate, weak contrast by construction).
+  - ``ttft_honesty``           = arrival-anchored minus dispatch-
+    anchored p99 TTFT, minimum over cells — the arrival-anchored
+    number must never be smaller (queueing delay can only ADD
+    latency); a negative value means a request was dispatched before
+    it arrived (the open-loop bug PR 8 fixed).
+
+Writes ``BENCH_serving.json``: one row per (rate, cell) with p50/p99
+TTFT (both anchors) / TBT and SLO attainment, plus ``envelopes``.
+"""
+import argparse
+import json
+
+from benchmarks.common import PAPER_MODEL, model_profile
+from repro.serving.request import diurnal_trace
+from repro.serving.simulator import SimConfig, default_backends, simulate
+
+# rates bracket the monolithic-colocated capacity (~1/prefill_s(16K)
+# ≈ 0.5 req/s for the paper model): 0.25 = loaded but stable, 0.5 =
+# at the knee, where burst clumps drive the p99 queueing tail
+RATES = (0.25, 0.5)          # req/s (base; diurnal peak is 1.5x)
+CONCURRENCY = 32
+PREFIX = 8192
+SUFFIX = 8192
+OUT_LEN = 256
+CHUNK = 2048
+BURST_P = 0.08
+BURST_SIZE = 8
+CTX_TAIL_ALPHA = 2.5
+N_TENANTS = 4
+BUFFER = 2048
+SLO_TTFT_S = 15.0
+SLO_TBT_S = 0.200
+
+CELLS = ("monolithic", "chunked", "disagg")
+
+
+def _sim_cfg(cell: str) -> SimConfig:
+    kw = dict(concurrency=CONCURRENCY, device_buffer=BUFFER,
+              slo_ttft_s=SLO_TTFT_S, slo_tbt_s=SLO_TBT_S)
+    if cell == "disagg":
+        return SimConfig(round1=True, **kw)
+    return SimConfig(colocated_prefill=True,
+                     prefill_chunk_tokens=0 if cell == "monolithic"
+                     else CHUNK, **kw)
+
+
+def _trace(rate: float, n: int):
+    return diurnal_trace(n, prefix_len=PREFIX, suffix_len=SUFFIX,
+                         output_len=OUT_LEN, base_rate=rate, seed=2,
+                         n_tenants=N_TENANTS, burst_p=BURST_P,
+                         burst_size=BURST_SIZE,
+                         ctx_tail_alpha=CTX_TAIL_ALPHA, max_ctx_mult=4.0)
+
+
+def run(csv=None, quick=False, out_json="BENCH_serving.json"):
+    rates = RATES[:1] if quick else RATES
+    model = model_profile()
+    backend = default_backends()["cxl"]
+    print(f"\n== Serving sweep: open-loop diurnal/burst trace "
+          f"(chunk={CHUNK}, burst_p={BURST_P}) ==")
+    rows, envelopes = [], []
+    for rate in rates:
+        n = 96 if quick else 160
+        cells = {}
+        for cell in CELLS:
+            r = simulate(_trace(rate, n), model, backend, _sim_cfg(cell))
+            cells[cell] = r
+            rows.append(dict(
+                rate=rate, cell=cell, n_done=r["n_done"],
+                throughput_tok_s=r["throughput_tok_s"],
+                ttft_p50_s=r["ttft_p50_s"],
+                ttft_p99_s=r["ttft_p99_s"],
+                ttft_arrival_p50_s=r["ttft_arrival_p50_s"],
+                ttft_arrival_p99_s=r["ttft_arrival_p99_s"],
+                tbt_p50_s=r["tbt_p50_s"],
+                tbt_p99_s=r["tbt_p99_s"],
+                tbt_max_p50_s=r["tbt_max_p50_s"],
+                tbt_max_p99_s=r["tbt_max_p99_s"],
+                slo_ttft_attainment=r["slo_ttft_attainment"],
+                slo_tbt_attainment=r["slo_tbt_attainment"]))
+        mono, chk, dis = (cells[c] for c in CELLS)
+        env = dict(
+            rate=rate,
+            chunked_gap_ratio=(chk["tbt_max_p99_s"]
+                               / max(mono["tbt_max_p99_s"], 1e-12)),
+            disagg_gap_ratio=(dis["tbt_max_p99_s"]
+                              / max(mono["tbt_max_p99_s"], 1e-12)),
+            chunked_tbt_p99_ratio=(chk["tbt_p99_s"]
+                                   / max(mono["tbt_p99_s"], 1e-12)),
+            disagg_tbt_p99_ratio=(dis["tbt_p99_s"]
+                                  / max(mono["tbt_p99_s"], 1e-12)),
+            ttft_honesty=min(
+                c["ttft_arrival_p99_s"] - c["ttft_p99_s"]
+                for c in cells.values()),
+            disagg_ttft_p99_ratio=(
+                dis["ttft_arrival_p99_s"]
+                / max(mono["ttft_arrival_p99_s"], 1e-12)),
+        )
+        envelopes.append(env)
+        print(f"rate={rate:>5.2f}  p99 worst-gap "
+              f"{mono['tbt_max_p99_s']:.2f}s -> "
+              f"{chk['tbt_max_p99_s']:.2f}s (chunked, "
+              f"{env['chunked_gap_ratio']:.2f}x) -> "
+              f"{dis['tbt_max_p99_s'] * 1e3:.0f}ms (disagg)  "
+              f"p99 arrival-ttft {mono['ttft_arrival_p99_s']:.1f}s / "
+              f"{chk['ttft_arrival_p99_s']:.1f}s / "
+              f"{dis['ttft_arrival_p99_s']:.1f}s  "
+              f"slo_tbt {mono['slo_tbt_attainment']:.2f} / "
+              f"{chk['slo_tbt_attainment']:.2f} / "
+              f"{dis['slo_tbt_attainment']:.2f}")
+        if csv is not None:
+            csv.add(f"serving/rate{rate:g}",
+                    mono["tbt_max_p99_s"] * 1e6,
+                    f"chunked_gap={env['chunked_gap_ratio']:.3f}x;"
+                    f"disagg_gap={env['disagg_gap_ratio']:.3f}x")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"model": PAPER_MODEL, "backend": "cxl",
+                       "prefix_len": PREFIX, "suffix_len": SUFFIX,
+                       "output_len": OUT_LEN, "chunk_tokens": CHUNK,
+                       "burst_p": BURST_P, "burst_size": BURST_SIZE,
+                       "slo_ttft_s": SLO_TTFT_S, "slo_tbt_s": SLO_TBT_S,
+                       "concurrency": CONCURRENCY, "quick": quick,
+                       "rows": rows, "envelopes": envelopes}, f,
+                      indent=2)
+        print(f"wrote {out_json} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_serving.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out_json=args.json)

@@ -128,6 +128,23 @@ class SACConfig:
                                      # instead of freezing the copy
                                      # choice at placement time
 
+    # --- PR 8: continuous batching + disaggregated prefill ---
+    prefill_chunk_tokens: int = 0    # > 0: splice a prompt in over
+                                     # ceil(ctx/chunk) bounded chunks
+                                     # interleaved with decode steps
+                                     # instead of stalling the batch in
+                                     # _fill_slots (0 = monolithic).
+                                     # Scheduling-only: decoded tokens
+                                     # are bit-identical to monolithic
+    disagg_prefill: bool = False     # disaggregated mode: prefill runs
+                                     # on separate lanes (its own loop on
+                                     # the shared wall clock), writes KV
+                                     # to the pool device, and decode
+                                     # adopts the slot via a handoff
+                                     # record once prefill completes
+    prefill_lanes: int = 2           # concurrent prefill lanes of the
+                                     # disaggregated prefill engine
+
 
 # ---------------------------------------------------------------------------
 # Model architecture configuration

@@ -109,14 +109,60 @@ def main():
     ap.add_argument("--reuse-p", type=float, default=0.7,
                     help="prefix-group reuse probability for "
                          "--shared-prefix traces")
+    # --- PR 8: continuous batching + disaggregated prefill ---
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate (req/s); 0 = "
+                         "closed-loop, every request arrives at t=0. "
+                         "Admission into freed slots is gated on the "
+                         "virtual clock vs each request's arrival_s")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill (PR 8): splice each prompt in "
+                         "over ceil(ctx/chunk) bounded chunks "
+                         "interleaved with decode steps instead of "
+                         "stalling the batch on the whole prompt "
+                         "(0 = monolithic; decoded tokens are "
+                         "bit-identical either way)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill (PR 8): prefill runs on "
+                         "separate lanes sharing the virtual clock, "
+                         "writes KV to the pool device over the fabric, "
+                         "and the decode loop adopts the slot via a "
+                         "handoff record")
+    ap.add_argument("--prefill-lanes", type=int, default=None,
+                    help="concurrent prefill lanes of the disaggregated "
+                         "prefill engine (default "
+                         "cfg.sac.prefill_lanes)")
+    ap.add_argument("--diurnal", action="store_true",
+                    help="use the diurnal_trace workload generator "
+                         "(diurnal arrival rates around --arrival-rate, "
+                         "bursts, heavy-tailed contexts, multi-tenant "
+                         "prefix groups; requires --shared-prefix and "
+                         "a finite --arrival-rate)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="diurnal_trace tenant count (prefix reuse "
+                         "never crosses tenants)")
+    ap.add_argument("--burst-p", type=float, default=0.0,
+                    help="diurnal_trace per-arrival burst probability")
+    ap.add_argument("--ctx-tail-alpha", type=float, default=0.0,
+                    help="diurnal_trace Pareto tail index for "
+                         "heavy-tailed context lengths (0 = off)")
+    ap.add_argument("--slo-ttft", type=float, default=0.0,
+                    help="arrival-anchored TTFT SLO target in seconds "
+                         "(reported as slo_ttft_attainment; 0 = off)")
+    ap.add_argument("--slo-tbt", type=float, default=0.0,
+                    help="per-request mean TBT SLO target in seconds "
+                         "(reported as slo_tbt_attainment; 0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import dataclasses
 
+    import numpy as np
+
     from repro.configs import get_config
     from repro.serving.engine import Engine
-    from repro.serving.request import shared_prefix_trace, sharegpt_trace
+    from repro.serving.request import (diurnal_trace, shared_prefix_trace,
+                                       sharegpt_trace)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -161,20 +207,38 @@ def main():
                  radix_admission=args.radix_admission or None,
                  topology=args.topology,
                  warmup_pressure_seed=args.warmup_pressure_seed or None,
-                 replica_reads=args.replica_reads or None)
-    if args.shared_prefix:
+                 replica_reads=args.replica_reads or None,
+                 prefill_chunk_tokens=args.prefill_chunk,
+                 disagg=args.disagg or None,
+                 prefill_lanes=args.prefill_lanes)
+    rate = args.arrival_rate if args.arrival_rate > 0 else float("inf")
+    if args.diurnal:
+        if not args.shared_prefix or not np.isfinite(rate):
+            raise SystemExit("--diurnal needs --shared-prefix and a "
+                             "finite --arrival-rate")
+        if args.shared_prefix >= args.ctx:
+            raise SystemExit("--shared-prefix must be below --ctx")
+        reqs = diurnal_trace(
+            args.requests, prefix_len=args.shared_prefix,
+            suffix_len=args.ctx - args.shared_prefix,
+            output_len=args.out_len, base_rate=args.arrival_rate,
+            reuse_p=args.reuse_p, n_tenants=args.tenants,
+            burst_p=args.burst_p, ctx_tail_alpha=args.ctx_tail_alpha,
+            seed=args.seed, vocab=cfg.vocab)
+    elif args.shared_prefix:
         if args.shared_prefix >= args.ctx:
             raise SystemExit("--shared-prefix must be below --ctx")
         reqs = shared_prefix_trace(
             args.requests, prefix_len=args.shared_prefix,
             suffix_len=args.ctx - args.shared_prefix,
             output_len=args.out_len, reuse_p=args.reuse_p,
-            seed=args.seed, vocab=cfg.vocab)
+            seed=args.seed, arrival_rate=rate, vocab=cfg.vocab)
     else:
         reqs = sharegpt_trace(args.requests, context_len=args.ctx,
                               output_len=args.out_len, seed=args.seed,
-                              ctx_jitter=0.0, vocab=cfg.vocab)
-    out = eng.run(reqs)
+                              ctx_jitter=0.0, arrival_rate=rate,
+                              vocab=cfg.vocab)
+    out = eng.run(reqs, slo_ttft_s=args.slo_ttft, slo_tbt_s=args.slo_tbt)
     out["buffer_hit_rate"] = eng.stats.hit_rate
     print(json.dumps({k: (round(v, 5) if isinstance(v, float) else v)
                       for k, v in out.items()}, indent=1))

@@ -147,6 +147,36 @@ class EngineStats:
         return self.traffic.prefetch_precision
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """A prefill in flight (PR 8: chunked / disaggregated prefill).
+
+    All host-side admission work is already done when the job exists —
+    pool pages booked (``rp``), radix pins held, dedup shared, dispatch
+    stamped — but the jitted prefill + state splice are DEFERRED to
+    completion (``Engine._complete_prefill``).  A mid-flight slot
+    therefore holds no decodable state at all, so the decoded tokens
+    cannot depend on the chunk schedule: chunking and disaggregation
+    change timing and traffic, never tokens (the repo invariant)."""
+
+    req: Request
+    prompt: np.ndarray
+    matched: int                 # page-granular radix-hit tokens
+    pins: List[list]             # radix paths pinned for the lifetime
+    rp: object                   # the SACSystem placement record
+    dedup_n: int                 # pages refcount-shared with the cache
+    copies: tuple                # replica-read copy devices (PR 7)
+    frac: float                  # prefix read fraction for replica reads
+    done_tokens: int = 0         # effective tokens already chunked
+    ready_s: float = -1.0        # disagg: handoff-ready wall-clock time
+
+    @property
+    def effective(self) -> int:
+        """Prompt tokens that actually cost compute + pool write (the
+        radix-matched prefix is copied device-locally)."""
+        return len(self.prompt) - self.matched
+
+
 class Engine:
     """Fixed-slot continuous batching engine.
 
@@ -256,6 +286,9 @@ class Engine:
                  topology=None,
                  warmup_pressure_seed: Optional[bool] = None,
                  replica_reads: Optional[bool] = None,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 disagg: Optional[bool] = None,
+                 prefill_lanes: Optional[int] = None,
                  topk_fn=None, seed: int = 0):
         self.cfg = cfg
         self.slots = slots
@@ -324,6 +357,26 @@ class Engine:
         self.replica_reads_on = bool(
             (cfg.sac.replica_reads if replica_reads is None
              else replica_reads) and has_radix)
+        # PR 8: continuous batching + disaggregated prefill.  Admission
+        # is ALWAYS gated on the virtual clock vs arrival_s (the open-
+        # loop bugfix); chunk_tokens > 0 splices a prompt in over
+        # bounded chunks interleaved with decode steps; disagg runs
+        # prefill on separate lanes (their own busy-until times on the
+        # shared wall clock) and hands completed prefills to the decode
+        # loop through _PrefillJob handoff records.  Chunking is a
+        # colocated-engine concern: disagg lanes never block decode, so
+        # chunk_tokens is ignored there.
+        self.chunk_tokens = int(cfg.sac.prefill_chunk_tokens
+                                if prefill_chunk_tokens is None
+                                else prefill_chunk_tokens)
+        self.disagg_on = bool(cfg.sac.disagg_prefill if disagg is None
+                              else disagg)
+        self.prefill_lanes = max(1, int(cfg.sac.prefill_lanes
+                                        if prefill_lanes is None
+                                        else prefill_lanes))
+        self._jobs: List[Optional[_PrefillJob]] = [None] * slots
+        self._lane_busy: List[float] = [0.0] * self.prefill_lanes
+        self._handoffs: List[_PrefillJob] = []
         # per-slot (replica copy devices, prefix read fraction) of the
         # matched cached prefix — the backing pin held for the slot's
         # lifetime keeps the copy set valid
@@ -496,21 +549,45 @@ class Engine:
                 - self.profile.prefill_s(prompt_len - matched)
                 + self.sac.fabric.bulk_transfer_time(saved_write))
 
-    def _pick_queue_index(self) -> int:
-        """Radix-aware admission: the waiting request with the longest
-        page-granular match against the CURRENT tree goes first (strict
-        ``>`` keeps FCFS as the tie-break), so batches sharing a prefix
-        land together while the copy is hot.  FCFS when the knob is
-        off or the queue is trivial."""
-        if not self.admission_on or len(self.queue) <= 1:
-            return 0
-        best, best_score = 0, -1
-        for i, req in enumerate(self.queue):
+    def _eligible_indices(self) -> List[int]:
+        """Queue indices whose requests have ARRIVED on the virtual
+        clock — the open-loop admission gate (PR 8).  Before it,
+        _fill_slots popped the queue FCFS regardless of ``arrival_s``,
+        so every open-loop trace was silently served as if all requests
+        arrived at t=0 and arrival-anchored TTFT was meaningless."""
+        return [i for i, r in enumerate(self.queue)
+                if r.arrival_s <= self.clock_s + 1e-12]
+
+    def _pick_queue_index(self, eligible: List[int]) -> int:
+        """Radix-aware admission among the ARRIVED requests: the one
+        with the longest page-granular match against the CURRENT tree
+        goes first (strict ``>`` keeps FCFS as the tie-break), so
+        batches sharing a prefix land together while the copy is hot.
+        FCFS when the knob is off or the choice is trivial."""
+        if not self.admission_on or len(eligible) <= 1:
+            return eligible[0]
+        best, best_score = eligible[0], -1
+        for i in eligible:
+            req = self.queue[i]
             m = self.radix.match(
                 req.prompt_tokens[: req.context_len].tolist())
             if m.paged_tokens > best_score:
                 best, best_score = i, m.paged_tokens
         return best
+
+    def _prefill_inflight(self) -> bool:
+        """Any admitted prefill not yet spliced into a decode slot —
+        chunked jobs mid-flight or disagg handoffs awaiting adoption."""
+        return (any(j is not None for j in self._jobs)
+                or bool(self._handoffs))
+
+    def _next_event_s(self) -> Optional[float]:
+        """The earliest future event the idle engine can jump to: the
+        next arrival or the next handoff completion."""
+        cands = [r.arrival_s for r in self.queue]
+        cands += [h.ready_s for h in self._handoffs]
+        future = [c for c in cands if c > self.clock_s]
+        return min(future) if future else None
 
     def _maybe_replicate(self, m, toks: List[int], prompt_len: int):
         """Hot-prefix replication trigger.  Fire when (a) the reuse
@@ -551,168 +628,322 @@ class Engine:
         self.stats.replicated_pages = self.sac.replicated_pages
         return self.radix.match(toks)
 
-    def _fill_slots(self):
+    def _admit_request(self, req: Request) -> Optional[_PrefillJob]:
+        """Host-side admission for one popped request: radix match/pin
+        (+ replication), pool placement, dedup, dispatch stamp.  No
+        compute advances the clock and no fabric write is charged here —
+        each mode (monolithic / chunked / disagg lane) pays those on its
+        own schedule.  Returns None when the pool is exhausted (pins
+        released; the caller requeues at the head)."""
+        prompt = req.prompt_tokens[: req.context_len]
+        toks = prompt.tolist()
+        # radix prefix lookup — PAGE-granular reuse (crediting the
+        # raw token walk would count prefix tokens no cached page
+        # backs).  The BACKING node's path is pinned immediately so
+        # the pool-pressure eviction inside place() cannot free the
+        # pages we are about to reuse.
+        m = self.radix.match(toks) if self.radix is not None else None
+        pins: List[list] = []
+        if m is not None and m.hit:
+            pins.append(list(m.pin_tokens))
+            self.radix.pin(pins[-1])
+            if self.replicate_on:
+                # the pin above keeps the node alive through the
+                # copy; a successful replication re-matches so the
+                # placer sees every copy (same node, same pin path)
+                m2 = self._maybe_replicate(m, toks, len(prompt))
+                if m2 is not None and m2.hit:
+                    m = m2
+        bonus_s = (self._locality_bonus_s(len(prompt), m.paged_tokens)
+                   if pins else 0.0)
+        rp = self.sac.place(req.request_id, len(prompt) + req.output_len,
+                            affinity=sorted(m.copies) if pins else None,
+                            affinity_s=bonus_s)
+        if rp is None:
+            for p in pins:
+                self.radix.release(p)
+            return None
+        req.dispatch_s = self.clock_s
+        req.pool_device = rp.device
+        # reuse is only real on a device holding a copy of the
+        # cached pages (off-device, the prefix would cross two
+        # fabric links — no better than recomputing); radix_affinity
+        # placement + replication are what make this coincide
+        matched = (m.paged_tokens
+                   if pins and rp.device in m.copies else 0)
+        if pins and not matched:
+            self.radix.release(pins.pop())
+        self.stats.radix_hit_tokens += matched
+        if matched:
+            self.stats.radix_hit_requests += 1
+        # page dedup: share the matched copy's pages with this slot
+        # instead of holding private duplicates — the slot's own
+        # leading pages return to the pool and its booking shrinks.
+        # The backing pin (held for the request's lifetime) is what
+        # keeps the shared pages resident.
+        dedup_n = 0
+        if self.dedup_on and matched:
+            shared = m.copies[rp.device][: matched
+                                         // self.cfg.sac.page_size]
+            dedup_n = self.sac.dedup_match(req.request_id, shared)
+            if dedup_n:
+                self.stats.dedup_shared_pages = \
+                    self.sac.dedup_shared_pages
+        # replica-aware reads (PR 7): the devices holding a copy of the
+        # matched prefix and the fraction of this slot's reads in the
+        # prefix region — step() re-picks the least-pressured copy
+        # every step (the backing pin keeps every copy resident)
+        copies, frac = (), 0.0
+        if self.replica_reads_on and matched:
+            copies = tuple(sorted(m.copies))
+            frac = matched / max(len(prompt), 1)
+        return _PrefillJob(req=req, prompt=prompt, matched=matched,
+                           pins=pins, rp=rp, dedup_n=dedup_n,
+                           copies=copies, frac=frac)
+
+    def _complete_prefill(self, s: int, job: _PrefillJob):
+        """Splice a finished prefill into slot ``s`` — the jitted
+        prefill ALWAYS recomputes the full prompt in-graph, so the
+        radix hit, the chunk schedule, and the handoff route change
+        modeled timing and fabric traffic, never decoded tokens."""
+        req, prompt, rp = job.req, job.prompt, job.rp
+        matched = job.matched
+        st, _ = self._prefill_one(self.params, prompt[None, :])
+        st = dict(st)
+        warm_idx = st.pop("warm_idx", None)
+        self._splice_state(s, st, len(prompt))
+        page_tokens = (len(prompt) // self.cfg.sac.page_size) \
+            * self.cfg.sac.page_size
+        keep = 0
+        if self.radix is not None and page_tokens and not job.dedup_n:
+            # (with dedup, the slot's leading pages ARE the cached
+            # node's pages — inserting its own path would register a
+            # second owner for them; the backing pin + existing node
+            # already serve future matches)
+            own = prompt[:page_tokens].tolist()
+            # register the request's ACTUAL pool pages (the pre-PR 5
+            # index advertised fabricated range(n) ids) — an
+            # identical cached prefix keeps the first copy
+            keep = self.radix.insert(
+                own, rp.device,
+                rp.pages[:page_tokens // self.cfg.sac.page_size])
+            # pin the request's own aligned path for its lifetime;
+            # the matched BACKING path stays pinned too (the reused
+            # pages must survive while the request decodes)
+            self.radix.pin(own)
+            job.pins.append(own)
+        self._slot_radix[s] = (job.pins, keep)
+        self._slot_prefix[s] = (job.copies, job.frac)
+        # prefill-time warm-up: seed the recycled (cold) lane from the
+        # radix-reused prefix tail + top-scoring prompt entries
+        if self.planner is not None:
+            plan = self.planner.warmup_plan(
+                None if warm_idx is None else warm_idx[:, 0],
+                matched, len(prompt))
+            if plan is not None and self.arbiter is not None:
+                # warm-up arbitration: the prefill warm burst draws
+                # from the same per-device link budget as decode
+                # speculation — its hide window is the (radix-
+                # shortened) prefill compute this burst rides behind
+                w_cap = self.arbiter.grant_warmup(
+                    self.profile.prefill_s(len(prompt) - matched),
+                    self._last_demand_s, req.pool_device,
+                    int(plan.idx.shape[1]))
+                plan = cap_warmup(plan, w_cap)
+            if plan is not None:
+                hot, n_ins = self._warm(
+                    self.state["hot_buf"], self.state["kv_pool"],
+                    jnp.int32(s), plan.idx, plan.valid)
+                self.state["hot_buf"] = hot
+                n_ins = int(n_ins)
+                if n_ins:
+                    # deliberately UNkeyed: warm seeds cannot have
+                    # been demand-hit yet, so keying them would book
+                    # (n_ins, 0) against the request and tank its
+                    # precision right at its first grants — the
+                    # cold-start starvation the weighting must avoid
+                    self.sac.traffic.record_prefetch(n_ins, 0)
+                    self.sac.prefetch_fetch_time(
+                        n_ins, device=req.pool_device)
+        self.slot_req[s] = req
+        self.slot_tokens[s] = [int(prompt[-1])]
+
+    def _requeue_unplaceable(self, req: Request):
+        """Pool exhausted even after radix eviction.  The pre-PR 5
+        fallback charged device 0 for a booking that never happened
+        (its link then carried a phantom request); instead requeue at
+        the head (FCFS) and retry once a finishing request frees pages
+        — unless nothing is in flight anywhere (no decoding slot, no
+        chunked job, no handoff), in which case capacity will never
+        appear."""
+        self.queue.insert(0, req)
+        if (not any(r is not None for r in self.slot_req)
+                and not self._prefill_inflight()):
+            raise RuntimeError(
+                f"request {req.request_id} "
+                f"({req.context_len + req.output_len} tokens) can "
+                "never be placed: every pool device lacks "
+                "capacity even with the radix cache evicted")
+
+    def _fill_slots(self) -> bool:
+        """Admission + prefill scheduling for this step, gated on the
+        virtual clock vs ``arrival_s`` in every mode.  Returns True
+        when any prefill work progressed (slot filled, chunk advanced,
+        lane started, or handoff adopted) — step() uses that to decide
+        whether an empty batch may jump the clock to the next event."""
+        if self.disagg_on:
+            adopted = self._adopt_handoffs()
+            started = self._start_prefill_lanes()
+            return adopted or started
+        if self.chunk_tokens > 0:
+            created = self._create_chunk_jobs()
+            advanced = self._advance_chunk_jobs()
+            return created or advanced
+        # monolithic colocated: the seed path + the arrival gate
+        progressed = False
         for s in range(self.slots):
-            if self.slot_req[s] is not None or not self.queue:
+            if self.slot_req[s] is not None:
                 continue
-            req = self.queue.pop(self._pick_queue_index())
-            prompt = req.prompt_tokens[: req.context_len]
-            toks = prompt.tolist()
-            # radix prefix lookup — PAGE-granular reuse (crediting the
-            # raw token walk would count prefix tokens no cached page
-            # backs).  The BACKING node's path is pinned immediately so
-            # the pool-pressure eviction inside place() cannot free the
-            # pages we are about to reuse.
-            m = self.radix.match(toks) if self.radix is not None else None
-            pins: List[list] = []
-            if m is not None and m.hit:
-                pins.append(list(m.pin_tokens))
-                self.radix.pin(pins[-1])
-                if self.replicate_on:
-                    # the pin above keeps the node alive through the
-                    # copy; a successful replication re-matches so the
-                    # placer sees every copy (same node, same pin path)
-                    m2 = self._maybe_replicate(m, toks, len(prompt))
-                    if m2 is not None and m2.hit:
-                        m = m2
-            bonus_s = (self._locality_bonus_s(len(prompt), m.paged_tokens)
-                       if pins else 0.0)
-            rp = self.sac.place(req.request_id, len(prompt) + req.output_len,
-                                affinity=sorted(m.copies) if pins else None,
-                                affinity_s=bonus_s)
-            if rp is None:
-                # pool exhausted even after radix eviction.  The pre-PR 5
-                # fallback charged device 0 for a booking that never
-                # happened (its link then carried a phantom request);
-                # instead requeue at the head (FCFS) and retry once a
-                # finishing request frees pages — unless nothing is in
-                # flight, in which case capacity will never appear.
-                for p in pins:
-                    self.radix.release(p)
-                self.queue.insert(0, req)
-                if not any(r is not None for r in self.slot_req):
-                    raise RuntimeError(
-                        f"request {req.request_id} "
-                        f"({len(prompt) + req.output_len} tokens) can "
-                        "never be placed: every pool device lacks "
-                        "capacity even with the radix cache evicted")
+            eligible = self._eligible_indices()
+            if not eligible:
                 break
-            req.dispatch_s = self.clock_s
-            req.pool_device = rp.device
-            # reuse is only real on a device holding a copy of the
-            # cached pages (off-device, the prefix would cross two
-            # fabric links — no better than recomputing); radix_affinity
-            # placement + replication are what make this coincide
-            matched = (m.paged_tokens
-                       if pins and rp.device in m.copies else 0)
-            if pins and not matched:
-                self.radix.release(pins.pop())
-            self.stats.radix_hit_tokens += matched
-            if matched:
-                self.stats.radix_hit_requests += 1
-            # page dedup: share the matched copy's pages with this slot
-            # instead of holding private duplicates — the slot's own
-            # leading pages return to the pool and its booking shrinks.
-            # The backing pin (held for the request's lifetime) is what
-            # keeps the shared pages resident.
-            dedup_n = 0
-            if self.dedup_on and matched:
-                shared = m.copies[rp.device][: matched
-                                             // self.cfg.sac.page_size]
-                dedup_n = self.sac.dedup_match(req.request_id, shared)
-                if dedup_n:
-                    self.stats.dedup_shared_pages = \
-                        self.sac.dedup_shared_pages
+            req = self.queue.pop(self._pick_queue_index(eligible))
+            job = self._admit_request(req)
+            if job is None:
+                self._requeue_unplaceable(req)
+                break
             issued0 = self.stats.traffic.fabric_time_s
-            # prefill this slot (batch of 1), splice into the shared
-            # state — ALWAYS over the full prompt: the radix hit changes
-            # modeled timing and fabric traffic, never decoded tokens
-            st, _ = self._prefill_one(self.params, prompt[None, :])
-            st = dict(st)
-            warm_idx = st.pop("warm_idx", None)
-            self._splice_state(s, st, len(prompt))
             # charge the pool write for the NON-matched tokens only (the
             # matched pages' KV is copied device-locally from the cached
             # prefix, never crossing the fabric), against the request's
             # own pool link — the arbiter's demand signal must see
             # prefill pressure on the device it actually loads
-            self.sac.write_back_time(len(prompt) - matched,
+            self.sac.write_back_time(job.effective,
                                      device=req.pool_device,
                                      key=req.request_id)
-            page_tokens = (len(prompt) // self.cfg.sac.page_size) \
-                * self.cfg.sac.page_size
-            keep = 0
-            if self.radix is not None and page_tokens and not dedup_n:
-                # (with dedup, the slot's leading pages ARE the cached
-                # node's pages — inserting its own path would register a
-                # second owner for them; the backing pin + existing node
-                # already serve future matches)
-                own = toks[:page_tokens]
-                # register the request's ACTUAL pool pages (the pre-PR 5
-                # index advertised fabricated range(n) ids) — an
-                # identical cached prefix keeps the first copy
-                keep = self.radix.insert(
-                    own, rp.device,
-                    rp.pages[:page_tokens // self.cfg.sac.page_size])
-                # pin the request's own aligned path for its lifetime;
-                # the matched BACKING path stays pinned too (the reused
-                # pages must survive while the request decodes)
-                self.radix.pin(own)
-                pins.append(own)
-            self._slot_radix[s] = (pins, keep)
-            # replica-aware reads (PR 7): remember which devices hold a
-            # copy of the matched prefix and what fraction of this
-            # slot's reads live in the prefix region — step() re-picks
-            # the least-pressured copy every step.  The backing pin
-            # (held until departure) keeps every copy's pages resident.
-            if self.replica_reads_on and matched:
-                self._slot_prefix[s] = (tuple(sorted(m.copies)),
-                                        matched / max(len(prompt), 1))
-            else:
-                self._slot_prefix[s] = ((), 0.0)
-            # prefill-time warm-up: seed the recycled (cold) lane from the
-            # radix-reused prefix tail + top-scoring prompt entries
-            if self.planner is not None:
-                plan = self.planner.warmup_plan(
-                    None if warm_idx is None else warm_idx[:, 0],
-                    matched, len(prompt))
-                if plan is not None and self.arbiter is not None:
-                    # warm-up arbitration: the prefill warm burst draws
-                    # from the same per-device link budget as decode
-                    # speculation — its hide window is the (radix-
-                    # shortened) prefill compute this burst rides behind
-                    w_cap = self.arbiter.grant_warmup(
-                        self.profile.prefill_s(len(prompt) - matched),
-                        self._last_demand_s, req.pool_device,
-                        int(plan.idx.shape[1]))
-                    plan = cap_warmup(plan, w_cap)
-                if plan is not None:
-                    hot, n_ins = self._warm(
-                        self.state["hot_buf"], self.state["kv_pool"],
-                        jnp.int32(s), plan.idx, plan.valid)
-                    self.state["hot_buf"] = hot
-                    n_ins = int(n_ins)
-                    if n_ins:
-                        # deliberately UNkeyed: warm seeds cannot have
-                        # been demand-hit yet, so keying them would book
-                        # (n_ins, 0) against the request and tank its
-                        # precision right at its first grants — the
-                        # cold-start starvation the weighting must avoid
-                        self.sac.traffic.record_prefetch(n_ins, 0)
-                        self.sac.prefetch_fetch_time(
-                            n_ins, device=req.pool_device)
+            self._complete_prefill(s, job)
             # virtual clock: prefill compute — a genuine radix hit skips
             # the matched prefix's recompute, so the modeled prefill (and
             # with it TTFT) shortens; fill-time fabric traffic (pool
             # write + warm-up) hides behind it when overlap is on
-            t_prefill = self.profile.prefill_s(len(prompt) - matched)
+            t_prefill = self.profile.prefill_s(job.effective)
             if self.overlap_on:
                 exposed = self.sac.traffic.drain_overlap(t_prefill)
             else:
                 exposed = self.stats.traffic.fabric_time_s - issued0
             self.clock_s += t_prefill + exposed
-            self.slot_req[s] = req
-            self.slot_tokens[s] = [int(prompt[-1])]
+            progressed = True
+        return progressed
+
+    def _create_chunk_jobs(self) -> bool:
+        """Chunked colocated admission: bind an arrived request to each
+        free slot as an in-flight job — no compute, no fabric charge
+        yet (the chunks pay as they run in _advance_chunk_jobs)."""
+        progressed = False
+        for s in range(self.slots):
+            if self.slot_req[s] is not None or self._jobs[s] is not None:
+                continue
+            eligible = self._eligible_indices()
+            if not eligible:
+                break
+            req = self.queue.pop(self._pick_queue_index(eligible))
+            job = self._admit_request(req)
+            if job is None:
+                self._requeue_unplaceable(req)
+                break
+            self._jobs[s] = job
+            progressed = True
+        return progressed
+
+    def _advance_chunk_jobs(self) -> bool:
+        """Advance every in-flight chunked prefill by ONE bounded chunk:
+        the chunk's compute plus its pool-write tail advance the clock,
+        so a decode step is delayed by one chunk, never a whole prompt.
+        A job whose last chunk lands splices and decodes this same step
+        — with chunk >= prompt this reduces exactly to the monolithic
+        path (same charges, same clock advances, same order), and the
+        deferred splice keeps decoded tokens independent of the chunk
+        schedule."""
+        progressed = False
+        for s in range(self.slots):
+            job = self._jobs[s]
+            if job is None:
+                continue
+            take = min(self.chunk_tokens, job.effective - job.done_tokens)
+            issued0 = self.stats.traffic.fabric_time_s
+            if take > 0:
+                self.sac.write_back_time(take, device=job.req.pool_device,
+                                         key=job.req.request_id)
+                job.done_tokens += take
+            if job.done_tokens >= job.effective:
+                self._jobs[s] = None
+                self._complete_prefill(s, job)
+            t_chunk = self.profile.prefill_s(take)
+            if self.overlap_on:
+                exposed = self.sac.traffic.drain_overlap(t_chunk)
+            else:
+                exposed = self.stats.traffic.fabric_time_s - issued0
+            self.clock_s += t_chunk + exposed
+            progressed = True
+        return progressed
+
+    def _start_prefill_lanes(self) -> bool:
+        """The disaggregated prefill engine's loop: assign arrived
+        requests to free lanes on the shared wall clock.  The lane pays
+        the (radix-shortened) prefill compute and the full pool write
+        on the fabric route NOW — prefill writes KV to the pool device
+        exactly as the colocated path charges it — and the handoff
+        record becomes adoptable by the decode loop at ``ready_s``."""
+        progressed = False
+        for lane in range(self.prefill_lanes):
+            if self._lane_busy[lane] > self.clock_s + 1e-12:
+                continue
+            eligible = self._eligible_indices()
+            if not eligible:
+                break
+            req = self.queue.pop(self._pick_queue_index(eligible))
+            job = self._admit_request(req)
+            if job is None:
+                self._requeue_unplaceable(req)
+                break
+            issued0 = self.stats.traffic.fabric_time_s
+            self.sac.write_back_time(job.effective,
+                                     device=req.pool_device,
+                                     key=req.request_id)
+            t_prefill = self.profile.prefill_s(job.effective)
+            if self.overlap_on:
+                exposed = self.sac.traffic.drain_overlap(t_prefill)
+            else:
+                exposed = self.stats.traffic.fabric_time_s - issued0
+            job.ready_s = self.clock_s + t_prefill + exposed
+            self._lane_busy[lane] = job.ready_s
+            self._handoffs.append(job)
+            progressed = True
+        return progressed
+
+    def _adopt_handoffs(self) -> bool:
+        """Decode-side adoption (disagg): splice the earliest-ready
+        handoff into each free slot.  The prefill compute was already
+        paid on its lane (``ready_s``); adoption pays only the warm-up
+        burst's fabric tail (hidden behind the next decode step when
+        overlap is on), so decode TBT never stalls on a prompt."""
+        progressed = False
+        for s in range(self.slots):
+            if self.slot_req[s] is not None:
+                continue
+            ready = [h for h in self._handoffs
+                     if h.ready_s <= self.clock_s + 1e-12]
+            if not ready:
+                break
+            job = min(ready, key=lambda h: (h.ready_s, h.req.request_id))
+            self._handoffs.remove(job)
+            issued0 = self.stats.traffic.fabric_time_s
+            self._complete_prefill(s, job)
+            if not self.overlap_on:
+                self.clock_s += (self.stats.traffic.fabric_time_s
+                                 - issued0)
+            progressed = True
+        return progressed
 
     def _splice_state(self, slot: int, st_one: Dict, length: int):
         """Copy a 1-batch prefill state into slot ``slot`` of the engine
@@ -768,9 +999,23 @@ class Engine:
         ``now`` defaults to the engine's virtual clock (advanced by the
         modeled compute + exposed fabric of this step); passing an
         explicit value only overrides the request timestamps."""
-        self._fill_slots()
+        clock0 = self.clock_s       # a slot decoding through this step
+                                    # sees the WHOLE step() wall time —
+                                    # chunk stalls included — as its gap
+        progressed = self._fill_slots()
         if not any(r is not None for r in self.slot_req):
-            return []
+            # no decodable slot.  If admission made no progress either,
+            # the engine is idle before the next event (a future arrival
+            # or a disagg handoff completing) — jump the virtual clock
+            # to it and retry admission, so open-loop gaps cost wall
+            # time but never spin the step counter.
+            if not progressed:
+                nxt = self._next_event_s()
+                if nxt is not None and nxt > self.clock_s:
+                    self.clock_s = nxt
+                    self._fill_slots()
+            if not any(r is not None for r in self.slot_req):
+                return []
         tokens = jnp.array(
             [(toks[-1] if toks else 0) for toks in self.slot_tokens],
             jnp.int32)
@@ -968,9 +1213,15 @@ class Engine:
             req.generated += 1
             if req.first_token_s < 0:
                 req.first_token_s = now
+            else:
+                req.tbt_max_s = max(req.tbt_max_s,
+                                    self.clock_s - clock0)
             self.stats.tokens += 1
             if req.generated >= req.output_len:
                 req.finish_s = now
+                # decoded stream only — slot_tokens[0] is the seeded
+                # last prompt token, not a generated one
+                req.out_tokens = self.slot_tokens[s][1:]
                 finished.append(req)
                 dev = self.sac.device_of(req.request_id)
                 # radix lifecycle at departure: unpin the request's
@@ -1011,7 +1262,8 @@ class Engine:
         self.stats.radix_evicted_pages = self.sac.radix_evicted_pages
         return finished
 
-    def run(self, requests: List[Request], *, max_steps: int = 10_000
+    def run(self, requests: List[Request], *, max_steps: int = 10_000,
+            slo_ttft_s: float = 0.0, slo_tbt_s: float = 0.0
             ) -> Dict[str, float]:
         for r in requests:
             self.submit(r)
@@ -1019,9 +1271,11 @@ class Engine:
         while done < len(requests) and self.stats.steps < max_steps:
             finished = self.step()
             done += len(finished)
-            if not finished and not any(self.slot_req) and not self.queue:
+            if (not finished and not any(self.slot_req)
+                    and not self.queue and not self._prefill_inflight()):
                 break
-        out = summarize(requests)
+        out = summarize(requests, slo_ttft_s=slo_ttft_s,
+                        slo_tbt_s=slo_tbt_s)
         out.update(engine_steps=self.stats.steps,
                    engine_tokens=self.stats.tokens,
                    radix_hit_tokens=self.stats.radix_hit_tokens,

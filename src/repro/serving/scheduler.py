@@ -142,6 +142,12 @@ class Scheduler:
             self.queue = deque(r for _, r in ordered)
         while self.queue and len(self.active) < self.cfg.concurrency:
             req = self.queue[0]
+            if req.arrival_s > now_s + 1e-12:
+                # defensive arrival gate (PR 8): simulate() only submits
+                # arrived requests, but a caller driving try_admit
+                # directly must never see a dispatch before arrival —
+                # the open-loop bug the engine's _fill_slots had
+                break
             need = self._kv_bytes(req)
             if self.local_bytes + need > self.cfg.local_dram_bytes:
                 break                      # RDMA local-memory wall (P2)

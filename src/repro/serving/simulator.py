@@ -289,6 +289,22 @@ class SimConfig:
     round1: bool = False               # cold cache: prefill + write first
     prefill_concurrency: int = 8
     max_sim_s: float = 1e5
+    # --- PR 8: continuous batching + disaggregated prefill ---
+    colocated_prefill: bool = False    # charge prefill compute + pool
+                                       # write INSIDE the decode loop (the
+                                       # engine's monolithic/chunked
+                                       # colocated path) instead of
+                                       # admitting straight to decode;
+                                       # round1=True stays the
+                                       # disaggregated twin (separate
+                                       # prefill lanes + handoff)
+    prefill_chunk_tokens: int = 0      # > 0 with colocated_prefill: each
+                                       # pending prompt advances one
+                                       # bounded chunk per decode step
+                                       # (0 = monolithic, the whole
+                                       # prompt in one stall)
+    slo_ttft_s: float = 0.0            # SLO targets forwarded to
+    slo_tbt_s: float = 0.0             # summarize() attainment fractions
     # --- PR 7: CXL fabric topology (core/fabric.py) ---
     topology: Optional[str] = None     # fabric spec ("tree:NxS", "multi_
                                        # switch:NxS", "mesh:NxP", ...);
@@ -638,6 +654,13 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     * model.n_attn_layers if sim.warmup_entries else 0)
     cold_hits_seen: List[float] = []
 
+    # colocated chunked prefill (PR 8): rid -> [request, tokens left].
+    # Each decode-loop iteration advances every pending prompt by one
+    # bounded chunk; the chunk's compute + pool-write tail joins the
+    # step's duration — the analytic twin of the engine's
+    # _advance_chunk_jobs (monolithic = one whole-prompt chunk).
+    pending_chunk: Dict[int, list] = {}
+
     def admit_ready(now: float):
         for r in sched.try_admit(now):
             if sim.round1:
@@ -646,10 +669,15 @@ def simulate(reqs: List[Request], model: ModelProfile,
                 prefetch.enqueue(
                     r.request_id, r.context_len * model.kv_bytes_per_token())
                 waiting_prefetch[r.request_id] = r
+            elif sim.colocated_prefill:
+                pending_chunk[r.request_id] = [
+                    r, r.context_len - matched.get(r.request_id, 0)]
             else:
                 decoding[r.request_id] = r
 
     while n_done < len(reqs) and t < sim.max_sim_s:
+        t_iter0 = t         # a decoding request's token gap spans the
+                            # whole iteration (chunk stalls included)
         # arrivals
         while arrivals and arrivals[0].arrival_s <= t:
             sched.submit(arrivals.popleft())
@@ -699,7 +727,36 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     decoding[r.request_id] = r
                     prefill_done.remove((ready, r))
 
+        # colocated prefill (PR 8): advance every pending prompt ONE
+        # chunk; its compute + pool-write tail advances the wall clock
+        # before (and instead of stalling inside) the decode step —
+        # completed prompts join the batch this same iteration, exactly
+        # like the engine splicing at the top of step()
+        if pending_chunk:
+            chunk = int(sim.prefill_chunk_tokens)
+            t_chunks = 0.0
+            for rid in list(pending_chunk):
+                r, left = pending_chunk[rid]
+                take = left if chunk <= 0 else min(chunk, left)
+                t_chunks += model.prefill_s(take)
+                if take > 0:
+                    wb = take * model.kv_bytes_per_token()
+                    acct.stats.bytes_written += wb
+                    xfer = topo.transfer_seconds(r.pool_device,
+                                                 wb / write_bw)
+                    acct.charge_seconds(xfer)
+                    t_chunks += xfer
+                pending_chunk[rid][1] = left - take
+                if pending_chunk[rid][1] <= 0:
+                    del pending_chunk[rid]
+                    decoding[rid] = r
+            t += t_chunks
+
         if not decoding:
+            if pending_chunk:
+                # chunked prefills advanced (time moved) but none
+                # finished — loop again rather than event-jumping
+                continue
             # jump to the next event
             cands = []
             if arrivals:
@@ -906,6 +963,8 @@ def simulate(reqs: List[Request], model: ModelProfile,
             r.generated += 1
             if r.first_token_s < 0:
                 r.first_token_s = t + backend.admit_overhead_s
+            else:
+                r.tbt_max_s = max(r.tbt_max_s, t - t_iter0)
             if r.generated >= r.output_len:
                 r.finish_s = t
                 finished.append(r)
@@ -919,7 +978,8 @@ def simulate(reqs: List[Request], model: ModelProfile,
             acct.stats.drop_request(r.request_id)
             n_done += 1
 
-    out = summarize(reqs)
+    out = summarize(reqs, slo_ttft_s=sim.slo_ttft_s,
+                    slo_tbt_s=sim.slo_tbt_s)
     out.update(fabric_time_s=acct.stats.fabric_time_s,
                issued_fabric_s=acct.stats.issued_fabric_s,
                exposed_fabric_s=acct.stats.exposed_fabric_s,
@@ -955,3 +1015,161 @@ def run_backend_sweep(reqs: List[Request], model: ModelProfile,
                       ) -> Dict[str, Dict[str, float]]:
     return {name: simulate(reqs, model, b, sim)
             for name, b in backends.items()}
+
+
+def replay_engine_timeline(eng, reqs: List[Request],
+                           *, max_steps: int = 100_000) -> List[Request]:
+    """Analytic replay of the engine's continuous-batching loop (PR 8).
+
+    Reproduces :meth:`Engine.step`'s virtual-clock sequencing — arrival-
+    gated admission into freed slots, chunked / monolithic / disagg-lane
+    prefill, cold-read decode charging, idle jumps to the next event —
+    using the engine's OWN cost objects (``eng.profile``,
+    ``eng.sac.fabric``, ``eng.sac.entry_bytes``), so per-request
+    ``dispatch_s`` / ``first_token_s`` / ``finish_s`` must agree with a
+    real engine run to float precision.
+
+    Valid for the parity regime the rolling-admission tests pin down:
+    cold reads (``device_buffer == 0``), radix/prefetch/warm-up off,
+    overlap off, flat star topology (timing independent of placement).
+    Returns fresh request copies carrying the replayed timestamps."""
+    cfg = eng.cfg
+    fabric = eng.sac.fabric
+    entry_b = eng.sac.entry_bytes
+    wb_layers = max(cfg.n_attn_layers, 1)
+    n_kv = max(getattr(eng.model, "n_kv", 1), 1)
+    k = min(cfg.sac.topk, eng.max_ctx)
+    eps = 1e-12
+
+    reqs = sorted((dataclasses.replace(
+        r, dispatch_s=-1.0, first_token_s=-1.0, finish_s=-1.0,
+        generated=0, tbt_max_s=0.0, out_tokens=None)
+        for r in reqs), key=lambda r: r.request_id)
+    queue: List[Request] = list(reqs)      # engine submit order (FCFS)
+    slots: List[Optional[Request]] = [None] * eng.slots
+    # chunked mode: slot -> [request, effective tokens left]
+    jobs: List[Optional[list]] = [None] * eng.slots
+    # disagg mode: prefill lanes + handoff records [ready_s, request]
+    lane_busy = [0.0] * eng.prefill_lanes
+    handoffs: List[list] = []
+    clock = 0.0
+
+    def write_s(n_tokens: int) -> float:
+        return fabric.bulk_transfer_time(n_tokens * entry_b * wb_layers)
+
+    def prefill_one(r: Request) -> float:
+        """Prefill compute + exposed pool write for a whole prompt."""
+        return (eng.profile.prefill_s(r.context_len)
+                + write_s(r.context_len))
+
+    def eligible() -> Optional[Request]:
+        for r in queue:
+            if r.arrival_s <= clock + eps:
+                return r
+        return None
+
+    def fill() -> bool:
+        nonlocal clock
+        progressed = False
+        if eng.disagg_on:
+            for s in range(eng.slots):           # adopt ready handoffs
+                if slots[s] is not None:
+                    continue
+                ready = [h for h in handoffs if h[0] <= clock + eps]
+                if not ready:
+                    break
+                h = min(ready, key=lambda h: (h[0], h[1].request_id))
+                handoffs.remove(h)
+                slots[s] = h[1]                  # no warm-up traffic in
+                progressed = True                # the parity regime
+            for lane in range(eng.prefill_lanes):
+                if lane_busy[lane] > clock + eps:
+                    continue
+                r = eligible()
+                if r is None:
+                    break
+                queue.remove(r)
+                r.dispatch_s = clock
+                ready_s = clock + prefill_one(r)
+                lane_busy[lane] = ready_s
+                handoffs.append([ready_s, r])
+                progressed = True
+            return progressed
+        if eng.chunk_tokens > 0:
+            for s in range(eng.slots):           # bind arrivals to jobs
+                if slots[s] is not None or jobs[s] is not None:
+                    continue
+                r = eligible()
+                if r is None:
+                    break
+                queue.remove(r)
+                r.dispatch_s = clock
+                jobs[s] = [r, r.context_len]
+                progressed = True
+            for s in range(eng.slots):           # advance one chunk each
+                if jobs[s] is None:
+                    continue
+                r, left = jobs[s]
+                take = min(eng.chunk_tokens, left)
+                jobs[s][1] = left - take
+                if jobs[s][1] <= 0:
+                    jobs[s] = None
+                    slots[s] = r
+                clock += eng.profile.prefill_s(take) + \
+                    (write_s(take) if take > 0 else 0.0)
+                progressed = True
+            return progressed
+        for s in range(eng.slots):               # monolithic colocated
+            if slots[s] is not None:
+                continue
+            r = eligible()
+            if r is None:
+                break
+            queue.remove(r)
+            r.dispatch_s = clock
+            clock += prefill_one(r)
+            slots[s] = r
+            progressed = True
+        return progressed
+
+    def inflight() -> bool:
+        return any(j is not None for j in jobs) or bool(handoffs)
+
+    steps = 0
+    while queue or any(s is not None for s in slots) or inflight():
+        steps += 1
+        assert steps < max_steps, "replay failed to drain"
+        progressed = fill()
+        occupied = [s for s in range(eng.slots) if slots[s] is not None]
+        if not occupied:
+            if not progressed:
+                cands = [r.arrival_s for r in queue] \
+                    + [h[0] for h in handoffs]
+                future = [c for c in cands if c > clock]
+                if not future:
+                    break
+                clock = min(future)
+                fill()
+                occupied = [s for s in range(eng.slots)
+                            if slots[s] is not None]
+            if not occupied:
+                continue
+        # one decode step: modeled compute + cold-read fetch per slot
+        # (overlap off: every issued second is exposed)
+        t_comp = eng.step_compute_s(len(occupied))
+        fetch = 0.0
+        for s in occupied:
+            r = slots[s]
+            prev_len = r.context_len + r.generated
+            n = min(k * n_kv, prev_len * n_kv or 1)
+            fetch += fabric.sparse_fetch_time(n, entry_b)
+        clock += t_comp + fetch
+        for s in occupied:
+            r = slots[s]
+            r.generated += 1
+            if r.first_token_s < 0:
+                r.first_token_s = clock
+            if r.generated >= r.output_len:
+                r.finish_s = clock
+                slots[s] = None
+    return reqs

@@ -243,7 +243,7 @@ def run_to_completion(eng: Engine, reqs, *, max_steps: int = 300,
     for r in reqs:
         eng.submit(r)
     steps = 0
-    while any(eng.slot_req) or eng.queue:
+    while any(eng.slot_req) or eng.queue or eng._prefill_inflight():
         eng.step()
         steps += 1
         if on_step is not None:

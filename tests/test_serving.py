@@ -1,0 +1,276 @@
+"""Open-loop serving (PR 8): arrival-gated admission, chunked prefill,
+disaggregated prefill, and the honest metrics they are judged on.
+
+The correctness properties this suite guards:
+
+  - **arrival gating**: no request is ever dispatched before its
+    ``arrival_s`` — neither by the engine's ``_fill_slots`` (the
+    pre-PR 8 open-loop bug: the queue was drained into freed slots
+    regardless of arrival time, so "open-loop" traces were silently
+    closed-loop and every TTFT was flattered) nor by a caller driving
+    ``Scheduler.try_admit`` directly;
+  - **bit identity**: chunked prefill and prefill/decode disaggregation
+    change timing and traffic, never decoded tokens — the same trace
+    produces identical ``out_tokens`` per request across chunk sizes
+    {full, ctx/2, ctx/8} x disagg {off, on};
+  - **engine <-> analytic-twin parity**: on a rolling-admission trace
+    the real engine's per-request dispatch/first-token/finish timeline
+    matches ``replay_engine_timeline`` to float precision in all three
+    modes (monolithic / chunked / disagg);
+  - **metric honesty**: ``summarize`` always returns the full
+    ``SUMMARY_KEYS`` set (zeros on empty), arrival-anchored TTFT is
+    never below dispatch-anchored, and the chunked-prefill win shows up
+    where it actually lives — the worst single inter-token gap;
+  - **workload generator**: ``diurnal_trace`` is deterministic per
+    seed, arrivals are nondecreasing with genuine burst clumps, the
+    heavy context tail respects its cap, and prefix reuse never
+    crosses a tenant boundary.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import Engine
+from repro.serving.request import (SUMMARY_KEYS, Request, diurnal_trace,
+                                   sharegpt_trace, summarize)
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.simulator import (SimConfig, default_backends,
+                                     profile_from_config,
+                                     replay_engine_timeline, simulate)
+
+
+def _reduced():
+    return get_config("qwen2-1.5b").reduced()
+
+
+def _parity_cfg():
+    """Pin the analytic-replay regime: warm-up and prefetch traffic off
+    (radix stays on — random prompts never match, so it is inert)."""
+    cfg = _reduced()
+    return dataclasses.replace(cfg, sac=dataclasses.replace(
+        cfg.sac, warmup_entries=0, warmup_radix=0, prefetch_width=0))
+
+
+# ---------------------------------------------------------------------------
+# arrival gating (the bugfix)
+# ---------------------------------------------------------------------------
+
+def test_engine_never_dispatches_before_arrival():
+    """Regression for the open-loop bug: a late-arriving request must
+    not be dispatched into a freed slot before its arrival time, even
+    when the engine is otherwise idle."""
+    cfg = _reduced()
+    reqs = sharegpt_trace(3, context_len=48, output_len=6, seed=1,
+                          ctx_jitter=0.0, vocab=cfg.vocab)
+    late = 1e6                       # long after the others finish
+    reqs[2].arrival_s = late
+    eng = Engine(cfg, slots=2, max_ctx=96)
+    out = eng.run(reqs)
+    assert out["n_done"] == 3
+    for r in reqs:
+        assert r.dispatch_s >= r.arrival_s - 1e-9, r
+    # the engine idled (clock jump), it did not cheat
+    assert reqs[2].dispatch_s >= late - 1e-9
+    assert reqs[2].finish_s > late
+
+
+@pytest.mark.parametrize("chunk,disagg", [(16, False), (0, True)])
+def test_arrival_gate_holds_in_chunked_and_disagg_modes(chunk, disagg):
+    cfg = _reduced()
+    reqs = sharegpt_trace(4, context_len=48, output_len=5, seed=2,
+                          arrival_rate=3.0, ctx_jitter=0.0,
+                          vocab=cfg.vocab)
+    eng = Engine(cfg, slots=2, max_ctx=96,
+                 prefill_chunk_tokens=chunk, disagg=disagg)
+    out = eng.run(reqs)
+    assert out["n_done"] == 4
+    for r in reqs:
+        assert r.dispatch_s >= r.arrival_s - 1e-9, r
+
+
+def test_scheduler_try_admit_gates_on_arrival():
+    """A caller driving the scheduler directly must never see a
+    dispatch before arrival (defensive twin of the engine gate)."""
+    sched = Scheduler(SchedulerConfig(concurrency=4,
+                                      bytes_per_token=1024.0))
+    early = Request(0, 0.0, 64, 8)
+    late = Request(1, 100.0, 64, 8)
+    sched.submit(early)
+    sched.submit(late)
+    admitted = sched.try_admit(now_s=1.0)
+    assert [r.request_id for r in admitted] == [0]
+    assert not sched.try_admit(now_s=99.0)       # still in the future
+    assert [r.request_id for r in sched.try_admit(now_s=100.0)] == [1]
+
+
+# ---------------------------------------------------------------------------
+# summarize / trace-generator satellites
+# ---------------------------------------------------------------------------
+
+def test_summarize_empty_returns_full_key_set():
+    out = summarize([])
+    assert set(out) == set(SUMMARY_KEYS)
+    assert all(v == 0.0 for v in out.values())
+    # unfinished-only input takes the same path
+    out = summarize([Request(0, 0.0, 64, 8)])
+    assert set(out) == set(SUMMARY_KEYS)
+    assert out["n_done"] == 0.0
+
+
+def test_sharegpt_trace_clamps_ctx_before_prompt():
+    """The pre-PR 8 bug clamped ctx AFTER generating the prompt, so a
+    tiny jittered context produced len(prompt) != context_len."""
+    reqs = sharegpt_trace(16, context_len=16, output_len=4, seed=0,
+                          ctx_jitter=0.9, vocab=100)
+    for r in reqs:
+        assert r.context_len >= 16
+        assert len(r.prompt_tokens) == r.context_len
+
+
+def test_diurnal_trace_deterministic_and_shaped():
+    kw = dict(prefix_len=32, suffix_len=32, output_len=4, base_rate=5.0,
+              seed=11, n_tenants=3, burst_p=0.25, burst_size=4,
+              ctx_tail_alpha=2.0, max_ctx_mult=4.0, vocab=50)
+    a = diurnal_trace(64, **kw)
+    b = diurnal_trace(64, **kw)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    assert [r.context_len for r in a] == [r.context_len for r in b]
+    assert [r.prefix_group for r in a] == [r.prefix_group for r in b]
+    ts = [r.arrival_s for r in a]
+    assert all(t1 <= t2 for t1, t2 in zip(ts, ts[1:]))      # nondecreasing
+    # burst clumps land ~1e-4 s apart — far below the ~0.13 s mean gap
+    gaps = np.diff(ts)
+    assert (gaps < 1e-3).sum() >= 3, "no burst clumps generated"
+    # heavy tail: suffix multiplier capped at max_ctx_mult
+    assert all(64 <= r.context_len <= 32 + 32 * 4 for r in a)
+    assert any(r.context_len > 64 for r in a)               # tail exists
+
+
+def test_diurnal_trace_tenants_never_share_prefixes():
+    reqs = diurnal_trace(48, prefix_len=24, suffix_len=8, output_len=2,
+                         base_rate=10.0, seed=3, n_tenants=4,
+                         reuse_p=0.8, vocab=64)
+    by_group = {}
+    for r in reqs:
+        p = tuple(int(x) for x in r.prompt_tokens[:24])
+        by_group.setdefault(r.prefix_group, set()).add(p)
+    # same group -> byte-identical prefix; distinct groups -> distinct
+    assert all(len(s) == 1 for s in by_group.values())
+    prefixes = [next(iter(s)) for s in by_group.values()]
+    assert len(set(prefixes)) == len(prefixes)
+    assert len(by_group) > 1                 # reuse did not collapse all
+
+
+# ---------------------------------------------------------------------------
+# bit identity: chunking / disaggregation never change tokens
+# ---------------------------------------------------------------------------
+
+def _decode_tokens(cfg, chunk, disagg):
+    reqs = sharegpt_trace(6, context_len=48, output_len=8, seed=5,
+                          arrival_rate=50.0, ctx_jitter=0.2,
+                          vocab=cfg.vocab)
+    eng = Engine(cfg, slots=2, max_ctx=128, seed=0,
+                 prefill_chunk_tokens=chunk, disagg=disagg)
+    out = eng.run(reqs)
+    assert out["n_done"] == 6
+    for r in reqs:
+        assert r.dispatch_s >= r.arrival_s - 1e-9
+        assert len(r.out_tokens) == r.output_len
+    return {r.request_id: [int(t) for t in r.out_tokens] for r in reqs}
+
+
+def test_chunked_disagg_bit_identity():
+    """Same trace through chunk {full, ctx/2, ctx/8} x disagg {off, on}:
+    identical decoded streams per request — the PR 8 invariant that
+    prefill scheduling is a pure timing/traffic concern."""
+    cfg = _reduced()
+    ref = _decode_tokens(cfg, 0, False)      # monolithic colocated
+    for chunk, disagg in [(24, False), (6, False), (0, True), (24, True)]:
+        assert _decode_tokens(cfg, chunk, disagg) == ref, (chunk, disagg)
+
+
+# ---------------------------------------------------------------------------
+# engine <-> analytic twin parity on a rolling-admission trace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk,disagg", [(0, False), (16, False),
+                                          (0, True)])
+def test_rolling_admission_engine_replay_parity(chunk, disagg):
+    cfg = _parity_cfg()
+    reqs = sharegpt_trace(8, context_len=64, output_len=10, seed=7,
+                          arrival_rate=2000.0, ctx_jitter=0.2,
+                          vocab=cfg.vocab)
+    eng = Engine(cfg, slots=2, max_ctx=160, device_buffer=0, seed=0,
+                 overlap=False, prefill_chunk_tokens=chunk, disagg=disagg)
+    out = eng.run(reqs)
+    assert out["n_done"] == 8
+    rep = replay_engine_timeline(eng, reqs)
+    for r, q in zip(sorted(reqs, key=lambda r: r.request_id), rep):
+        assert r.request_id == q.request_id
+        assert abs(r.dispatch_s - q.dispatch_s) < 1e-9, r.request_id
+        assert abs(r.first_token_s - q.first_token_s) < 1e-9, r.request_id
+        assert abs(r.finish_s - q.finish_s) < 1e-9, r.request_id
+
+
+# ---------------------------------------------------------------------------
+# open-loop metrics: the chunked/disagg win, measured honestly
+# ---------------------------------------------------------------------------
+
+_SIM_MODEL = profile_from_config(get_config("deepseek-v32"))
+_CXL = default_backends()["cxl"]
+
+
+def _sim_cell(reqs, *, round1=False, colocated=False, chunk=0):
+    cfg = SimConfig(concurrency=16, device_buffer=2048, round1=round1,
+                    colocated_prefill=colocated,
+                    prefill_chunk_tokens=chunk)
+    return simulate([dataclasses.replace(r) for r in reqs],
+                    _SIM_MODEL, _CXL, cfg)
+
+
+def _burst_trace(n=64):
+    return diurnal_trace(n, prefix_len=4096, suffix_len=4096,
+                         output_len=64, base_rate=0.5, seed=2,
+                         n_tenants=2, burst_p=0.15, burst_size=6,
+                         ctx_tail_alpha=2.5, max_ctx_mult=3.0)
+
+
+def test_chunked_prefill_bounds_worst_gap_open_loop():
+    """On a burst trace, monolithic colocated prefill stalls decoding
+    requests for whole prompts; chunking bounds the worst single
+    inter-token gap, and disaggregation removes it entirely."""
+    reqs = _burst_trace()
+    mono = _sim_cell(reqs, colocated=True)
+    chk = _sim_cell(reqs, colocated=True, chunk=1024)
+    dis = _sim_cell(reqs, round1=True)
+    assert mono["n_done"] == chk["n_done"] == dis["n_done"] == len(reqs)
+    assert chk["tbt_max_p99_s"] < 0.6 * mono["tbt_max_p99_s"]
+    assert dis["tbt_max_p99_s"] < chk["tbt_max_p99_s"]
+
+
+def test_arrival_anchored_ttft_is_honest():
+    """Arrival-anchored TTFT includes queueing delay, so its p99 can
+    never be below the dispatch-anchored p99 — a violation means a
+    request was dispatched before it arrived."""
+    reqs = _burst_trace()
+    for cell in (_sim_cell(reqs, colocated=True),
+                 _sim_cell(reqs, colocated=True, chunk=1024),
+                 _sim_cell(reqs, round1=True)):
+        assert cell["ttft_arrival_p99_s"] >= cell["ttft_p99_s"] - 1e-9
+        assert cell["ttft_arrival_mean_s"] >= cell["ttft_mean_s"] - 1e-9
+
+
+def test_engine_records_worst_token_gap():
+    cfg = _reduced()
+    reqs = sharegpt_trace(4, context_len=48, output_len=6, seed=9,
+                          arrival_rate=20.0, ctx_jitter=0.0,
+                          vocab=cfg.vocab)
+    eng = Engine(cfg, slots=2, max_ctx=96)
+    out = eng.run(reqs)
+    assert out["n_done"] == 4
+    for r in reqs:
+        assert r.tbt_max_s > 0.0             # a worst gap was observed
+        assert r.tbt_max_s >= r.tbt_s - 1e-12   # max >= mean
+    assert out["tbt_max_p99_s"] >= out["tbt_p99_s"] - 1e-12
