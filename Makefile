@@ -17,12 +17,17 @@
 #                    arrival-anchored TTFT honest, chunked prefill
 #                    bounds the p99 worst token gap, disagg decode
 #                    never stalls on prompts)
+#   make lint        sacheck (5 repo-invariant AST passes: twin-coverage,
+#                    units, accounting-boundary, jit-purity, determinism;
+#                    writes sacheck_report.json, new findings fail) +
+#                    ruff (generic hygiene; skipped with a notice if not
+#                    installed — the container may not ship it)
 #   make deps        install runtime + test dependencies
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke deps
+.PHONY: test test-fast bench-smoke lint deps
 
 test:
 	python -m pytest -x -q
@@ -43,6 +48,14 @@ bench-smoke:
 	python -m benchmarks.fabric_gate
 	python -m benchmarks.serving_sweep --quick
 	python -m benchmarks.serving_gate
+
+lint:
+	python -m tools.sacheck --json sacheck_report.json
+	@if command -v ruff >/dev/null 2>&1; then \
+	    ruff check .; \
+	else \
+	    echo "lint: ruff not installed — skipping (make deps installs it)"; \
+	fi
 
 deps:
 	pip install -r requirements.txt

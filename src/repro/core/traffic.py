@@ -510,6 +510,39 @@ class FabricAccountant:
             pf[0] += inserted
             pf[1] += useful
 
+    def record_prefetch_bytes(self, n_bytes: float) -> None:
+        """Attribute already-issued fabric bytes to prefetch traffic.
+
+        The simulator's analytic speculation issues its demand through
+        ``add_step_demand(..., qos=QOS_SPECULATIVE)`` (bytes + timing are
+        booked there); this records the prefetch-bytes attribution the
+        precision metrics read.  The engine path gets the same
+        attribution inside :meth:`prefetch_fetch`."""
+        self.stats.prefetch_bytes += n_bytes
+
+    def record_spec_yield(self, seconds: float) -> None:
+        """Book speculative seconds dropped by the QoS yield rule.
+
+        The engine's :class:`OverlapQueue` drains book this through
+        :meth:`drain_overlap`; the simulator's analytic drain computes
+        the yielded share itself and records it here."""
+        self.stats.spec_yielded_s += seconds
+
+    def record_write_bytes(self, n_bytes: float) -> None:
+        """Book pool-write bytes whose TIMING the caller models itself
+        (the simulator's trunk-serialized prefill writes and chunked
+        prefill tails charge seconds via :meth:`charge_seconds` after
+        computing the drain analytically).  The engine's timed path is
+        :meth:`write_back`, which books bytes AND time."""
+        self.stats.bytes_written += n_bytes
+
+    def record_copy_bytes(self, n_bytes: float) -> None:
+        """Book a replica copy: ``n_bytes`` read from the owning device
+        and written to the target (hot-prefix replication, PR 6).  The
+        caller charges the transfer seconds on both links."""
+        self.stats.bytes_fetched += n_bytes
+        self.stats.bytes_written += n_bytes
+
     # -- per-step demand (simulator) ---------------------------------------
     def add_step_demand(self, device: int, n_bytes: float,
                         qos: int = QOS_DEMAND) -> None:

@@ -28,6 +28,36 @@ def main():
     ap.add_argument("--device-buffer", type=int, default=None,
                     help="hot-buffer entries per layer per slot "
                          "(default: cfg.sac.device_buffer_size)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="pool page tokens (default cfg.sac.page_size); "
+                         "radix reuse credit is floored to whole pages")
+    ap.add_argument("--prefetch-width", type=int, default=None,
+                    help="speculative entries/layer/step beyond top-k "
+                         "(default cfg.sac.prefetch_width)")
+    ap.add_argument("--warmup-entries", type=int, default=None,
+                    help="prefill warm-up seeds per layer per request "
+                         "(default cfg.sac.warmup_entries)")
+    ap.add_argument("--warmup-radix", type=int, default=None,
+                    help="trailing radix-prefix tokens seeded per layer "
+                         "at prefill (default cfg.sac.warmup_radix)")
+    ap.add_argument("--link-budget-frac", type=float, default=None,
+                    help="fraction of the pipeline hide window the "
+                         "arbiter lets speculation fill per device "
+                         "(default cfg.sac.link_budget_frac)")
+    ap.add_argument("--min-prefetch-width", type=int, default=None,
+                    help="granted-width floor under saturation "
+                         "(default cfg.sac.min_prefetch_width)")
+    ap.add_argument("--score-margin", type=float, default=None,
+                    help="score-threshold speculation margin; < 0 = "
+                         "pure rank window (default cfg.sac.score_margin)")
+    ap.add_argument("--radix-headroom-frac", type=float, default=None,
+                    help="pool free-page fraction below which request "
+                         "finish evicts LRU cached prefixes (default "
+                         "cfg.sac.radix_headroom_frac)")
+    ap.add_argument("--replicate-horizon-steps", type=int, default=None,
+                    help="decode steps over which a prefix replica's "
+                         "pressure relief must amortize its copy cost "
+                         "(default cfg.sac.replicate_horizon_steps)")
     ap.add_argument("--prefetch", action="store_true",
                     help="enable the fetch pipeline (speculative "
                          "prefetch + prefill warm-up + overlap queues; "
@@ -176,12 +206,21 @@ def main():
         # it would be a silent no-op
         print("--arbiter implies --prefetch: enabling the fetch pipeline")
         args.prefetch = True
-    if (args.precision_weighted or args.resize_interval
-            or args.resize_epsilon is not None):
-        overrides = dict(precision_weighted=args.precision_weighted,
+    overrides = {}
+    # sparse SACConfig overrides: None = keep the config default (the
+    # flag<->field map is enforced by sacheck's twin-coverage pass)
+    for field in ("page_size", "prefetch_width", "warmup_entries",
+                  "warmup_radix", "link_budget_frac",
+                  "min_prefetch_width", "score_margin",
+                  "radix_headroom_frac", "replicate_horizon_steps",
+                  "resize_epsilon"):
+        val = getattr(args, field)
+        if val is not None:
+            overrides[field] = val
+    if args.precision_weighted or args.resize_interval:
+        overrides.update(precision_weighted=args.precision_weighted,
                          resize_interval=args.resize_interval)
-        if args.resize_epsilon is not None:
-            overrides["resize_epsilon"] = args.resize_epsilon
+    if overrides:
         cfg = dataclasses.replace(
             cfg, sac=dataclasses.replace(cfg.sac, **overrides))
     if cfg.enc_dec:

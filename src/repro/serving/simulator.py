@@ -267,9 +267,11 @@ class SimConfig:
                                        # group gains a copy on the least-
                                        # pressured other link (copy
                                        # traffic charged, unkeyed)
-    replicate_horizon: int = 64        # payback horizon in decode steps
+    replicate_horizon_steps: int = 64  # payback horizon in decode steps
                                        # (SACConfig.replicate_horizon_
-                                       # steps twin)
+                                       # steps twin; named identically so
+                                       # sweeps set the same knob on both
+                                       # sides — sacheck twin-coverage)
     dedup_pages: bool = False          # PR 6 page-dedup twin: a same-
                                        # device hit returns the matched
                                        # bytes from the request's booking
@@ -338,6 +340,14 @@ class SimConfig:
                                        # prefix every step; the matched
                                        # fraction of the request's misses
                                        # follows the read device
+    replicate_horizon: dataclasses.InitVar[Optional[int]] = None
+                                       # deprecated pre-PR 9 spelling of
+                                       # replicate_horizon_steps, accepted
+                                       # at construction only
+
+    def __post_init__(self, replicate_horizon: Optional[int]) -> None:
+        if replicate_horizon is not None:
+            self.replicate_horizon_steps = int(replicate_horizon)
 
 
 class _Prefetch:
@@ -552,7 +562,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
         the CORRECTED pressure on the cheapest copy-holding link (the
         placer's view including in-flight bookings — same-wave bursts
         count before the demand feed catches up) exceeds the copy cost
-        amortized over ``replicate_horizon`` steps, copying to the
+        amortized over ``replicate_horizon_steps`` steps, copying to the
         least-pressured copy-free link (never a hotter one).  Copy
         traffic is charged unkeyed (cache-owned; no departure subtracts
         it) on both links."""
@@ -569,7 +579,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
         dst = min(others, key=lambda d: (pressure[d], booked[d], d))
         copy_b = plen * model.kv_bytes_per_token()
         copy_cost = copy_b / backend.fetch_bw_Bps
-        horizon = max(int(sim.replicate_horizon), 1)
+        horizon = max(int(sim.replicate_horizon_steps), 1)
         # benefit proxy: the locality bonus of a full-prefix reuse
         bonus = (model.prefill_s(plen) +
                  copy_b / write_bw)
@@ -577,8 +587,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
                 or pressure[src] * horizon <= copy_cost):
             return
         devices.append(dst)
-        acct.stats.bytes_fetched += copy_b
-        acct.stats.bytes_written += copy_b
+        acct.record_copy_bytes(copy_b)
         acct.charge_seconds(copy_cost)
         tracker.note_transfer(src, copy_cost)
         tracker.note_transfer(dst, copy_cost)
@@ -697,7 +706,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     # serialized on any shared trunk along the owning
                     # device's route (flat star: exactly wb / write_bw)
                     wb = eff_ctx * model.kv_bytes_per_token()
-                    acct.stats.bytes_written += wb
+                    acct.record_write_bytes(wb)
                     xfer = topo.transfer_seconds(r.pool_device,
                                                  wb / write_bw)
                     trunks = [sg for sg in topo.route(r.pool_device)
@@ -741,7 +750,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
                 t_chunks += model.prefill_s(take)
                 if take > 0:
                     wb = take * model.kv_bytes_per_token()
-                    acct.stats.bytes_written += wb
+                    acct.record_write_bytes(wb)
                     xfer = topo.transfer_seconds(r.pool_device,
                                                  wb / write_bw)
                     acct.charge_seconds(xfer)
@@ -902,7 +911,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     # precision before its first real speculation
                     acct.record_prefetch(pf_n, pf_u,
                                          key=None if was_cold else rid)
-                    acct.stats.prefetch_bytes += pf_b
+                    acct.record_prefetch_bytes(pf_b)
             step_demand = acct.drain_step()     # per-SEGMENT bytes
             bw = backend.fetch_bw_Bps
             if backend.prefetch and (prefetch.busy() or rearrange.busy()):
@@ -933,9 +942,9 @@ def simulate(reqs: List[Request], model: ModelProfile,
                     + model.n_attn_layers * backend.layer_latency_s,
                     t_comp)
                 window = pipeline.hide_window_s(t_comp)
-                acct.stats.spec_yielded_s += sum(
+                acct.record_spec_yield(sum(
                     max(0.0, sp - max(0.0, window - dm))
-                    for sp, dm in zip(spec_s, dem_s))
+                    for sp, dm in zip(spec_s, dem_s)))
             else:
                 # issued vs exposed: only the tail of the step's fetch
                 # that does not fit the double-buffered hide window

@@ -1,0 +1,516 @@
+"""sacheck (tools/sacheck) — the static-analysis suite is itself under
+test: every pass must catch its seeded known-bad fixture, must NOT fire
+on the matching known-good snippet, suppressions and the baseline must
+round-trip, and the real src/ tree must be clean modulo the committed
+baseline (with the PR 9 satellites fixed outright, not baselined)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.sacheck.api import baseline_path, check_tree, repo_root  # noqa: E402
+from tools.sacheck.config import SacheckConfig  # noqa: E402
+from tools.sacheck.core import load_baseline, save_baseline  # noqa: E402
+from tools.sacheck.passes import PASSES  # noqa: E402
+from tools.sacheck.passes import (accounting_boundary, determinism,  # noqa: E402
+                                  jit_purity, twin_coverage, units)
+
+
+# ---------------------------------------------------------------------------
+# fixture-tree plumbing
+# ---------------------------------------------------------------------------
+
+TRAFFIC_FIXTURE = """
+import dataclasses
+
+@dataclasses.dataclass
+class TrafficStats:
+    bytes_fetched: float = 0.0
+    bytes_written: float = 0.0
+    prefetch_bytes: float = 0.0
+    spec_yielded_s: float = 0.0
+
+class FabricAccountant:
+    def __init__(self):
+        self.stats = TrafficStats()
+    def record_write_bytes(self, n):
+        self.stats.bytes_written += n
+"""
+
+
+def make_tree(tmp_path, files):
+    """Write a mini-repo mirroring the real layout; always includes a
+    TrafficStats schema so the accounting pass has its boundary."""
+    files = dict(files)
+    files.setdefault("src/repro/core/traffic.py", TRAFFIC_FIXTURE)
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return tmp_path
+
+
+def run_one(tmp_path, files, pass_name, config=None, baseline=()):
+    root = make_tree(tmp_path, files)
+    return check_tree(root, config=config or SacheckConfig(),
+                      passes={pass_name: PASSES[pass_name]},
+                      baseline=baseline)
+
+
+def codes(result):
+    return sorted(f.code for f in result.new)
+
+
+# ---------------------------------------------------------------------------
+# twin-coverage
+# ---------------------------------------------------------------------------
+
+TWIN_SAC = """
+import dataclasses
+
+@dataclasses.dataclass(frozen=True)
+class SACConfig:
+    alpha_s: float = 1.0
+    beta_steps: int = 64
+"""
+
+TWIN_SIM_FULL = """
+import dataclasses
+
+@dataclasses.dataclass
+class SimConfig:
+    alpha_s: float = 1.0
+    beta_steps: int = 64
+"""
+
+TWIN_SIM_DRIFTED = """
+import dataclasses
+
+@dataclasses.dataclass
+class SimConfig:
+    alpha_s: float = 1.0
+    beta: int = 64
+"""
+
+TWIN_SERVE = """
+def main(ap):
+    ap.add_argument("--alpha-s", type=float)
+    ap.add_argument("--beta-steps", type=int)
+"""
+
+
+class TestTwinCoverage:
+    def test_known_bad_name_drift_and_missing_flag(self, tmp_path):
+        res = run_one(tmp_path, {
+            "src/repro/configs/base.py": TWIN_SAC,
+            "src/repro/serving/simulator.py": TWIN_SIM_DRIFTED,
+            "src/repro/launch/serve.py":
+                'def main(ap):\n    ap.add_argument("--alpha-s")\n',
+        }, "twin-coverage")
+        assert "missing-twin" in codes(res)      # beta_steps vs beta
+        assert "missing-flag" in codes(res)      # --beta-steps absent
+        assert all(f.path == "src/repro/configs/base.py" for f in res.new)
+
+    def test_known_good_no_false_positive(self, tmp_path):
+        res = run_one(tmp_path, {
+            "src/repro/configs/base.py": TWIN_SAC,
+            "src/repro/serving/simulator.py": TWIN_SIM_FULL,
+            "src/repro/launch/serve.py": TWIN_SERVE,
+        }, "twin-coverage")
+        assert res.new == []
+
+    def test_justified_rename_and_exempt_pass(self, tmp_path):
+        cfg = SacheckConfig()
+        cfg.twin_renames = {"beta_steps": ("beta", "historical split")}
+        cfg.flag_exempt = {"beta_steps": "calibrated constant"}
+        res = run_one(tmp_path, {
+            "src/repro/configs/base.py": TWIN_SAC,
+            "src/repro/serving/simulator.py": TWIN_SIM_DRIFTED,
+            "src/repro/launch/serve.py":
+                'def main(ap):\n    ap.add_argument("--alpha-s")\n',
+        }, "twin-coverage", config=cfg)
+        assert res.new == []
+
+    def test_stale_allowlist_entry_flagged(self, tmp_path):
+        cfg = SacheckConfig()
+        cfg.twin_renames = {"gone_field": (None, "obsolete")}
+        res = run_one(tmp_path, {
+            "src/repro/configs/base.py": TWIN_SAC,
+            "src/repro/serving/simulator.py": TWIN_SIM_FULL,
+            "src/repro/launch/serve.py": TWIN_SERVE,
+        }, "twin-coverage", config=cfg)
+        assert "stale-allowlist" in codes(res)
+
+
+# ---------------------------------------------------------------------------
+# units
+# ---------------------------------------------------------------------------
+
+
+class TestUnits:
+    def test_known_bad_mixed_add(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/core/calc.py":
+                                 "def f(demand_s, miss_bytes):\n"
+                                 "    return demand_s + miss_bytes\n"},
+                      "units")
+        assert codes(res) == ["unit-mix"]
+
+    def test_known_bad_augassign_and_compare(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/core/calc.py":
+                                 "def f(stats, n_bytes, t_s, n_tokens):\n"
+                                 "    stats.exposed_fabric_s += n_bytes\n"
+                                 "    return t_s < n_tokens\n"},
+                      "units")
+        assert codes(res) == ["unit-mix", "unit-mix"]
+
+    def test_known_good_conversion_and_same_unit(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/core/calc.py":
+                                 "def f(a_s, b_s, n_bytes, bw, x_frac):\n"
+                                 "    t = a_s + b_s\n"
+                                 "    u = n_bytes / bw\n"
+                                 "    v = t + u\n"
+                                 "    w = x_frac * a_s\n"
+                                 "    return max(t, v) - b_s + w\n"},
+                      "units")
+        assert res.new == []
+
+    def test_call_result_units(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/core/calc.py":
+                                 "def f(model, copy_bytes):\n"
+                                 "    return model.prefill_s(4)"
+                                 " + copy_bytes\n"},
+                      "units")
+        assert codes(res) == ["unit-mix"]
+
+    def test_tests_and_tools_out_of_scope(self, tmp_path):
+        res = run_one(tmp_path, {"other/calc.py":
+                                 "def f(a_s, b_bytes):\n"
+                                 "    return a_s + b_bytes\n"},
+                      "units")
+        assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# accounting-boundary
+# ---------------------------------------------------------------------------
+
+
+class TestAccountingBoundary:
+    def test_known_bad_direct_mutation(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/serving/simulator.py":
+                                 "def step(acct, wb):\n"
+                                 "    acct.stats.bytes_written += wb\n"
+                                 "    acct.stats.prefetch_bytes = 3\n"},
+                      "accounting-boundary")
+        assert codes(res) == ["direct-mutation", "direct-mutation"]
+
+    def test_accountant_home_is_legal(self, tmp_path):
+        # TRAFFIC_FIXTURE itself mutates self.stats.bytes_written inside
+        # core/traffic.py — the accountant's own booking is the boundary
+        res = run_one(tmp_path, {}, "accounting-boundary")
+        assert res.new == []
+
+    def test_non_traffic_stats_fields_ignored(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/serving/engine.py":
+                                 "def step(self):\n"
+                                 "    self.stats.steps += 1\n"
+                                 "    self.stats.radix_hit_tokens += 4\n"},
+                      "accounting-boundary")
+        assert res.new == []
+
+    def test_api_route_is_legal(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/serving/simulator.py":
+                                 "def step(acct, wb):\n"
+                                 "    acct.record_write_bytes(wb)\n"},
+                      "accounting-boundary")
+        assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+
+JIT_BAD = """
+import functools
+import random
+import time
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def step(x, n):
+    t0 = time.time()
+    r = random.random()
+    y = float(x)
+    m = int(n)
+    return helper(x) + y + r + t0 + m
+
+
+def helper(x):
+    return bool(x)
+
+
+def unreachable(x):
+    return float(x)
+"""
+
+JIT_GOOD = """
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def step(x, k):
+    w = int(k)
+    return jnp.sum(x) * w
+
+
+def host_side(x):
+    import time
+    return time.time(), float(x)
+"""
+
+
+class TestJitPurity:
+    def test_known_bad_all_four_classes(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/kernels/k.py": JIT_BAD},
+                      "jit-purity")
+        got = codes(res)
+        assert "time-call" in got
+        assert "rng-call" in got
+        assert got.count("traced-cast") == 2   # float(x) + helper's bool(x)
+        # int(n) is static (static_argnames), unreachable() is not
+        # reachable: neither may fire
+        lines = {f.line for f in res.new}
+        src = JIT_BAD.splitlines()
+        assert not any("int(n)" in src[ln - 1] for ln in lines)
+        assert not any("unreachable" in src[ln - 1] for ln in lines)
+
+    def test_known_good_no_false_positive(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/kernels/k.py": JIT_GOOD},
+                      "jit-purity")
+        assert res.new == []
+
+    def test_pallas_call_kernel_body_is_a_root(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/kernels/k.py":
+                                 "import random\n"
+                                 "from jax.experimental import pallas as pl\n"
+                                 "def _kernel(ref):\n"
+                                 "    ref[0] = random.random()\n"
+                                 "def launch(x):\n"
+                                 "    return pl.pallas_call(_kernel)(x)\n"},
+                      "jit-purity")
+        assert codes(res) == ["rng-call"]
+
+    def test_global_statement_flagged(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/kernels/k.py":
+                                 "import jax\n"
+                                 "_COUNT = 0\n"
+                                 "@jax.jit\n"
+                                 "def step(x):\n"
+                                 "    global _COUNT\n"
+                                 "    _COUNT += 1\n"
+                                 "    return x\n"},
+                      "jit-purity")
+        assert codes(res) == ["global-mutation"]
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+class TestDeterminism:
+    def test_known_bad_global_rng(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/serving/gen.py":
+                                 "import random\n"
+                                 "import numpy as np\n"
+                                 "def f():\n"
+                                 "    return random.random()"
+                                 " + np.random.rand(3)[0]\n"},
+                      "determinism")
+        assert codes(res) == ["global-rng", "global-rng"]
+
+    def test_known_good_seeded_generators(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/serving/gen.py":
+                                 "import random\n"
+                                 "import numpy as np\n"
+                                 "def f(seed):\n"
+                                 "    rng = np.random.default_rng(seed)\n"
+                                 "    r = random.Random(seed)\n"
+                                 "    return rng.random() + r.random()\n"},
+                      "determinism")
+        assert res.new == []
+
+    def test_known_bad_set_iteration_in_scope(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/core/acct.py":
+                                 "def f(a, b):\n"
+                                 "    tot = 0.0\n"
+                                 "    for d in set(a) | {b}:\n"
+                                 "        tot += d\n"
+                                 "    return tot\n"},
+                      "determinism")
+        assert codes(res) == ["set-iteration"]
+
+    def test_known_good_sorted_set_and_out_of_scope(self, tmp_path):
+        res = run_one(tmp_path, {
+            "src/repro/core/acct.py":
+                "def f(a, b):\n"
+                "    return [d for d in sorted(set(a) | {b})]\n",
+            "src/repro/models/m.py":
+                "def g(a):\n"
+                "    for d in set(a):\n"
+                "        pass\n"},
+            "determinism")
+        assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions + baseline round-trip
+# ---------------------------------------------------------------------------
+
+SUPPRESSED_OK = (
+    "import random\n"
+    "def f():\n"
+    "    # sacheck: disable=determinism -- fixture: seeded upstream\n"
+    "    return random.random()\n")
+
+SUPPRESSED_NO_REASON = (
+    "import random\n"
+    "def f():\n"
+    "    return random.random()  # sacheck: disable=determinism\n")
+
+
+class TestSuppressionAndBaseline:
+    def test_reasoned_suppression_suppresses(self, tmp_path):
+        res = run_one(tmp_path, {"src/repro/core/g.py": SUPPRESSED_OK},
+                      "determinism")
+        assert res.new == []
+        assert len(res.suppressed) == 1
+        assert res.suppressed[0][1].reason == "fixture: seeded upstream"
+
+    def test_reasonless_suppression_does_not_suppress(self, tmp_path):
+        res = run_one(tmp_path,
+                      {"src/repro/core/g.py": SUPPRESSED_NO_REASON},
+                      "determinism")
+        got = codes(res)
+        assert "global-rng" in got        # the finding survives
+        assert "missing-reason" in got    # and the bad disable is reported
+
+    def test_baseline_round_trip(self, tmp_path):
+        files = {"src/repro/core/g.py":
+                 "import random\ndef f():\n    return random.random()\n"}
+        res = run_one(tmp_path, files, "determinism")
+        assert len(res.new) == 1
+        bl = tmp_path / "baseline.json"
+        save_baseline(bl, [f.fingerprint for f in res.new])
+        res2 = check_tree(tmp_path, config=SacheckConfig(),
+                          passes={"determinism": PASSES["determinism"]},
+                          baseline=load_baseline(bl))
+        assert res2.ok and len(res2.baselined) == 1
+        # fingerprints are line-number independent: prepending a comment
+        # line must not turn the baselined finding into a new one
+        p = tmp_path / "src/repro/core/g.py"
+        p.write_text("# shifted\n" + p.read_text())
+        res3 = check_tree(tmp_path, config=SacheckConfig(),
+                          passes={"determinism": PASSES["determinism"]},
+                          baseline=load_baseline(bl))
+        assert res3.ok and len(res3.baselined) == 1
+
+    def test_stale_baseline_entries_reported(self, tmp_path):
+        make_tree(tmp_path, {"src/repro/core/g.py": "x = 1\n"})
+        res = check_tree(tmp_path, config=SacheckConfig(),
+                         passes={"determinism": PASSES["determinism"]},
+                         baseline=["determinism|gone.py|global-rng|x"])
+        assert res.ok
+        assert res.stale_baseline == ["determinism|gone.py|global-rng|x"]
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+# ---------------------------------------------------------------------------
+
+
+class TestRepoSelfCheck:
+    def test_src_clean_modulo_baseline(self):
+        root = repo_root()
+        baseline = load_baseline(baseline_path(root))
+        res = check_tree(root, baseline=baseline)
+        assert res.ok, "\n".join(f.render() for f in res.new)
+
+    def test_pr9_satellites_fixed_not_baselined(self):
+        """The two simulator accounting-boundary violations and the
+        replicate_horizon twin drift must be FIXED (acceptance says
+        'not baselined'): neither live findings nor baseline entries may
+        mention them."""
+        root = repo_root()
+        baseline = load_baseline(baseline_path(root))
+        for entry in baseline:
+            assert not entry.startswith("accounting-boundary|"), entry
+            assert "replicate_horizon" not in entry, entry
+        res = check_tree(root, baseline=baseline)
+        everything = res.new + res.baselined
+        assert not [f for f in everything
+                    if f.pass_name == "accounting-boundary"]
+        assert not [f for f in everything
+                    if f.pass_name == "twin-coverage"]
+
+    def test_every_suppression_in_src_has_a_reason(self):
+        root = repo_root()
+        res = check_tree(root, baseline=load_baseline(baseline_path(root)))
+        for f in res.new + res.baselined:
+            assert f.code != "missing-reason", f.render()
+        for _, sup in res.suppressed:
+            assert sup.reason
+
+    def test_cli_clean_and_json_report(self, tmp_path):
+        out = tmp_path / "report.json"
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.sacheck", "--json", str(out)],
+            cwd=REPO, capture_output=True, text=True)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        report = json.loads(out.read_text())
+        assert report["ok"] is True
+        assert set(report["passes"]) == set(PASSES)
+
+    def test_cli_fails_on_fixture_violation(self, tmp_path):
+        make_tree(tmp_path, {"src/repro/core/g.py":
+                             "import random\n"
+                             "def f():\n"
+                             "    return random.random()\n"})
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.sacheck", "--root",
+             str(tmp_path), "determinism"],
+            cwd=REPO, capture_output=True, text=True)
+        assert proc.returncode == 1
+        assert "global-rng" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# pass registry sanity
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_match_modules():
+    assert PASSES.keys() == {
+        twin_coverage.NAME, units.NAME, accounting_boundary.NAME,
+        jit_purity.NAME, determinism.NAME}
+
+
+def test_sim_config_deprecated_alias():
+    """PR 9 satellite: SimConfig accepts the pre-rename spelling at
+    construction and maps it onto replicate_horizon_steps."""
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.serving.simulator import SimConfig
+    assert SimConfig(replicate_horizon=11).replicate_horizon_steps == 11
+    assert SimConfig(replicate_horizon_steps=9).replicate_horizon_steps == 9
+    assert SimConfig().replicate_horizon_steps == 64

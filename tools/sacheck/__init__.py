@@ -1,0 +1,16 @@
+"""sacheck — repo-invariant static-analysis suite (PR 9).
+
+Five passes, each guarding one invariant the codebase's correctness
+story rests on (see tools/sacheck/passes/*.py for the why of each):
+
+  twin-coverage        engine<->simulator knob parity + serve.py flags
+  units                _s/_bytes/_tokens/_frac suffix discipline
+  accounting-boundary  TrafficStats mutated only via FabricAccountant
+  jit-purity           no RNG/time/global/concretizing casts under jit
+  determinism          no global-state RNG; no unordered set iteration
+
+Run:    python -m tools.sacheck            (from the repo root)
+        make lint                          (sacheck + ruff)
+"""
+from tools.sacheck.api import check_tree, repo_root  # noqa: F401
+from tools.sacheck.passes import PASSES  # noqa: F401

@@ -1,0 +1,96 @@
+"""sacheck CLI.
+
+    python -m tools.sacheck                  # all passes, baseline applied
+    python -m tools.sacheck units jit-purity # a subset of passes
+    python -m tools.sacheck --json report.json
+    python -m tools.sacheck --write-baseline # record current findings
+
+Exit status: 0 clean (modulo baseline), 1 new findings, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.sacheck.api import baseline_path, check_tree, repo_root
+from tools.sacheck.core import load_baseline, save_baseline
+from tools.sacheck.passes import PASSES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="sacheck")
+    ap.add_argument("passes", nargs="*",
+                    help=f"passes to run (default: all of "
+                         f"{', '.join(PASSES)})")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="write the full machine-readable report here")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline file (default: tools/sacheck/"
+                         "baseline.json under the root)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record every current finding into the baseline "
+                         "(prunes stale entries) and exit 0")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = (args.root or repo_root(Path.cwd())).resolve()
+    for p in args.passes:
+        if p not in PASSES:
+            ap.error(f"unknown pass {p!r} (have: {', '.join(PASSES)})")
+    passes = ({k: PASSES[k] for k in args.passes} if args.passes
+              else dict(PASSES))
+    bpath = args.baseline or baseline_path(root)
+    baseline = load_baseline(bpath)
+
+    res = check_tree(root, passes=passes, baseline=baseline)
+
+    if args.write_baseline:
+        fps = [f.fingerprint for f in res.new + res.baselined]
+        save_baseline(bpath, fps)
+        print(f"sacheck: baseline written to {bpath} "
+              f"({len(set(fps))} entries)")
+        return 0
+
+    if not args.quiet:
+        for f in res.new:
+            print(f.render())
+        if res.baselined:
+            print(f"sacheck: {len(res.baselined)} baselined finding(s) "
+                  f"tolerated (see {bpath.name})")
+        if res.suppressed:
+            print(f"sacheck: {len(res.suppressed)} finding(s) suppressed "
+                  f"inline with reasons")
+        if res.stale_baseline:
+            print(f"sacheck: NOTE {len(res.stale_baseline)} stale "
+                  f"baseline entr(ies) no longer fire — run "
+                  f"--write-baseline to prune")
+    if args.json:
+        args.json.write_text(json.dumps({
+            "root": str(root),
+            "passes": sorted(passes),
+            "new": [vars(f) for f in res.new],
+            "baselined": [vars(f) for f in res.baselined],
+            "suppressed": [
+                {"finding": vars(f), "reason": s.reason,
+                 "line": s.line} for f, s in res.suppressed],
+            "stale_baseline": res.stale_baseline,
+            "ok": res.ok,
+        }, indent=1) + "\n")
+    if res.ok:
+        if not args.quiet:
+            print(f"sacheck: clean ({len(passes)} passes, "
+                  f"{len(res.baselined)} baselined, "
+                  f"{len(res.suppressed)} suppressed)")
+        return 0
+    print(f"sacheck: {len(res.new)} NEW finding(s) — fix them, suppress "
+          f"inline with a reason, or (pre-existing debt only) "
+          f"--write-baseline", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Programmatic entry point shared by the CLI and the self-check test."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, Iterable, Optional
+
+from tools.sacheck.config import SacheckConfig, repo_config
+from tools.sacheck.core import (CheckContext, RunResult, collect_files,
+                                run_passes)
+from tools.sacheck.passes import PASSES
+
+#: repo-relative trees sacheck analyzes
+DEFAULT_SUBDIRS = ("src",)
+BASELINE_NAME = "baseline.json"
+
+
+def repo_root(start: Optional[Path] = None) -> Path:
+    """Nearest ancestor containing src/repro (works from any cwd)."""
+    p = (start or Path(__file__)).resolve()
+    for cand in [p] + list(p.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    raise SystemExit("sacheck: cannot locate the repo root "
+                     "(no src/repro above " + str(p) + ")")
+
+
+def baseline_path(root: Path) -> Path:
+    return root / "tools" / "sacheck" / BASELINE_NAME
+
+
+def check_tree(root: Path, *, config: Optional[SacheckConfig] = None,
+               passes: Optional[Dict] = None,
+               baseline: Iterable[str] = (),
+               subdirs: Iterable[str] = DEFAULT_SUBDIRS) -> RunResult:
+    """Run (a subset of) the passes over ``root`` and return the split
+    result.  ``root`` may be the real repo or a fixture tree mirroring
+    its layout (tests/test_sacheck.py)."""
+    files = collect_files(root, subdirs)
+    ctx = CheckContext(root=root, files=files,
+                       config=config or repo_config())
+    return run_passes(ctx, passes or PASSES, baseline)

@@ -1,0 +1,118 @@
+"""Repo-specific configuration of the sacheck passes.
+
+Every allowlist entry carries a MANDATORY justification string — the
+twin-coverage rule is "matching name or a justified allowlist entry",
+and a reviewer should be able to audit each exception here without
+digging through history.  An entry whose subject disappears from the
+code is reported as stale by the pass that owns it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class SacheckConfig:
+    # --- where the repo's twin declarations live --------------------------
+    sac_config_path: str = "src/repro/configs/base.py"
+    sac_config_class: str = "SACConfig"
+    sim_config_path: str = "src/repro/serving/simulator.py"
+    sim_config_class: str = "SimConfig"
+    serve_path: str = "src/repro/launch/serve.py"
+
+    # --- twin-coverage ----------------------------------------------------
+    # SACConfig fields that are NOT serving knobs (model/kernel shape
+    # parameters the analytic simulator has no use for).  field -> why.
+    twin_non_serving: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # engine knob -> (SimConfig twin under a DIFFERENT name | None, why).
+    # None means "no analytic twin exists, and that is deliberate".
+    twin_renames: Dict[str, Tuple[Optional[str], str]] = \
+        dataclasses.field(default_factory=dict)
+    # engine knob -> serve.py flag spelled differently than
+    # "--" + field.replace("_", "-").  field -> flag.
+    flag_renames: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # engine knob -> why it has no serve.py flag at all.
+    flag_exempt: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    # --- accounting-boundary ---------------------------------------------
+    # the ONE module allowed to mutate TrafficStats counters
+    accounting_home: str = "src/repro/core/traffic.py"
+    traffic_stats_class: str = "TrafficStats"
+    # variable names treated as TrafficStats receivers when they are the
+    # base of an attribute assignment (heuristic: the canonical accessor
+    # is `<accountant>.stats.<counter>`)
+    stats_receiver_names: Tuple[str, ...] = ("stats", "traffic_stats")
+
+    # --- determinism ------------------------------------------------------
+    # path prefixes whose set-iteration order feeds accounting/timing
+    determinism_scopes: Tuple[str, ...] = ("src/repro/core/",
+                                           "src/repro/serving/")
+
+    # --- units ------------------------------------------------------------
+    unit_suffixes: Tuple[str, ...] = ("_s", "_bytes", "_tokens", "_frac")
+
+
+def repo_config() -> SacheckConfig:
+    """The checked-in configuration for THIS repository."""
+    cfg = SacheckConfig()
+    cfg.twin_non_serving = {
+        "enabled": "model-graph switch (dense vs DSA), not a serving knob",
+        "topk": "attention-kernel shape; the sim reads it via ModelProfile",
+        "d_idx": "lightning-indexer head dim — kernel shape only",
+        "n_idx_heads": "lightning-indexer head count — kernel shape only",
+        "pool_backend": "sim sweeps backends via BackendProfile instead",
+        "interleave": "sim twin lives on BackendProfile.interleave",
+        "overlap_fetch": "legacy pre-PR 2 knob superseded by overlap_frac",
+        "kv_quant": "kernel-side pool quantization; no timing model yet "
+                    "(ROADMAP compressed cold tier)",
+    }
+    cfg.twin_renames = {
+        "device_buffer_size": (
+            "device_buffer",
+            "pre-PR 2 naming split; both sides are entries/layer/slot and "
+            "every parity harness maps the pair explicitly (tests/parity.py)"),
+        "layer_sizing": (
+            "layer_buffer_sizes",
+            "engine takes a sizing POLICY name, sim takes the realized "
+            "per-layer sizes the policy produced"),
+        "warmup_radix": (
+            None,
+            "radix-tail warm-up seeding is folded into the sim's single "
+            "warmup_entries/warm_precision cold-start model"),
+        "score_margin": (
+            None,
+            "score-threshold speculation shapes which entries are "
+            "prefetched, not how many — invisible to the analytic width "
+            "model (analytic_prefetch)"),
+        "resize_epsilon": (
+            None,
+            "hysteresis only matters on NOISY measured miss rates; the "
+            "analytic fixed point (analytic_resize) is noise-free"),
+        "radix_headroom_frac": (
+            None,
+            "eviction headroom needs the real PoolAllocator; capacity "
+            "effects deliberately stay with the engine (PR 5)"),
+        "disagg_prefill": (
+            "round1",
+            "sim grew the disaggregated round-1 prefill model first "
+            "(paper fig 9); the engine knob arrived in PR 8"),
+        "prefill_lanes": (
+            "prefill_concurrency",
+            "same meaning, sim name predates PR 8; both are the "
+            "disaggregated prefill stage's lane count"),
+    }
+    cfg.flag_renames = {
+        "device_buffer_size": "--device-buffer",
+        "prefill_chunk_tokens": "--prefill-chunk",
+        "disagg_prefill": "--disagg",
+        "warmup_pressure_seed": "--warmup-pressure-seed",
+    }
+    cfg.flag_exempt = {
+        "enabled": "switched via --mode sac|dense",
+        "pipeline_depth": "calibrated pipeline constant, not an operator "
+                          "knob (PipelineModel depth)",
+        "overlap_frac": "calibrated overlap constant measured from the "
+                        "hardware, not an operator knob",
+    }
+    return cfg

@@ -1,0 +1,279 @@
+"""sacheck core: findings, suppressions, baseline, and the pass runner.
+
+sacheck is a repo-invariant static-analysis suite (PR 9).  Unlike a
+general linter, every pass encodes one invariant THIS codebase's
+correctness story rests on (engine<->simulator twin parity, unit-suffix
+discipline, FabricAccountant-mediated accounting, jit purity,
+determinism) — invariants that were previously enforced only at runtime
+by property tests and therefore drifted silently between PRs.
+
+Vocabulary:
+
+  - **Finding** — one violation of one pass, anchored to a file + line.
+    Its *fingerprint* is line-number independent (pass, path, code, and
+    the normalized source line), so baselines survive unrelated edits.
+  - **Suppression** — an inline ``# sacheck: disable=<pass> -- reason``
+    comment on the violating line (or the line directly above).  The
+    reason is MANDATORY: a reasonless disable does not suppress and is
+    itself reported (code ``missing-reason``), so every exception to an
+    invariant is justified in the diff that introduces it.
+  - **Baseline** — a committed JSON set of fingerprints recording
+    pre-existing findings.  Baselined findings are reported as such but
+    do not fail the run; every NEW finding does.  Regenerate with
+    ``python -m tools.sacheck --write-baseline`` (entries that stopped
+    firing are pruned automatically).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*sacheck:\s*disable=([A-Za-z0-9_,-]+)"
+    r"(?:\s+--\s+(?P<reason>\S.*))?")
+
+#: pass name used for meta-findings about the suppression syntax itself
+SUPPRESSION_PASS = "suppression"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: ``pass_name`` names the pass, ``code`` the specific
+    rule inside it, ``line`` anchors it, and ``message`` explains it."""
+
+    pass_name: str
+    path: str            # repo-relative posix path
+    line: int            # 1-indexed
+    code: str
+    message: str
+    line_text: str = ""  # normalized source line (fingerprint stability)
+
+    @property
+    def fingerprint(self) -> str:
+        # deliberately line-NUMBER free: unrelated edits above a
+        # baselined finding must not turn it into a "new" violation
+        return "|".join((self.pass_name, self.path, self.code,
+                         self.line_text.strip()))
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: "
+                f"[{self.pass_name}/{self.code}] {self.message}")
+
+
+@dataclasses.dataclass
+class Suppression:
+    passes: Tuple[str, ...]
+    reason: Optional[str]
+    line: int
+
+    def covers(self, pass_name: str) -> bool:
+        return pass_name in self.passes or "all" in self.passes
+
+
+class SourceFile:
+    """One parsed source file: text, AST, and inline suppressions."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree: Optional[ast.Module] = None
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree = ast.parse(text, filename=path)
+        except SyntaxError as e:  # surfaced as a finding by the runner
+            self.parse_error = f"{e.msg} (line {e.lineno})"
+        self.suppressions: Dict[int, Suppression] = {}
+        for i, raw in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(raw)
+            if m:
+                names = tuple(p.strip() for p in m.group(1).split(",")
+                              if p.strip())
+                self.suppressions[i] = Suppression(names, m.group("reason"),
+                                                   i)
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+    def suppression_for(self, line: int, pass_name: str
+                        ) -> Optional[Suppression]:
+        """A suppression covers the line it sits on and the line below it
+        (i.e. look at the finding's own line, then the line above)."""
+        for cand in (line, line - 1):
+            sup = self.suppressions.get(cand)
+            if sup is not None and sup.covers(pass_name):
+                return sup
+        return None
+
+
+@dataclasses.dataclass
+class CheckContext:
+    """Everything a pass needs: the repo root, the parsed files, and the
+    repo-specific configuration (``tools/sacheck/config.py`` by default;
+    tests inject minimal configs over fixture trees)."""
+
+    root: Path
+    files: Dict[str, SourceFile]
+    config: "object"
+
+    def file(self, relpath: str) -> Optional[SourceFile]:
+        return self.files.get(relpath)
+
+    def finding(self, pass_name: str, relpath: str, line: int, code: str,
+                message: str) -> Finding:
+        sf = self.files.get(relpath)
+        text = sf.line_text(line) if sf is not None else ""
+        return Finding(pass_name, relpath, line, code, message, text)
+
+
+def collect_files(root: Path, subdirs: Iterable[str]) -> Dict[str, SourceFile]:
+    files: Dict[str, SourceFile] = {}
+    for sub in subdirs:
+        base = root / sub
+        if base.is_file():
+            paths = [base]
+        else:
+            paths = sorted(base.rglob("*.py"))
+        for p in paths:
+            rel = p.relative_to(root).as_posix()
+            files[rel] = SourceFile(rel, p.read_text())
+    return files
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (used by several passes)
+# ---------------------------------------------------------------------------
+
+
+def dataclass_fields(tree: ast.Module, class_name: str
+                     ) -> List[Tuple[str, int]]:
+    """(name, lineno) of every annotated field of ``class_name``.
+
+    ``InitVar`` pseudo-fields (deprecated constructor aliases) and
+    ``ClassVar`` annotations are skipped — they are not twins."""
+    out: List[Tuple[str, int]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            for stmt in node.body:
+                if (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)):
+                    ann = ast.dump(stmt.annotation)
+                    if "InitVar" in ann or "ClassVar" in ann:
+                        continue
+                    out.append((stmt.target.id, stmt.lineno))
+    return out
+
+
+def attribute_chain(node: ast.AST) -> List[str]:
+    """``a.b.c`` -> ["a", "b", "c"]; [] when the base is not a Name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return []
+
+
+def call_name(node: ast.Call) -> str:
+    """Trailing name of the called object: ``np.random.rand`` -> "rand",
+    ``set(...)`` -> "set"."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: Path) -> List[str]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return list(data.get("entries", []))
+
+
+def save_baseline(path: Path, fingerprints: Iterable[str]) -> None:
+    data = {
+        "comment": ("sacheck baseline: pre-existing findings recorded so "
+                    "only NEW violations fail CI.  Regenerate with "
+                    "`python -m tools.sacheck --write-baseline`."),
+        "entries": sorted(set(fingerprints)),
+    }
+    path.write_text(json.dumps(data, indent=1) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunResult:
+    new: List[Finding]                 # fail the run
+    baselined: List[Finding]          # known, recorded in the baseline
+    suppressed: List[Tuple[Finding, Suppression]]
+    stale_baseline: List[str]         # entries that no longer fire
+
+    @property
+    def ok(self) -> bool:
+        return not self.new
+
+
+def run_passes(ctx: CheckContext,
+               passes: Dict[str, Callable[[CheckContext], List[Finding]]],
+               baseline: Iterable[str] = ()) -> RunResult:
+    """Run every pass, apply suppressions (reasonless ones become
+    ``missing-reason`` findings), then split results against the
+    baseline."""
+    raw: List[Finding] = []
+    for rel, sf in ctx.files.items():
+        if sf.parse_error:
+            raw.append(ctx.finding(SUPPRESSION_PASS, rel, 1, "syntax-error",
+                                   f"cannot parse: {sf.parse_error}"))
+    for name, fn in passes.items():
+        raw.extend(fn(ctx))
+
+    kept: List[Finding] = []
+    suppressed: List[Tuple[Finding, Suppression]] = []
+    seen_reasonless: set = set()
+    for f in raw:
+        sf = ctx.files.get(f.path)
+        sup = (sf.suppression_for(f.line, f.pass_name)
+               if sf is not None else None)
+        if sup is None:
+            kept.append(f)
+        elif sup.reason:
+            suppressed.append((f, sup))
+        else:
+            kept.append(f)          # reasonless: does NOT suppress
+            key = (f.path, sup.line)
+            if key not in seen_reasonless:
+                seen_reasonless.add(key)
+                kept.append(ctx.finding(
+                    SUPPRESSION_PASS, f.path, sup.line, "missing-reason",
+                    "sacheck suppression without a reason — write "
+                    "`# sacheck: disable=<pass> -- <why this is ok>`"))
+
+    base = set(baseline)
+    new = [f for f in kept if f.fingerprint not in base]
+    known = [f for f in kept if f.fingerprint in base]
+    fired = {f.fingerprint for f in kept}
+    stale = sorted(base - fired)
+    # deterministic report order
+    new.sort(key=lambda f: (f.path, f.line, f.pass_name, f.code))
+    known.sort(key=lambda f: (f.path, f.line, f.pass_name, f.code))
+    return RunResult(new=new, baselined=known, suppressed=suppressed,
+                     stale_baseline=stale)

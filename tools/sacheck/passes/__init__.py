@@ -1,0 +1,11 @@
+"""Pass registry: name -> run(ctx) -> [Finding]."""
+from tools.sacheck.passes import (accounting_boundary, determinism,
+                                  jit_purity, twin_coverage, units)
+
+PASSES = {
+    twin_coverage.NAME: twin_coverage.run,
+    units.NAME: units.run,
+    accounting_boundary.NAME: accounting_boundary.run,
+    jit_purity.NAME: jit_purity.run,
+    determinism.NAME: determinism.run,
+}

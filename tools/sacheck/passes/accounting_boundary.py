@@ -1,0 +1,87 @@
+"""accounting-boundary: ``TrafficStats`` counters may only be mutated
+inside ``core/traffic.py`` (FabricAccountant / OverlapQueue).
+
+Why this invariant exists: TrafficStats is the ONE schema every layer
+(engine, simulator, SACSystem) reports through, and the paper's QoS /
+per-segment story (PAPER.md §4) depends on every byte and second being
+booked by the accountant — which validates device ids at the boundary
+(``_resolve_device``), routes charges per segment, and keeps the
+issued/exposed and demand/speculative splits consistent.  A caller that
+reaches around the accountant and does ``acct.stats.prefetch_bytes += x``
+gets the number in the total but skips the routing/validation/QoS
+bookkeeping, and the engine/simulator twins silently diverge (this
+exact bug shipped twice in serving/simulator.py before PR 9).
+
+Detection: an assignment or augmented assignment whose target is
+``<anything>.stats.<counter>`` (or a subscript of it), or
+``stats.<counter>`` on a bare receiver named like a stats object, where
+``<counter>`` is a field of the TrafficStats dataclass — parsed live
+from core/traffic.py, so new counters are covered the day they are
+added.  Mutations inside core/traffic.py itself are the accountant's
+own and legal.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from tools.sacheck.core import (CheckContext, Finding, dataclass_fields)
+
+NAME = "accounting-boundary"
+
+
+def _traffic_fields(ctx: CheckContext) -> Optional[Set[str]]:
+    sf = ctx.file(ctx.config.accounting_home)
+    if sf is None or sf.tree is None:
+        return None
+    fields = dataclass_fields(sf.tree, ctx.config.traffic_stats_class)
+    return {n for n, _ in fields} or None
+
+
+def _mutated_counter(target: ast.AST, ctx: CheckContext,
+                     fields: Set[str]) -> Optional[str]:
+    """Counter name when ``target`` writes a TrafficStats field through a
+    ``.stats.`` (or bare ``stats``) receiver; else None."""
+    while isinstance(target, ast.Subscript):
+        target = target.value
+    if not isinstance(target, ast.Attribute) or target.attr not in fields:
+        return None
+    base = target.value
+    if isinstance(base, ast.Attribute) and base.attr == "stats":
+        return target.attr
+    if (isinstance(base, ast.Name)
+            and base.id in ctx.config.stats_receiver_names):
+        return target.attr
+    return None
+
+
+def run(ctx: CheckContext) -> List[Finding]:
+    fields = _traffic_fields(ctx)
+    out: List[Finding] = []
+    if fields is None:
+        out.append(Finding(
+            NAME, ctx.config.accounting_home, 1, "missing-schema",
+            f"cannot locate {ctx.config.traffic_stats_class} fields in "
+            f"{ctx.config.accounting_home} — the boundary is undefined"))
+        return out
+    for rel, sf in ctx.files.items():
+        if (sf.tree is None or rel == ctx.config.accounting_home
+                or not rel.startswith("src/")):
+            continue
+        for node in ast.walk(sf.tree):
+            targets: List[ast.AST] = []
+            if isinstance(node, ast.AugAssign):
+                targets = [node.target]
+            elif isinstance(node, ast.Assign):
+                targets = list(node.targets)
+            for t in targets:
+                counter = _mutated_counter(t, ctx, fields)
+                if counter is not None:
+                    out.append(ctx.finding(
+                        NAME, rel, node.lineno, "direct-mutation",
+                        f"direct mutation of TrafficStats.{counter} "
+                        f"outside {ctx.config.accounting_home} — route "
+                        f"it through a FabricAccountant method so "
+                        f"routing/validation/QoS bookkeeping stay "
+                        f"consistent"))
+    return out

@@ -1,0 +1,105 @@
+"""determinism: no unseeded global-state RNG in src/, and no iteration
+over unordered ``set`` values in core//serving/ accounting paths.
+
+Why this invariant exists: the repo's headline property is bit-identical
+decoding and reproducible virtual-clock timing — every BENCH_* number
+and every parity test (engine == simulator to float precision) depends
+on a run being a pure function of (trace, seed, knobs).  Two leak
+channels are easy to introduce and brutal to debug:
+
+  - **global RNG state** (``random.random()``, ``np.random.rand()``):
+    the result depends on everything that touched the interpreter-wide
+    generator before you, including test ordering.  Seeded generator
+    objects (``np.random.default_rng(seed)``, ``random.Random(seed)``,
+    ``jax.random.PRNGKey``) are the sanctioned alternative and are not
+    flagged.
+  - **set iteration order** in accounting paths: ``set`` order is
+    hash-based; summing floats or booking per-device charges in set
+    order changes low bits between runs/platforms, which the
+    float-exact parity gates then catch hundreds of steps later.
+    Iterating a ``sorted(...)`` of the set is the sanctioned form.
+    (Detection is syntactic: set literals/constructors/comprehensions
+    and ``|&-^`` combinations of them in ``for``/comprehension iterator
+    position; a plain variable of set type is not resolvable without
+    type inference and is out of scope.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.sacheck.core import CheckContext, Finding, attribute_chain
+
+NAME = "determinism"
+
+#: module-level (global-state) functions of `random`
+_PY_GLOBAL_RNG = {
+    "random", "randint", "randrange", "uniform", "choice", "choices",
+    "shuffle", "sample", "gauss", "normalvariate", "betavariate",
+    "expovariate", "seed", "getrandbits", "triangular",
+}
+#: legacy global-state functions of `np.random` (default_rng is fine)
+_NP_GLOBAL_RNG = {
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "shuffle", "permutation", "uniform", "normal", "exponential",
+    "poisson", "pareto", "seed", "standard_normal", "beta", "gamma",
+}
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in ("set", "frozenset"):
+            return True
+        if isinstance(f, ast.Attribute) and f.attr in (
+                "union", "intersection", "difference",
+                "symmetric_difference"):
+            # x.union(y) etc. on a set-ish receiver; only claim set-ness
+            # when the receiver itself is provably a set expression
+            return _is_set_expr(f.value)
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+        return _is_set_expr(node.left) or _is_set_expr(node.right)
+    return False
+
+
+def run(ctx: CheckContext) -> List[Finding]:
+    out: List[Finding] = []
+    for rel, sf in ctx.files.items():
+        if sf.tree is None or not rel.startswith("src/"):
+            continue
+        in_scope = rel.startswith(tuple(ctx.config.determinism_scopes))
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                chain = attribute_chain(node.func)
+                if (chain[:1] == ["random"] and len(chain) == 2
+                        and chain[1] in _PY_GLOBAL_RNG):
+                    out.append(ctx.finding(
+                        NAME, rel, node.lineno, "global-rng",
+                        f"unseeded global-state RNG {'.'.join(chain)} — "
+                        f"results depend on interpreter-wide state; use "
+                        f"random.Random(seed) or np.random.default_rng"))
+                elif (chain[:2] in (["np", "random"], ["numpy", "random"])
+                      and len(chain) == 3 and chain[2] in _NP_GLOBAL_RNG):
+                    out.append(ctx.finding(
+                        NAME, rel, node.lineno, "global-rng",
+                        f"legacy numpy global RNG {'.'.join(chain)} — "
+                        f"use np.random.default_rng(seed) so traces are "
+                        f"a pure function of the seed"))
+            if in_scope:
+                iters: List[ast.AST] = []
+                if isinstance(node, ast.For):
+                    iters.append(node.iter)
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    iters.extend(g.iter for g in node.generators)
+                for it in iters:
+                    if _is_set_expr(it):
+                        out.append(ctx.finding(
+                            NAME, rel, node.lineno, "set-iteration",
+                            "iteration over unordered set values in an "
+                            "accounting path — wrap in sorted(...) so "
+                            "float accumulation order is deterministic"))
+    return out

@@ -1,0 +1,191 @@
+"""jit-purity: functions reachable from ``jax.jit`` / ``pl.pallas_call``
+call sites must stay trace-pure.
+
+Why this invariant exists: the engine's hot path is jitted once and
+replayed; anything Python-side inside it either (a) runs at TRACE time
+only and silently freezes (``time.time()``, ``random.random()``, global
+mutation — the value is baked into the compiled graph, so "per-step"
+randomness isn't), or (b) forces a concretization error / silent
+recompile (``float(x)`` on a traced array).  All four bug classes pass
+unit tests on the first trace and corrupt steady-state serving.
+
+Detection (per module, documented approximation):
+
+  - roots: functions decorated with ``jit``/``pallas_call`` (bare,
+    dotted, or inside ``functools.partial``), functions passed as
+    arguments to a ``jit(...)``/``pallas_call(...)`` call, and pallas
+    kernel bodies (first argument of ``pallas_call``);
+  - reachability: same-module calls by bare name (``f(...)``) or self
+    method (``self.f(...)``) are followed transitively;
+  - inside reachable functions, flag: ``time.*`` calls, ``random.*`` /
+    ``np.random.*`` calls, ``global`` declarations (module-global
+    mutation), and ``float()/int()/bool()`` applied to an expression
+    containing one of the function's own parameters — unless that
+    parameter is listed in the root's ``static_argnames`` (static args
+    are Python values, casting them is fine).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.sacheck.core import CheckContext, Finding, attribute_chain
+
+NAME = "jit-purity"
+
+_JIT_NAMES = {"jit", "pallas_call"}
+_CAST_NAMES = {"float", "int", "bool"}
+
+
+def _callable_name(node: ast.AST) -> str:
+    """Trailing name of a possibly-dotted callable expression."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            vals: Set[str] = set()
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    vals.add(n.value)
+            return vals
+    return set()
+
+
+class _ModuleIndex:
+    """Functions of one module, jit roots, and the bare-name call graph."""
+
+    def __init__(self, tree: ast.Module):
+        self.funcs: Dict[str, ast.FunctionDef] = {}
+        self.roots: Dict[str, Set[str]] = {}   # fn name -> static argnames
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.funcs.setdefault(node.name, node)
+        # decorator roots: @jax.jit / @functools.partial(jax.jit, ...)
+        for name, fn in self.funcs.items():
+            for dec in fn.decorator_list:
+                statics: Set[str] = set()
+                hit = _callable_name(dec) in _JIT_NAMES
+                if isinstance(dec, ast.Call):
+                    if _callable_name(dec.func) in _JIT_NAMES:
+                        hit = True
+                        statics = _static_argnames(dec)
+                    else:  # partial(jax.jit, static_argnames=...)
+                        for a in dec.args:
+                            if _callable_name(a) in _JIT_NAMES:
+                                hit = True
+                        if hit:
+                            statics = _static_argnames(dec)
+                if hit:
+                    self._add_root(name, statics)
+        # call-site roots: jax.jit(f), pl.pallas_call(kernel, ...),
+        # jit(functools.partial(f, ...))
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and _callable_name(node.func) in _JIT_NAMES):
+                statics = _static_argnames(node)
+                for arg in node.args:
+                    if isinstance(arg, ast.Call):  # partial(f, ...)
+                        args: List[ast.AST] = list(arg.args)
+                    else:
+                        args = [arg]
+                    for a in args:
+                        if isinstance(a, ast.Name) and a.id in self.funcs:
+                            self._add_root(a.id, statics)
+
+    def _add_root(self, name: str, statics: Set[str]) -> None:
+        self.roots.setdefault(name, set()).update(statics)
+
+    def reachable(self) -> Dict[str, Set[str]]:
+        """fn name -> static argnames inherited from the nearest root."""
+        seen: Dict[str, Set[str]] = {}
+        stack = list(self.roots.items())
+        while stack:
+            name, statics = stack.pop()
+            if name in seen:
+                continue
+            seen[name] = statics
+            fn = self.funcs.get(name)
+            if fn is None:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                callee = None
+                if isinstance(f, ast.Name) and f.id in self.funcs:
+                    callee = f.id
+                elif (isinstance(f, ast.Attribute)
+                      and isinstance(f.value, ast.Name)
+                      and f.value.id == "self" and f.attr in self.funcs):
+                    callee = f.attr
+                if callee is not None and callee not in seen:
+                    # statics only shield the ROOT's own parameters;
+                    # callees see traced values
+                    stack.append((callee, set()))
+        return seen
+
+
+def _check_function(ctx: CheckContext, path: str, fn: ast.FunctionDef,
+                    statics: Set[str]) -> List[Finding]:
+    out: List[Finding] = []
+    params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                              + fn.args.kwonlyargs)} - {"self"} - statics
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Global):
+            out.append(ctx.finding(
+                NAME, path, node.lineno, "global-mutation",
+                f"`global` inside jit-reachable `{fn.name}` — module "
+                f"state mutated at trace time is frozen into the "
+                f"compiled graph"))
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attribute_chain(node.func)
+        if chain[:1] == ["time"]:
+            out.append(ctx.finding(
+                NAME, path, node.lineno, "time-call",
+                f"time.{chain[-1]} inside jit-reachable `{fn.name}` "
+                f"runs once at trace time, not per step"))
+        elif (chain[:1] == ["random"]
+              or chain[:2] in (["np", "random"], ["numpy", "random"])):
+            out.append(ctx.finding(
+                NAME, path, node.lineno, "rng-call",
+                f"Python-side RNG ({'.'.join(chain)}) inside "
+                f"jit-reachable `{fn.name}` is evaluated at trace time "
+                f"— use jax.random with a threaded key"))
+        elif (isinstance(node.func, ast.Name)
+              and node.func.id in _CAST_NAMES and node.args):
+            used = _names_in(node.args[0]) & params
+            if used:
+                out.append(ctx.finding(
+                    NAME, path, node.lineno, "traced-cast",
+                    f"{node.func.id}() applied to traced argument(s) "
+                    f"{sorted(used)} of jit-reachable `{fn.name}` — "
+                    f"concretizes the tracer (error or silent "
+                    f"recompile); keep it an array op or mark the "
+                    f"argument static"))
+    return out
+
+
+def run(ctx: CheckContext) -> List[Finding]:
+    out: List[Finding] = []
+    for rel, sf in ctx.files.items():
+        if sf.tree is None or not rel.startswith("src/"):
+            continue
+        idx = _ModuleIndex(sf.tree)
+        if not idx.roots:
+            continue
+        for name, statics in sorted(idx.reachable().items()):
+            fn = idx.funcs.get(name)
+            if fn is not None:
+                out.extend(_check_function(ctx, rel, fn, statics))
+    return out

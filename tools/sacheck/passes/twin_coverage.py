@@ -1,0 +1,109 @@
+"""twin-coverage: every serving-relevant ``SACConfig`` knob must have a
+``SimConfig`` twin with a MATCHING NAME and a ``launch/serve.py`` flag.
+
+Why this invariant exists: the engine (real jitted decode) and the
+simulator (analytic event loop) are deliberate twins — every PR's
+acceptance rests on parity tests that run the same knob through both.
+A knob that exists on one side only, or under a different name, silently
+falls out of the parity harness: the next person sweeps
+``replicate_horizon_steps`` on the engine and ``replicate_horizon`` on
+the simulator and compares incomparable runs.  Exceptions are allowed
+but must be *justified* in tools/sacheck/config.py (twin_renames /
+twin_non_serving / flag_renames / flag_exempt) — and a justification
+whose subject disappeared is itself reported (stale-allowlist), so the
+allowlist cannot rot.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.sacheck.core import (CheckContext, Finding, dataclass_fields)
+
+NAME = "twin-coverage"
+
+
+def _serve_flags(tree: ast.Module) -> Set[str]:
+    flags: Set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"):
+            for arg in node.args:
+                if (isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)
+                        and arg.value.startswith("--")):
+                    flags.add(arg.value)
+    return flags
+
+
+def run(ctx: CheckContext) -> List[Finding]:
+    cfg = ctx.config
+    out: List[Finding] = []
+
+    sac_sf = ctx.file(cfg.sac_config_path)
+    sim_sf = ctx.file(cfg.sim_config_path)
+    serve_sf = ctx.file(cfg.serve_path)
+    for path, sf in ((cfg.sac_config_path, sac_sf),
+                     (cfg.sim_config_path, sim_sf),
+                     (cfg.serve_path, serve_sf)):
+        if sf is None or sf.tree is None:
+            out.append(Finding(NAME, path, 1, "missing-file",
+                               f"twin-coverage needs {path} but it is "
+                               "absent or unparsable"))
+    if any(sf is None or sf.tree is None
+           for sf in (sac_sf, sim_sf, serve_sf)):
+        return out
+
+    sac_fields = dataclass_fields(sac_sf.tree, cfg.sac_config_class)
+    sim_fields = {n for n, _ in dataclass_fields(sim_sf.tree,
+                                                 cfg.sim_config_class)}
+    flags = _serve_flags(serve_sf.tree)
+    if not sac_fields:
+        out.append(Finding(NAME, cfg.sac_config_path, 1, "missing-class",
+                           f"class {cfg.sac_config_class} has no fields "
+                           "(or was renamed away)"))
+        return out
+
+    sac_names = {n for n, _ in sac_fields}
+    for name, line in sac_fields:
+        if name in cfg.twin_non_serving:
+            continue
+        # --- SimConfig twin ---
+        if name in cfg.twin_renames:
+            twin, why = cfg.twin_renames[name]
+            if twin is not None and twin not in sim_fields:
+                out.append(ctx.finding(
+                    NAME, cfg.sac_config_path, line, "stale-rename",
+                    f"SACConfig.{name} is allowlisted as twinned to "
+                    f"SimConfig.{twin}, but that field no longer exists "
+                    f"(justification was: {why})"))
+        elif name not in sim_fields:
+            out.append(ctx.finding(
+                NAME, cfg.sac_config_path, line, "missing-twin",
+                f"serving knob SACConfig.{name} has no SimConfig field "
+                f"of the same name — add the analytic twin, or justify "
+                f"the asymmetry in tools/sacheck/config.py twin_renames"))
+        # --- serve.py flag ---
+        if name in cfg.flag_exempt:
+            continue
+        flag = cfg.flag_renames.get(name, "--" + name.replace("_", "-"))
+        if flag not in flags:
+            out.append(ctx.finding(
+                NAME, cfg.sac_config_path, line, "missing-flag",
+                f"serving knob SACConfig.{name} is not settable from "
+                f"launch/serve.py (expected {flag}) — add the flag or "
+                f"justify in flag_exempt"))
+
+    # --- stale allowlist entries (the allowlist must not rot) ---
+    for table, code in ((cfg.twin_non_serving, "stale-allowlist"),
+                        (cfg.twin_renames, "stale-allowlist"),
+                        (cfg.flag_renames, "stale-allowlist"),
+                        (cfg.flag_exempt, "stale-allowlist")):
+        for name in table:
+            if name not in sac_names:
+                out.append(Finding(
+                    NAME, cfg.sac_config_path, 1, code,
+                    f"allowlist entry for SACConfig.{name} is stale — "
+                    "the field no longer exists; drop the entry"))
+    return out

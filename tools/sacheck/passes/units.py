@@ -1,0 +1,127 @@
+"""unit-suffix: accounting/config attributes carry their unit in their
+name (``_s`` seconds, ``_bytes``, ``_tokens``, ``_frac``), and
+additive arithmetic must not mix two different unit suffixes.
+
+Why this invariant exists: the whole modeled-performance story is
+numbers flowing between layers — fabric seconds, demand bytes, token
+counts, budget fractions.  A classic drift bug is adding a seconds
+counter to a bytes counter (both plain floats, both "demand"), which no
+type checker catches.  The suffix convention makes the unit part of the
+name; this pass enforces it where it is mechanically checkable:
+
+  - ``a_s + b_bytes`` (or ``-``, ``+=``, ``-=``, or a comparison)
+    between two expressions whose inferred suffixes DIFFER is flagged.
+  - multiplication/division are treated as explicit conversions
+    (``bytes / bandwidth`` is how you turn bytes into seconds) and
+    reset the inferred unit.
+
+Inference is name-based and conservative: an expression with no
+recognizable suffix has unknown unit and never participates in a
+violation, so the pass has no opinion about ``t + dur`` — only about
+provably mixed units.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.sacheck.core import CheckContext, Finding
+
+NAME = "units"
+
+#: order matters: match the longest suffix first ("_bytes" before "_s"
+#: is irrelevant here, but "_s" must not swallow e.g. "_tokens")
+_AGG_FUNCS = {"max", "min", "sum", "abs", "sorted"}
+
+
+def _suffix_unit(name: str, suffixes) -> Optional[str]:
+    for suf in sorted(suffixes, key=len, reverse=True):
+        if name.endswith(suf) and len(name) > len(suf):
+            return suf
+    return None
+
+
+def _unit(node: ast.AST, suffixes) -> Optional[str]:
+    """Inferred unit suffix of an expression, or None when unknown."""
+    if isinstance(node, ast.Name):
+        return _suffix_unit(node.id, suffixes)
+    if isinstance(node, ast.Attribute):
+        return _suffix_unit(node.attr, suffixes)
+    if isinstance(node, ast.Subscript):
+        return _unit(node.value, suffixes)
+    if isinstance(node, ast.UnaryOp):
+        return _unit(node.operand, suffixes)
+    if isinstance(node, ast.BinOp):
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            lu = _unit(node.left, suffixes)
+            ru = _unit(node.right, suffixes)
+            # additive: the unit propagates through unknown operands
+            # (consistency of known operands is checked by the visitor)
+            return lu or ru
+        return None          # *, /, etc. convert units
+    if isinstance(node, ast.Call):
+        f = node.func
+        fname = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else "")
+        if fname in _AGG_FUNCS:
+            units = [_unit(a, suffixes) for a in node.args
+                     if not isinstance(a, (ast.GeneratorExp, ast.Starred))]
+            known = [u for u in units if u is not None]
+            if known and all(u == known[0] for u in known):
+                return known[0]
+            return None
+        # a call's unit is declared by its name: model.prefill_s(ctx)
+        # returns seconds, stats.segment_demand_s() returns seconds
+        return _suffix_unit(fname, suffixes)
+    if isinstance(node, ast.IfExp):
+        return (_unit(node.body, suffixes)
+                or _unit(node.orelse, suffixes))
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, ctx: CheckContext, path: str):
+        self.ctx = ctx
+        self.path = path
+        self.suffixes = ctx.config.unit_suffixes
+        self.findings: List[Finding] = []
+
+    def _check_pair(self, a: ast.AST, b: ast.AST, node: ast.AST,
+                    what: str) -> None:
+        ua = _unit(a, self.suffixes)
+        ub = _unit(b, self.suffixes)
+        if ua is not None and ub is not None and ua != ub:
+            self.findings.append(self.ctx.finding(
+                NAME, self.path, node.lineno, "unit-mix",
+                f"{what} mixes units {ua} and {ub} without an explicit "
+                f"conversion (multiply/divide by a rate, or rename one "
+                f"side to its true unit)"))
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            self._check_pair(node.left, node.right, node,
+                             "additive arithmetic")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            self._check_pair(node.target, node.value, node,
+                             "augmented assignment")
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        operands = [node.left] + list(node.comparators)
+        for a, b in zip(operands, operands[1:]):
+            self._check_pair(a, b, node, "comparison")
+        self.generic_visit(node)
+
+
+def run(ctx: CheckContext) -> List[Finding]:
+    out: List[Finding] = []
+    for rel, sf in ctx.files.items():
+        if sf.tree is None or not rel.startswith("src/"):
+            continue
+        v = _Visitor(ctx, rel)
+        v.visit(sf.tree)
+        out.extend(v.findings)
+    return out
