@@ -16,7 +16,11 @@
 #                    serving envelope (benchmarks/serving_gate.py:
 #                    arrival-anchored TTFT honest, chunked prefill
 #                    bounds the p99 worst token gap, disagg decode
-#                    never stalls on prompts)
+#                    never stalls on prompts), then the golden-parity
+#                    gate (benchmarks/golden_gate.py: every re-run
+#                    BENCH_*.json bit-identical to its committed
+#                    snapshot under benchmarks/golden/ — refactors
+#                    move code, never numbers)
 #   make lint        sacheck (5 repo-invariant AST passes: twin-coverage,
 #                    units, accounting-boundary, jit-purity, determinism;
 #                    writes sacheck_report.json, new findings fail) +
@@ -48,6 +52,7 @@ bench-smoke:
 	python -m benchmarks.fabric_gate
 	python -m benchmarks.serving_sweep --quick
 	python -m benchmarks.serving_gate
+	python -m benchmarks.golden_gate
 
 lint:
 	python -m tools.sacheck --json sacheck_report.json

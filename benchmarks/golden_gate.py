@@ -1,0 +1,109 @@
+"""Golden-parity gate (PR 10): the bench-smoke sweeps must reproduce
+their committed snapshots BIT-EXACTLY.
+
+``make bench-smoke`` re-runs every quick sweep from scratch and writes
+``BENCH_*.json`` at the repo root; this gate — the target's last step —
+compares each artifact against its snapshot under ``benchmarks/golden/``
+and fails (nonzero exit) on ANY differing leaf.  Every layer under test
+is deterministic (virtual clocks, seeded traces, analytic models), so
+equality here is exact — no tolerances: a control-plane refactor like
+the PR 10 policy extraction may move code, never numbers, and a
+one-ulp drift in a gate metric is a behavior change someone must own.
+
+When a PR DELIBERATELY changes modeled behavior, regenerate the
+snapshots and commit them with the change:
+
+    make bench-smoke && cp BENCH_*.json benchmarks/golden/
+
+Usage: ``python -m benchmarks.golden_gate [--golden-dir benchmarks/golden]``
+"""
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+GOLDEN_DIR = REPO / "benchmarks" / "golden"
+
+
+def _leaves(node, prefix=""):
+    """Flatten a JSON document into (path, value) pairs."""
+    if isinstance(node, dict):
+        for k in sorted(node):
+            yield from _leaves(node[k], f"{prefix}/{k}")
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _leaves(v, f"{prefix}[{i}]")
+    else:
+        yield prefix, node
+
+
+def _equal(a, b) -> bool:
+    if isinstance(a, float) and isinstance(b, float):
+        # bit-identity, except NaN compares equal to itself
+        return a == b or (math.isnan(a) and math.isnan(b))
+    return type(a) is type(b) and a == b
+
+
+def diff(golden, fresh, limit: int = 5):
+    """Leaf-level differences between two JSON documents (at most
+    ``limit`` reported, plus a count of the remainder)."""
+    g = dict(_leaves(golden))
+    f = dict(_leaves(fresh))
+    out = []
+    for path in sorted(set(g) | set(f)):
+        if path not in f:
+            out.append(f"  {path}: missing from fresh run (was {g[path]!r})")
+        elif path not in g:
+            out.append(f"  {path}: new leaf {f[path]!r} not in golden")
+        elif not _equal(g[path], f[path]):
+            out.append(f"  {path}: golden {g[path]!r} != fresh {f[path]!r}")
+    if len(out) > limit:
+        out = out[:limit] + [f"  ... and {len(out) - limit} more"]
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--golden-dir", default=str(GOLDEN_DIR))
+    ap.add_argument("--fresh-dir", default=str(REPO),
+                    help="where the sweeps wrote BENCH_*.json")
+    args = ap.parse_args(argv)
+    golden_dir = pathlib.Path(args.golden_dir)
+    fresh_dir = pathlib.Path(args.fresh_dir)
+
+    goldens = sorted(golden_dir.glob("BENCH_*.json"))
+    if not goldens:
+        print(f"golden gate: no snapshots under {golden_dir} — run "
+              "`make bench-smoke && cp BENCH_*.json benchmarks/golden/`")
+        return 1
+    failures = []
+    for gpath in goldens:
+        fpath = fresh_dir / gpath.name
+        if not fpath.exists():
+            failures.append(f"{gpath.name}: fresh artifact missing "
+                            f"(sweep did not run?)")
+            continue
+        golden = json.loads(gpath.read_text())
+        fresh = json.loads(fpath.read_text())
+        lines = diff(golden, fresh)
+        if lines:
+            failures.append(f"{gpath.name}: {len(lines)} differing "
+                            "leaves\n" + "\n".join(lines))
+        else:
+            print(f"golden gate: {gpath.name} bit-identical "
+                  f"({sum(1 for _ in _leaves(golden))} leaves)  OK")
+    if failures:
+        print("golden gate: FAIL")
+        for f in failures:
+            print(f)
+        print("(deliberate behavior change? regenerate: make bench-smoke"
+              " && cp BENCH_*.json benchmarks/golden/)")
+        return 1
+    print("golden gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

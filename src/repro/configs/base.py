@@ -145,6 +145,23 @@ class SACConfig:
     prefill_lanes: int = 2           # concurrent prefill lanes of the
                                      # disaggregated prefill engine
 
+    # --- PR 10: shared admission policy (serving/policy/admission.py) ---
+    admission: Optional[str] = None  # queue-ordering policy: None keeps
+                                     # the legacy mapping (radix when
+                                     # radix_admission is on, else fcfs);
+                                     # "fcfs" | "radix" | "edf"
+    slo_ttft_s: float = 0.0          # TTFT SLO target (seconds): EDF
+                                     # admission orders by arrival_s +
+                                     # slo_ttft_s; also the default
+                                     # attainment target reported by
+                                     # summarize()
+    shed_queue_depth: int = 0        # > 0 (EDF only): drop the arrived
+                                     # backlog beyond this many earliest-
+                                     # deadline waiting requests — shed
+                                     # requests never decode, keeping
+                                     # admitted deadlines reachable under
+                                     # saturation
+
 
 # ---------------------------------------------------------------------------
 # Model architecture configuration

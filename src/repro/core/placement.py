@@ -307,7 +307,10 @@ class Placer:
         """Attach the live per-device pressure source (demand fabric
         seconds per link, e.g. ``TrafficStats.device_demand_s()`` step
         deltas).  The feed is read at ``place`` time, so placement always
-        sees the freshest pressure the serving layer measured."""
+        sees the freshest pressure the serving layer measured.  In both
+        serving layers the attached callable is the shared
+        :class:`repro.serving.policy.PressureFeed` over a
+        ``DemandTracker`` (serving/arbiter.py)."""
         self._pressure_fn = fn
 
     def note_pressure_update(self) -> None:

@@ -268,7 +268,11 @@ class SACSystem:
     # -- placement ---------------------------------------------------------
     def set_pressure_fn(self, fn) -> None:
         """Attach the live per-device link-pressure feed the
-        ``pressure_aware`` placement policy reads (core/placement.py)."""
+        ``pressure_aware`` placement policy reads (core/placement.py).
+        Both serving layers wire the shared
+        :class:`repro.serving.policy.PressureFeed` in here — tracker
+        demand plus the warm-up seed while its window is open — so the
+        engine's and the simulator's placers consume one feed class."""
         self.placer.set_pressure_fn(fn)
 
     def note_pressure_update(self) -> None:

@@ -99,6 +99,21 @@ def main():
                          "waiting request with the longest cached-"
                          "prefix match first (FCFS tie-break) instead "
                          "of strict FCFS")
+    ap.add_argument("--admission", default=None,
+                    choices=["fcfs", "radix", "edf"],
+                    help="admission policy (PR 10, serving/policy/"
+                         "admission.py): fcfs = submission order, "
+                         "radix = longest cached-prefix match first, "
+                         "edf = earliest TTFT deadline (arrival_s + "
+                         "--slo-ttft) first with optional load "
+                         "shedding; default = radix when "
+                         "--radix-admission is set, else fcfs")
+    ap.add_argument("--shed-queue-depth", type=int, default=None,
+                    help="EDF load shedding (PR 10): drop the arrived "
+                         "backlog beyond this many earliest-deadline "
+                         "waiting requests — shed requests never "
+                         "decode (default cfg.sac.shed_queue_depth; "
+                         "0 = off)")
     ap.add_argument("--topology", default=None,
                     help="CXL fabric topology spec (PR 7, core/"
                          "fabric.py): e.g. 'tree:4x2' (4 devices "
@@ -213,10 +228,15 @@ def main():
                   "warmup_radix", "link_budget_frac",
                   "min_prefetch_width", "score_margin",
                   "radix_headroom_frac", "replicate_horizon_steps",
-                  "resize_epsilon"):
+                  "resize_epsilon", "admission", "shed_queue_depth"):
         val = getattr(args, field)
         if val is not None:
             overrides[field] = val
+    if args.slo_ttft > 0:
+        # the EDF admission deadline and the summarize() attainment
+        # target are the same knob — one SLO, consumed once through
+        # the shared admission policy
+        overrides["slo_ttft_s"] = args.slo_ttft
     if args.precision_weighted or args.resize_interval:
         overrides.update(precision_weighted=args.precision_weighted,
                          resize_interval=args.resize_interval)

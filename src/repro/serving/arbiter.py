@@ -68,6 +68,12 @@ class DemandTracker:
       - :meth:`set_step` (simulator): the analytic per-step seconds are
         computed directly, no cumulative counters needed.
 
+    Downstream, ``last_demand_s`` is not read raw by the placers: both
+    layers wrap the tracker in the shared
+    :class:`repro.serving.policy.PressureFeed` (PR 10), which overlays
+    the warm-up pressure seed while its window is open and hands the
+    result to ``Placer.set_pressure_fn`` and the arbiter alike.
+
     With a :class:`~repro.core.fabric.FabricTopology` attached (PR 7) the
     tracked slot space is the fabric's SEGMENTS, not devices: ``observe``
     reads ``TrafficStats.segment_demand_s()``, ``note_transfer`` books a

@@ -54,6 +54,10 @@ from repro.models.transformer import kv_layer_windows
 from repro.serving.arbiter import (ArbiterConfig, BudgetArbiter,
                                    DemandTracker, LayerSizer,
                                    resize_allocation_width)
+from repro.serving.policy import (LocalityBonus, PrefillSchedule,
+                                  PressureFeed, RadixAdmission,
+                                  ReplicationPolicy, WarmupPressureSeed,
+                                  make_admission)
 from repro.serving.prefetch import FetchPlanner, cap_warmup
 from repro.serving.radix import RadixIndex
 from repro.serving.request import Request, summarize
@@ -86,6 +90,9 @@ class EngineStats:
                                     # to a less-pressured replica device
                                     # instead of the slot's own (PR 7
                                     # replica-aware grants)
+    shed_requests: int = 0          # requests dropped by EDF load
+                                    # shedding before admission (PR 10
+                                    # SLO-aware admission policy)
     traffic: TrafficStats = dataclasses.field(default_factory=TrafficStats)
     # measured per-layer hot-tier outcomes ([L] arrays, accumulated per
     # step) — the LayerSizer's miss-rate signal (serving/arbiter.py)
@@ -283,6 +290,8 @@ class Engine:
                  replicate_prefixes: Optional[bool] = None,
                  dedup_pages: Optional[bool] = None,
                  radix_admission: Optional[bool] = None,
+                 admission: Optional[str] = None,
+                 shed_queue_depth: Optional[int] = None,
                  topology=None,
                  warmup_pressure_seed: Optional[bool] = None,
                  replica_reads: Optional[bool] = None,
@@ -325,11 +334,6 @@ class Engine:
                              topology=(topology if topology is not None
                                        else cfg.sac.topology))
         self.topology = self.sac.topology
-        # live link-pressure feed for pressure_aware / radix_affinity
-        # placement: the placer reads last step's measured per-device
-        # demand seconds at place time (no-op under pressure-blind
-        # policies)
-        self.sac.set_pressure_fn(lambda: self._last_demand_s)
         # radix prefix cache: the SACSystem owns its page lifecycle
         # (retention at finish, eviction under pressure, purge on free)
         self.radix = (RadixIndex(page_size=cfg.sac.page_size)
@@ -342,9 +346,23 @@ class Engine:
              else replicate_prefixes) and has_radix)
         self.dedup_on = bool((cfg.sac.dedup_pages if dedup_pages is None
                               else dedup_pages) and has_radix)
-        self.admission_on = bool(
-            (cfg.sac.radix_admission if radix_admission is None
-             else radix_admission) and has_radix)
+        # admission policy (serving/policy/admission.py): the ONE
+        # arrival-gate + queue-ordering + shedding object shared with
+        # the simulator twin and the analytic replay.  name=None keeps
+        # the legacy mapping (radix when the PR 6 knob is on, else
+        # FCFS); "edf" adds SLO-aware ordering + optional load shedding
+        self.admission_policy = make_admission(
+            cfg.sac.admission if admission is None else admission,
+            radix_admission=bool(
+                cfg.sac.radix_admission if radix_admission is None
+                else radix_admission),
+            slo_ttft_s=float(cfg.sac.slo_ttft_s),
+            shed_queue_depth=int(
+                cfg.sac.shed_queue_depth if shed_queue_depth is None
+                else shed_queue_depth),
+            score_fn=self._radix_score, has_radix=has_radix)
+        self.admission_on = isinstance(self.admission_policy,
+                                       RadixAdmission)
         # PR 7 satellites: warm-up-only pressure seeding (the feed is
         # silent before the first decode step — seed it from BOOKED
         # demand so wave-1 admissions stop herding; always-on regresses
@@ -413,6 +431,26 @@ class Engine:
         # DemandTracker): the pressure feed subtracts a finishing
         # request's own share from its link immediately at departure
         self._demand = DemandTracker(self.sac.n_devices, self.topology)
+        # shared control-plane objects (serving/policy/): the SAME
+        # classes the simulator twin and the analytic replay construct,
+        # so parity tests assert object identity instead of float
+        # agreement.  The pressure feed is wired here (not earlier)
+        # because it closes over the demand tracker; no placement can
+        # have happened yet, so the placer never saw the gap.
+        self.warm_seed = WarmupPressureSeed(
+            self.warm_seed_on, len(self._demand.last_demand_s))
+        self.pressure_feed = PressureFeed(
+            self._demand, self.warm_seed,
+            booked_fn=lambda: self.stats.traffic.segment_demand_s())
+        self.sac.set_pressure_fn(self.pressure_feed)
+        self.replication = ReplicationPolicy(
+            horizon_steps=int(cfg.sac.replicate_horizon_steps))
+        self.locality_bonus = LocalityBonus(
+            prefill_s=self.profile.prefill_s,
+            write_s=self._prefix_write_s)
+        self.prefill_schedule = PrefillSchedule.from_knobs(
+            self.disagg_on, self.chunk_tokens, self.prefill_lanes)
+        self.shed: List[Request] = []
         if self.arbiter_on:
             self.arbiter = BudgetArbiter.from_fabric(
                 ArbiterConfig(max_width=int(cfg.sac.prefetch_width),
@@ -482,20 +520,27 @@ class Engine:
         """Last step's per-SEGMENT demand seconds (departures already
         subtracted) — the arbiter's and the placer's pressure signal
         (the placer projects each device's path bottleneck from it).
+        Delegates to the shared :class:`PressureFeed` (the same object
+        wired into ``set_pressure_fn``): the PR 7 warm-up-only seeding
+        window — booked prefill-write demand overlaid before the first
+        decode step only — lives once, in serving/policy/seeding.py."""
+        return self.pressure_feed()
 
-        Warm-up-only seeding (PR 7): before the FIRST decode step the
-        tracker has never observed, so the feed is silent exactly while
-        wave-1 admissions are herding onto the prefix owner.  With
-        ``warmup_pressure_seed`` on, the cumulative BOOKED demand
-        (prefill writes already charged this fill wave) is added during
-        that window only.  No double count: the tracker's first
-        ``observe`` delta includes the warm-up traffic, and by then
-        ``stats.steps > 0`` so seeding is off."""
-        base = self._demand.last_demand_s
-        if self.warm_seed_on and self.stats.steps == 0:
-            booked = self.stats.traffic.segment_demand_s()
-            return [b + x for b, x in zip(base, booked)]
-        return base
+    def _radix_score(self, req: Request) -> int:
+        """Radix-admission score: this request's page-granular match
+        length against the CURRENT tree (the admission policy's
+        ``score_fn``)."""
+        return self.radix.match(
+            req.prompt_tokens[: req.context_len].tolist()).paged_tokens
+
+    def _prefix_write_s(self, matched: int) -> float:
+        """Pool-write seconds the matched prefix tokens skip — the
+        engine-native cost the shared :class:`LocalityBonus` formula
+        is bound to (the simulator binds its analytic striped-pool
+        write bandwidth instead)."""
+        return self.sac.fabric.bulk_transfer_time(
+            matched * self.sac.entry_bytes
+            * max(self.cfg.n_attn_layers, 1))
 
     # -- submission --------------------------------------------------------------
     def submit(self, req: Request):
@@ -540,40 +585,39 @@ class Engine:
         """Seconds a same-device radix hit saves: the matched tokens'
         modeled prefill compute plus their skipped pool write — the
         ``affinity_s`` weight the radix_affinity placement policy holds
-        against live link pressure."""
-        if matched <= 0:
-            return 0.0
-        saved_write = (matched * self.sac.entry_bytes
-                       * max(self.cfg.n_attn_layers, 1))
-        return (self.profile.prefill_s(prompt_len)
-                - self.profile.prefill_s(prompt_len - matched)
-                + self.sac.fabric.bulk_transfer_time(saved_write))
+        against live link pressure.  The FORMULA is the shared
+        :class:`LocalityBonus` (serving/policy/locality.py) — the
+        simulator's ``_bonus_s`` binds the same object to its analytic
+        costs."""
+        return self.locality_bonus(prompt_len, matched)
 
     def _eligible_indices(self) -> List[int]:
         """Queue indices whose requests have ARRIVED on the virtual
         clock — the open-loop admission gate (PR 8).  Before it,
         _fill_slots popped the queue FCFS regardless of ``arrival_s``,
         so every open-loop trace was silently served as if all requests
-        arrived at t=0 and arrival-anchored TTFT was meaningless."""
-        return [i for i, r in enumerate(self.queue)
-                if r.arrival_s <= self.clock_s + 1e-12]
+        arrived at t=0 and arrival-anchored TTFT was meaningless.
+        Delegates to the shared admission policy's arrival gate."""
+        return self.admission_policy.eligible(self.queue, self.clock_s)
 
     def _pick_queue_index(self, eligible: List[int]) -> int:
-        """Radix-aware admission among the ARRIVED requests: the one
-        with the longest page-granular match against the CURRENT tree
-        goes first (strict ``>`` keeps FCFS as the tie-break), so
-        batches sharing a prefix land together while the copy is hot.
-        FCFS when the knob is off or the choice is trivial."""
-        if not self.admission_on or len(eligible) <= 1:
-            return eligible[0]
-        best, best_score = eligible[0], -1
-        for i in eligible:
-            req = self.queue[i]
-            m = self.radix.match(
-                req.prompt_tokens[: req.context_len].tolist())
-            if m.paged_tokens > best_score:
-                best, best_score = i, m.paged_tokens
-        return best
+        """The next queue index to admit among the ARRIVED requests —
+        the shared policy's ``select``: FCFS by default, longest radix
+        match first under radix admission, earliest deadline first
+        under EDF (ties always break FCFS)."""
+        return self.admission_policy.select(self.queue, eligible)
+
+    def _shed_waiting(self):
+        """Load shedding (EDF + ``shed_queue_depth``): drop the arrived
+        backlog beyond the policy's keep set BEFORE admission.  Shed
+        requests leave the queue and never decode — they stay on
+        ``self.shed`` (and out of summarize(), which only counts
+        finished requests)."""
+        drop = self.admission_policy.shed(self.queue, self.clock_s)
+        for i in reversed(drop):
+            self.shed.append(self.queue.pop(i))
+        if drop:
+            self.stats.shed_requests = len(self.shed)
 
     def _prefill_inflight(self) -> bool:
         """Any admitted prefill not yet spliced into a decode slot —
@@ -600,27 +644,25 @@ class Engine:
         going to the least-pressured copy-free link (never a hotter
         one).  Per-step backlog on the owning link must cover the bulk
         copy's per-step share, or a lightly-loaded fabric would
-        replicate everything for nothing.  Returns the re-match
-        (placement must see the new copy) or None."""
+        replicate everything for nothing.  The (src, dst) pick and the
+        fire/hold predicate are the shared :class:`ReplicationPolicy`
+        (serving/policy/replication.py) — the simulator twin consumes
+        the same object.  Returns the re-match (placement must see the
+        new copy) or None."""
         pressure = self.sac.placer.corrected_pressure()
         holders = [d for d in m.copies if 0 <= d < self.sac.n_devices]
         others = [d for d in range(self.sac.n_devices)
                   if d not in m.copies]
-        if not holders or not others:
+        pick = self.replication.pick(pressure, holders, others,
+                                     self.sac.placer.bytes_used)
+        if pick is None:
             return None
-        placer = self.sac.placer
-        src = min(holders, key=lambda d: pressure[d])
-        # ties (cold start: every link reads 0) break on booked bytes,
-        # then device id — a bare min() would funnel every group's
-        # first copy onto device 0
-        dst = min(others, key=lambda d: (pressure[d],
-                                         placer.bytes_used[d], d))
+        src, dst = pick
         n_pages = len(m.copies[src])
         copy_cost = self.sac.replica_copy_cost_s(n_pages)
         bonus = self._locality_bonus_s(prompt_len, m.paged_tokens)
-        horizon = max(int(self.cfg.sac.replicate_horizon_steps), 1)
-        if (bonus < copy_cost or pressure[src] < pressure[dst]
-                or pressure[src] * horizon <= copy_cost):
+        if not self.replication.should_fire(pressure[src], pressure[dst],
+                                            bonus, copy_cost):
             return None
         if not self.sac.replicate_prefix(list(m.pin_tokens),
                                          m.copies[src], src, dst):
@@ -790,12 +832,16 @@ class Engine:
         virtual clock vs ``arrival_s`` in every mode.  Returns True
         when any prefill work progressed (slot filled, chunk advanced,
         lane started, or handoff adopted) — step() uses that to decide
-        whether an empty batch may jump the clock to the next event."""
-        if self.disagg_on:
+        whether an empty batch may jump the clock to the next event.
+        Mode dispatch goes through the shared :class:`PrefillSchedule`
+        (serving/policy/prefill.py), the same object the replay's
+        ``fill()`` reads."""
+        self._shed_waiting()
+        if self.prefill_schedule.disagg:
             adopted = self._adopt_handoffs()
             started = self._start_prefill_lanes()
             return adopted or started
-        if self.chunk_tokens > 0:
+        if self.prefill_schedule.chunked:
             created = self._create_chunk_jobs()
             advanced = self._advance_chunk_jobs()
             return created or advanced
@@ -869,7 +915,8 @@ class Engine:
             job = self._jobs[s]
             if job is None:
                 continue
-            take = min(self.chunk_tokens, job.effective - job.done_tokens)
+            take = self.prefill_schedule.chunk_take(
+                job.effective - job.done_tokens)
             issued0 = self.stats.traffic.fabric_time_s
             if take > 0:
                 self.sac.write_back_time(take, device=job.req.pool_device,
@@ -1090,6 +1137,10 @@ class Engine:
                                               tokens)
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
         self.stats.steps += 1
+        # the first decode step closes the PR 7 warm-up seeding window:
+        # the tracker's first observe() below includes the warm-up
+        # traffic, so leaving the seed on would double-count it
+        self.warm_seed.deactivate()
 
         # fabric accounting per occupied slot
         issued0 = self.stats.traffic.fabric_time_s
@@ -1294,6 +1345,7 @@ class Engine:
                    replicated_pages=self.sac.replicated_pages,
                    dedup_shared_pages=self.sac.dedup_shared_pages,
                    replica_redirects=self.stats.replica_redirects,
+                   shed_requests=self.stats.shed_requests,
                    spec_yielded_s=self.stats.traffic.spec_yielded_s,
                    critical_demand_bytes=(
                        self.sac.traffic.stats.critical_demand_bytes),

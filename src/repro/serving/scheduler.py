@@ -17,6 +17,8 @@ from collections import deque
 from typing import Deque, Dict, List, Optional
 
 from repro.core.placement import Placer, policy_for_interleave
+from repro.serving.policy import (AdmissionPolicy, FCFSAdmission,
+                                  RadixAdmission)
 from repro.serving.request import Request
 
 
@@ -51,7 +53,13 @@ class Scheduler:
         self.hbm_bytes = 0.0
         self._affinity_fn = None
         self._admit_fn = None
-        self._reuse_fn = None
+        # admission policy (serving/policy/admission.py): the shared
+        # arrival gate + queue ordering + shedding object — the same
+        # classes the engine and the analytic replay construct
+        self.admission: AdmissionPolicy = FCFSAdmission()
+        # requests dropped by load shedding (EDF): removed from the
+        # queue before admission, never dispatched
+        self.shed_log: List[Request] = []
         # PR 6 dedup accounting: per-request booked bytes returned early
         # (refcount-shared with the cache) and the cumulative bytes ever
         # booked net of those shrinks — the simulator's pool-bytes-per-
@@ -89,14 +97,23 @@ class Scheduler:
         insert with placement."""
         self._admit_fn = fn
 
+    def set_admission_policy(self, policy: AdmissionPolicy) -> None:
+        """Install the shared admission policy consumed by
+        ``try_admit`` (arrival gate, queue ordering, load shedding) —
+        the identical object family the engine wires into its
+        ``_fill_slots``, so parity holds at the class level."""
+        self.admission = policy
+
     def set_reuse_fn(self, fn) -> None:
         """Attach the radix-admission scorer ``fn(req) -> float`` (the
         request's expected prefix reuse, e.g. its page-granular match
         length against the current tree).  When set, ``try_admit``
         stable-sorts the wait queue by descending score each wave —
         requests sharing a hot prefix land together; ties keep FCFS
-        order.  None restores pure FCFS."""
-        self._reuse_fn = fn
+        order.  None restores pure FCFS.  Back-compat wrapper over
+        :meth:`set_admission_policy`."""
+        self.admission = (FCFSAdmission() if fn is None
+                          else RadixAdmission(fn))
 
     def shrink_booking(self, req: Request, n_bytes: float) -> float:
         """Return part of an ACTIVE request's booking early (PR 6 page
@@ -130,23 +147,29 @@ class Scheduler:
         return (req.context_len + req.output_len) * self.cfg.bytes_per_token
 
     def try_admit(self, now_s: float) -> List[Request]:
-        """Admit queued requests while resources allow (FCFS, or by
-        descending expected reuse when a ``set_reuse_fn`` scorer is
-        attached — radix-aware admission, PR 6)."""
+        """Admit queued requests while resources allow, in the order the
+        shared admission policy dictates (FCFS by default, descending
+        expected reuse under radix admission, earliest deadline under
+        EDF — the stable sort means the policy can only ever PROMOTE,
+        never starve FCFS ties).  EDF load shedding drops the arrived
+        backlog beyond ``shed_queue_depth`` onto ``shed_log`` first."""
         admitted = []
-        if self._reuse_fn is not None and len(self.queue) > 1:
-            # stable sort: equal scores keep submission order, so the
-            # scorer can only ever PROMOTE reuse, never starve FCFS ties
-            ordered = sorted(enumerate(self.queue),
-                             key=lambda p: (-self._reuse_fn(p[1]), p[0]))
-            self.queue = deque(r for _, r in ordered)
+        drop = self.admission.shed(list(self.queue), now_s)
+        if drop:
+            q = list(self.queue)
+            for i in reversed(drop):
+                self.shed_log.append(q.pop(i))
+            self.queue = deque(q)
+        if len(self.queue) > 1:
+            self.queue = deque(self.admission.order(list(self.queue)))
         while self.queue and len(self.active) < self.cfg.concurrency:
             req = self.queue[0]
-            if req.arrival_s > now_s + 1e-12:
-                # defensive arrival gate (PR 8): simulate() only submits
-                # arrived requests, but a caller driving try_admit
-                # directly must never see a dispatch before arrival —
-                # the open-loop bug the engine's _fill_slots had
+            if not self.admission.arrived(req, now_s):
+                # the arrival gate (PR 8) now lives ONCE in the shared
+                # policy: simulate() only submits arrived requests, but
+                # a caller driving try_admit directly must never see a
+                # dispatch before arrival — the open-loop bug the
+                # engine's _fill_slots had
                 break
             need = self._kv_bytes(req)
             if self.local_bytes + need > self.cfg.local_dram_bytes:

@@ -58,6 +58,9 @@ from repro.core.transfer import PipelineModel, QOS_SPECULATIVE
 from repro.serving.arbiter import (ArbiterConfig, BudgetArbiter,
                                    DemandTracker, LayerSizer,
                                    resize_allocation_width)
+from repro.serving.policy import (LocalityBonus, PrefillSchedule,
+                                  PressureFeed, ReplicationPolicy,
+                                  WarmupPressureSeed, make_admission)
 from repro.serving.prefetch import analytic_prefetch, analytic_warmup
 from repro.serving.request import Request, summarize
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -307,6 +310,17 @@ class SimConfig:
                                        # prompt in one stall)
     slo_ttft_s: float = 0.0            # SLO targets forwarded to
     slo_tbt_s: float = 0.0             # summarize() attainment fractions
+    # --- PR 10: shared admission policy (SACConfig twins) ---
+    admission: Optional[str] = None    # queue-ordering policy: None keeps
+                                       # the legacy mapping (radix when
+                                       # radix_admission is on, else
+                                       # fcfs); "fcfs" | "radix" | "edf"
+                                       # (EDF deadline = arrival_s +
+                                       # slo_ttft_s)
+    shed_queue_depth: int = 0          # > 0 (EDF only): drop the arrived
+                                       # backlog beyond this many
+                                       # earliest-deadline waiting
+                                       # requests (never dispatched)
     # --- PR 7: CXL fabric topology (core/fabric.py) ---
     topology: Optional[str] = None     # fabric spec ("tree:NxS", "multi_
                                        # switch:NxS", "mesh:NxP", ...);
@@ -500,15 +514,12 @@ def simulate(reqs: List[Request], model: ModelProfile,
     # PR 7 satellite (engine twin): before the first decode step the
     # demand feed is silent, so wave-1 admissions herd onto the prefix
     # owner — seed the feed with each admission's BOOKED prefill-write
-    # demand until the first real measurement lands
-    warm_seed = [0.0] * n_slots
-    _seed_on = [bool(sim.warmup_pressure_seed)]
-
-    def _pressure():
-        if _seed_on[0]:
-            return [b + w for b, w in zip(tracker.last_demand_s,
-                                          warm_seed)]
-        return tracker.last_demand_s
+    # demand until the first real measurement lands.  The window and
+    # the feed are the SHARED control-plane objects
+    # (serving/policy/seeding.py) the engine wires into its own placer.
+    warm_seed = WarmupPressureSeed(bool(sim.warmup_pressure_seed),
+                                   n_slots)
+    _pressure = PressureFeed(tracker, warm_seed)
 
     # pressure_aware / radix_affinity placement reads the live analytic
     # demand seconds — the same per-link signal the engine feeds its
@@ -551,10 +562,19 @@ def simulate(reqs: List[Request], model: ModelProfile,
             return None
         return plen, cached[1]
 
+    # the locality-bonus FORMULA is the shared policy object
+    # (serving/policy/locality.py) bound to the simulator's analytic
+    # costs — the engine binds the same class to its fabric/profile
+    _locality = LocalityBonus(
+        prefill_s=model.prefill_s,
+        write_s=lambda n: n * model.kv_bytes_per_token() / write_bw)
+    # replication trigger twin: pick + fire/hold are the shared
+    # ReplicationPolicy (serving/policy/replication.py)
+    _repl = ReplicationPolicy(
+        horizon_steps=int(sim.replicate_horizon_steps))
+
     def _bonus_s(r: Request, plen: int) -> float:
-        return (model.prefill_s(r.context_len)
-                - model.prefill_s(r.context_len - plen)
-                + plen * model.kv_bytes_per_token() / write_bw)
+        return _locality(r.context_len, plen)
 
     def _maybe_replicate(plen: int, devices: list) -> None:
         """Hot-prefix replication twin (the engine's _maybe_replicate):
@@ -563,28 +583,25 @@ def simulate(reqs: List[Request], model: ModelProfile,
         placer's view including in-flight bookings — same-wave bursts
         count before the demand feed catches up) exceeds the copy cost
         amortized over ``replicate_horizon_steps`` steps, copying to the
-        least-pressured copy-free link (never a hotter one).  Copy
-        traffic is charged unkeyed (cache-owned; no departure subtracts
-        it) on both links."""
+        least-pressured copy-free link (never a hotter one) — the
+        shared :class:`ReplicationPolicy` decides both.  Copy traffic
+        is charged unkeyed (cache-owned; no departure subtracts it) on
+        both links."""
         pressure = sched.placer.corrected_pressure()
         others = [d for d in range(backend.n_pool_devices)
                   if d not in devices]
-        if not others:
+        pick = _repl.pick(pressure, devices, others,
+                          sched.placer.bytes_used)
+        if pick is None:
             return
-        booked = sched.placer.bytes_used
-        src = min(devices, key=lambda d: pressure[d])
-        # ties (cold start: every link reads 0) break on booked bytes,
-        # then device id — a bare min() would funnel every group's
-        # first copy onto device 0
-        dst = min(others, key=lambda d: (pressure[d], booked[d], d))
+        src, dst = pick
         copy_b = plen * model.kv_bytes_per_token()
         copy_cost = copy_b / backend.fetch_bw_Bps
-        horizon = max(int(sim.replicate_horizon_steps), 1)
         # benefit proxy: the locality bonus of a full-prefix reuse
         bonus = (model.prefill_s(plen) +
                  copy_b / write_bw)
-        if (bonus < copy_cost or pressure[src] < pressure[dst]
-                or pressure[src] * horizon <= copy_cost):
+        if not _repl.should_fire(pressure[src], pressure[dst], bonus,
+                                 copy_cost):
             return
         devices.append(dst)
         acct.record_copy_bytes(copy_b)
@@ -632,22 +649,26 @@ def simulate(reqs: List[Request], model: ModelProfile,
         ``_note_radix``, so a dedup/radix hit seeds only the unmatched
         residue — the engine reads the same booked write_back traffic
         via ``TrafficStats.segment_demand_s``)."""
-        if not _seed_on[0]:
-            return
         eff = r.context_len - matched.get(r.request_id, 0)
         s = eff * model.kv_bytes_per_token() / write_bw
-        for slot in _ctl_route(r.pool_device):
-            warm_seed[slot] += s
+        warm_seed.note_admission(_ctl_route(r.pool_device), s)
 
     def _admit_hook(r: Request) -> None:
         if use_radix:
             _note_radix(r)
         _seed_pressure(r)
 
+    # the shared admission policy (serving/policy/admission.py): the
+    # SAME factory + classes the engine constructs, with the analytic
+    # prefix-cache lookup bound as the radix scorer
+    admission = make_admission(
+        sim.admission, radix_admission=bool(sim.radix_admission),
+        slo_ttft_s=float(sim.slo_ttft_s),
+        shed_queue_depth=int(sim.shed_queue_depth),
+        score_fn=_reuse_score, has_radix=use_radix)
+    sched.set_admission_policy(admission)
     if use_radix:
         sched.set_affinity_fn(_affinity)
-        if sim.radix_admission:
-            sched.set_reuse_fn(_reuse_score)
     if use_radix or sim.warmup_pressure_seed:
         sched.set_admit_fn(_admit_hook)
 
@@ -669,9 +690,25 @@ def simulate(reqs: List[Request], model: ModelProfile,
     # step's duration — the analytic twin of the engine's
     # _advance_chunk_jobs (monolithic = one whole-prompt chunk).
     pending_chunk: Dict[int, list] = {}
+    # the shared prefill schedule (serving/policy/prefill.py): round1
+    # is the disaggregated twin (separate lanes + handoff), colocated
+    # chunking reads the same chunk_take the engine's
+    # _advance_chunk_jobs uses
+    prefill_schedule = PrefillSchedule.from_knobs(
+        bool(sim.round1), int(sim.prefill_chunk_tokens),
+        int(sim.prefill_concurrency))
+    n_shed = [0]
 
     def admit_ready(now: float):
-        for r in sched.try_admit(now):
+        nonlocal n_done
+        shed0 = len(sched.shed_log)
+        admitted = sched.try_admit(now)
+        # shed requests leave the system without decoding: they count
+        # toward completion (the open-loop drain must terminate) but
+        # never toward summarize(), which only reads finished requests
+        n_shed[0] += len(sched.shed_log) - shed0
+        n_done += len(sched.shed_log) - shed0
+        for r in admitted:
             if sim.round1:
                 prefill_q.append(r)
             elif backend.prefetch:
@@ -742,11 +779,10 @@ def simulate(reqs: List[Request], model: ModelProfile,
         # completed prompts join the batch this same iteration, exactly
         # like the engine splicing at the top of step()
         if pending_chunk:
-            chunk = int(sim.prefill_chunk_tokens)
             t_chunks = 0.0
             for rid in list(pending_chunk):
                 r, left = pending_chunk[rid]
-                take = left if chunk <= 0 else min(chunk, left)
+                take = prefill_schedule.chunk_take(left)
                 t_chunks += model.prefill_s(take)
                 if take > 0:
                     wb = take * model.kv_bytes_per_token()
@@ -953,7 +989,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
             acct.charge_segment_seconds(seg_s, spec_s)
             acct.charge_seconds(t_fetch)
             acct.charge_exposed(t_exposed)
-        _seed_on[0] = False        # first decode step ends warm seeding
+        warm_seed.deactivate()     # first decode step ends warm seeding
         dt = t_comp + t_exposed
         t += dt
 
@@ -998,6 +1034,7 @@ def simulate(reqs: List[Request], model: ModelProfile,
                critical_issued_s=acct.stats.critical_issued_s,
                spec_yielded_s=acct.stats.spec_yielded_s,
                replica_redirects=float(replica_redirects[0]),
+               shed_requests=float(n_shed[0]),
                radix_hit_tokens=float(sum(matched.values())),
                replicated_bytes=replicated_b[0],
                dedup_shared_bytes=dedup_b[0],
@@ -1041,10 +1078,18 @@ def replay_engine_timeline(eng, reqs: List[Request],
     Valid for the parity regime the rolling-admission tests pin down:
     cold reads (``device_buffer == 0``), radix/prefetch/warm-up off,
     overlap off, flat star topology (timing independent of placement).
-    Returns fresh request copies carrying the replayed timestamps."""
+    Returns fresh request copies carrying the replayed timestamps.
+
+    Admission and prefill-mode dispatch consume the engine's OWN
+    shared policy objects (``eng.admission_policy``,
+    ``eng.prefill_schedule`` — serving/policy/), so engine/replay
+    parity on these decisions is object identity, not reimplementation.
+    """
     cfg = eng.cfg
     fabric = eng.sac.fabric
     entry_b = eng.sac.entry_bytes
+    policy = eng.admission_policy
+    schedule = eng.prefill_schedule
     wb_layers = max(cfg.n_attn_layers, 1)
     n_kv = max(getattr(eng.model, "n_kv", 1), 1)
     k = min(cfg.sac.topk, eng.max_ctx)
@@ -1061,6 +1106,7 @@ def replay_engine_timeline(eng, reqs: List[Request],
     # disagg mode: prefill lanes + handoff records [ready_s, request]
     lane_busy = [0.0] * eng.prefill_lanes
     handoffs: List[list] = []
+    shed: List[Request] = []
     clock = 0.0
 
     def write_s(n_tokens: int) -> float:
@@ -1072,15 +1118,20 @@ def replay_engine_timeline(eng, reqs: List[Request],
                 + write_s(r.context_len))
 
     def eligible() -> Optional[Request]:
-        for r in queue:
-            if r.arrival_s <= clock + eps:
-                return r
-        return None
+        """The next request the shared admission policy would admit
+        (None when nothing has arrived on the replay clock)."""
+        elig = policy.eligible(queue, clock)
+        if not elig:
+            return None
+        return queue[policy.select(queue, elig)]
 
     def fill() -> bool:
         nonlocal clock
         progressed = False
-        if eng.disagg_on:
+        drop = policy.shed(queue, clock)     # EDF load shedding, same
+        for i in reversed(drop):             # policy object the engine
+            shed.append(queue.pop(i))        # sheds through
+        if schedule.disagg:
             for s in range(eng.slots):           # adopt ready handoffs
                 if slots[s] is not None:
                     continue
@@ -1104,7 +1155,7 @@ def replay_engine_timeline(eng, reqs: List[Request],
                 handoffs.append([ready_s, r])
                 progressed = True
             return progressed
-        if eng.chunk_tokens > 0:
+        if schedule.chunked:
             for s in range(eng.slots):           # bind arrivals to jobs
                 if slots[s] is not None or jobs[s] is not None:
                     continue
@@ -1119,7 +1170,7 @@ def replay_engine_timeline(eng, reqs: List[Request],
                 if jobs[s] is None:
                     continue
                 r, left = jobs[s]
-                take = min(eng.chunk_tokens, left)
+                take = schedule.chunk_take(left)
                 jobs[s][1] = left - take
                 if jobs[s][1] <= 0:
                     jobs[s] = None

@@ -147,6 +147,63 @@ class TestTwinCoverage:
         }, "twin-coverage", config=cfg)
         assert "stale-allowlist" in codes(res)
 
+    # -- shared-policy consumption (PR 10) ------------------------------
+
+    POLICY = ('CONSUMED_KNOBS = ("beta_steps",)\n'
+              "class Policy:\n    pass\n")
+
+    def test_consumed_knob_needs_no_twin(self, tmp_path):
+        """A knob declared in a policy module's CONSUMED_KNOBS is exempt
+        from the same-named-SimConfig-twin rule: both layers run the
+        shared object, there is nothing to twin."""
+        res = run_one(tmp_path, {
+            "src/repro/configs/base.py": TWIN_SAC,
+            "src/repro/serving/simulator.py": TWIN_SIM_DRIFTED,
+            "src/repro/serving/policy/admission.py": self.POLICY,
+            "src/repro/launch/serve.py": TWIN_SERVE,
+        }, "twin-coverage")
+        assert res.new == []
+
+    def test_consumed_knob_still_requires_flag(self, tmp_path):
+        """Consumption exempts the twin, never the serve.py flag —
+        operators must still reach the knob."""
+        res = run_one(tmp_path, {
+            "src/repro/configs/base.py": TWIN_SAC,
+            "src/repro/serving/simulator.py": TWIN_SIM_DRIFTED,
+            "src/repro/serving/policy/admission.py": self.POLICY,
+            "src/repro/launch/serve.py":
+                'def main(ap):\n    ap.add_argument("--alpha-s")\n',
+        }, "twin-coverage")
+        assert codes(res) == ["missing-flag"]
+
+    def test_stale_policy_knob_flagged_at_declaration(self, tmp_path):
+        """A CONSUMED_KNOBS entry naming a vanished SACConfig field rots
+        exactly like a stale allowlist entry — and is anchored at the
+        policy file, where the fix belongs."""
+        res = run_one(tmp_path, {
+            "src/repro/configs/base.py": TWIN_SAC,
+            "src/repro/serving/simulator.py": TWIN_SIM_FULL,
+            "src/repro/serving/policy/admission.py":
+                'CONSUMED_KNOBS = ("gamma_frac",)\n',
+            "src/repro/launch/serve.py": TWIN_SERVE,
+        }, "twin-coverage")
+        assert "stale-policy-knob" in codes(res)
+        (f,) = [f for f in res.new if f.code == "stale-policy-knob"]
+        assert f.path == "src/repro/serving/policy/admission.py"
+
+    def test_consumed_knob_obsoletes_allowlist_entry(self, tmp_path):
+        """The declaration supersedes a twin_renames justification: keep
+        both and twin-coverage says which one to drop."""
+        cfg = SacheckConfig()
+        cfg.twin_renames = {"beta_steps": (None, "pre-PR 10 residue")}
+        res = run_one(tmp_path, {
+            "src/repro/configs/base.py": TWIN_SAC,
+            "src/repro/serving/simulator.py": TWIN_SIM_DRIFTED,
+            "src/repro/serving/policy/admission.py": self.POLICY,
+            "src/repro/launch/serve.py": TWIN_SERVE,
+        }, "twin-coverage", config=cfg)
+        assert "redundant-allowlist" in codes(res)
+
 
 # ---------------------------------------------------------------------------
 # units

@@ -20,6 +20,12 @@ class SacheckConfig:
     sim_config_path: str = "src/repro/serving/simulator.py"
     sim_config_class: str = "SimConfig"
     serve_path: str = "src/repro/launch/serve.py"
+    # shared control-plane package (PR 10): a SACConfig knob declared in
+    # a module-level CONSUMED_KNOBS tuple under this prefix is consumed
+    # through ONE shared policy object by engine, simulator, and replay
+    # alike, so twin-coverage drops the same-named-SimConfig-twin
+    # requirement for it (the serve.py flag requirement stays)
+    policy_package: str = "src/repro/serving/policy"
 
     # --- twin-coverage ----------------------------------------------------
     # SACConfig fields that are NOT serving knobs (model/kernel shape
@@ -93,20 +99,17 @@ def repo_config() -> SacheckConfig:
             None,
             "eviction headroom needs the real PoolAllocator; capacity "
             "effects deliberately stay with the engine (PR 5)"),
-        "disagg_prefill": (
-            "round1",
-            "sim grew the disaggregated round-1 prefill model first "
-            "(paper fig 9); the engine knob arrived in PR 8"),
-        "prefill_lanes": (
-            "prefill_concurrency",
-            "same meaning, sim name predates PR 8; both are the "
-            "disaggregated prefill stage's lane count"),
+        # (disagg_prefill / prefill_lanes dropped in PR 10: both are now
+        # consumed through serving/policy/prefill.py CONSUMED_KNOBS —
+        # the shared PrefillSchedule supersedes the round1/
+        # prefill_concurrency rename justifications)
     }
     cfg.flag_renames = {
         "device_buffer_size": "--device-buffer",
         "prefill_chunk_tokens": "--prefill-chunk",
         "disagg_prefill": "--disagg",
         "warmup_pressure_seed": "--warmup-pressure-seed",
+        "slo_ttft_s": "--slo-ttft",
     }
     cfg.flag_exempt = {
         "enabled": "switched via --mode sac|dense",

@@ -12,15 +12,52 @@ but must be *justified* in tools/sacheck/config.py (twin_renames /
 twin_non_serving / flag_renames / flag_exempt) — and a justification
 whose subject disappeared is itself reported (stale-allowlist), so the
 allowlist cannot rot.
+
+Shared-policy escape hatch (PR 10): a knob consumed ONLY through a
+shared control-plane object under ``SacheckConfig.policy_package``
+(declared in the policy module's module-level ``CONSUMED_KNOBS``
+tuple) needs no same-named SimConfig twin — there is nothing to twin,
+both layers literally run the same code.  The serve.py flag is still
+required (operators must reach every knob), a declared knob that names
+a vanished SACConfig field is reported (stale-policy-knob), and an
+allowlist entry for a consumed knob is reported as redundant
+(redundant-allowlist) — the declaration supersedes the justification.
 """
 from __future__ import annotations
 
 import ast
-from typing import List, Set
+from typing import Dict, List, Set, Tuple
 
 from tools.sacheck.core import (CheckContext, Finding, dataclass_fields)
 
 NAME = "twin-coverage"
+
+
+def _consumed_knobs(ctx: CheckContext,
+                    prefix: str) -> Dict[str, Tuple[str, int]]:
+    """knob -> (policy file, line) for every string in a module-level
+    ``CONSUMED_KNOBS`` tuple/list under the policy package prefix."""
+    consumed: Dict[str, Tuple[str, int]] = {}
+    if not prefix:
+        return consumed
+    for rel in sorted(ctx.files):
+        if not rel.startswith(prefix):
+            continue
+        sf = ctx.files[rel]
+        if sf.tree is None:
+            continue
+        for node in sf.tree.body:
+            if not (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "CONSUMED_KNOBS"
+                    and isinstance(node.value, (ast.Tuple, ast.List))):
+                continue
+            for elt in node.value.elts:
+                if (isinstance(elt, ast.Constant)
+                        and isinstance(elt.value, str)):
+                    consumed.setdefault(elt.value, (rel, elt.lineno))
+    return consumed
 
 
 def _serve_flags(tree: ast.Module) -> Set[str]:
@@ -65,12 +102,23 @@ def run(ctx: CheckContext) -> List[Finding]:
                            "(or was renamed away)"))
         return out
 
+    # shared-policy consumption (PR 10): knobs routed exclusively
+    # through the policy package need no same-named SimConfig twin
+    pkg = getattr(cfg, "policy_package", "")
+    consumed = _consumed_knobs(ctx, pkg + "/" if pkg else "")
+
     sac_names = {n for n, _ in sac_fields}
     for name, line in sac_fields:
         if name in cfg.twin_non_serving:
             continue
-        # --- SimConfig twin ---
-        if name in cfg.twin_renames:
+        # --- SimConfig twin (or shared-policy consumption) ---
+        if name in consumed:
+            # both layers construct the same policy object; requiring a
+            # float-parity twin here would re-create the duplication the
+            # policy package removed.  A leftover allowlist entry is
+            # reported below (redundant-allowlist).
+            pass
+        elif name in cfg.twin_renames:
             twin, why = cfg.twin_renames[name]
             if twin is not None and twin not in sim_fields:
                 out.append(ctx.finding(
@@ -82,8 +130,9 @@ def run(ctx: CheckContext) -> List[Finding]:
             out.append(ctx.finding(
                 NAME, cfg.sac_config_path, line, "missing-twin",
                 f"serving knob SACConfig.{name} has no SimConfig field "
-                f"of the same name — add the analytic twin, or justify "
-                f"the asymmetry in tools/sacheck/config.py twin_renames"))
+                f"of the same name — add the analytic twin, declare it "
+                f"in a policy module's CONSUMED_KNOBS, or justify the "
+                f"asymmetry in tools/sacheck/config.py twin_renames"))
         # --- serve.py flag ---
         if name in cfg.flag_exempt:
             continue
@@ -94,6 +143,21 @@ def run(ctx: CheckContext) -> List[Finding]:
                 f"serving knob SACConfig.{name} is not settable from "
                 f"launch/serve.py (expected {flag}) — add the flag or "
                 f"justify in flag_exempt"))
+
+    # --- policy declarations must track the config (no rot) ---
+    for name, (rel, line) in sorted(consumed.items()):
+        if name not in sac_names:
+            out.append(ctx.finding(
+                NAME, rel, line, "stale-policy-knob",
+                f"policy module declares CONSUMED_KNOBS entry {name!r} "
+                f"but SACConfig has no such field — drop the entry or "
+                f"restore the knob"))
+        if name in cfg.twin_renames or name in cfg.twin_non_serving:
+            out.append(Finding(
+                NAME, cfg.sac_config_path, 1, "redundant-allowlist",
+                f"SACConfig.{name} is consumed through the shared "
+                f"policy package ({rel}) — its twin_renames/"
+                f"twin_non_serving entry is redundant; drop it"))
 
     # --- stale allowlist entries (the allowlist must not rot) ---
     for table, code in ((cfg.twin_non_serving, "stale-allowlist"),
